@@ -1,0 +1,65 @@
+//! The paper's economic analysis end-to-end: Eq. 1 / the ten-day rule,
+//! evaluated both at the paper's anchor point (H100 + LLaMA-70B + 9100
+//! Pro) and for *this repo's* measured configs, plus the Fig-1 trend.
+//!
+//! Run: `cargo run --release --example economics`
+
+use matkv::hwsim::economics::fig1_trend;
+use matkv::hwsim::roofline::append_cost;
+use matkv::hwsim::{DeviceProfile, StorageProfile, TenDayRule};
+use matkv::util::bench::Table;
+use matkv::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    // --- paper anchor ------------------------------------------------------
+    let anchor = TenDayRule::paper_anchor();
+    println!("Ten-day rule @ paper anchor (LLaMA-70B, 1,024-token chunk):");
+    println!("  GPU recompute cost : ${:.6}/access (amortized H100 seconds)", anchor.recompute_cost_usd());
+    println!("  flash holding cost : ${:.4} ({} MB on a 9100 Pro)", anchor.storage_cost_usd(), anchor.kv_bytes >> 20);
+    println!("  break-even interval: {:.1} days  <-- the ten-day rule", anchor.break_even_days());
+    println!("  accessed hourly    : {:.0}x cheaper than recompute", anchor.cost_ratio_at_interval(3600.0));
+
+    // --- our configs, simulated prefill times ------------------------------
+    let m = Manifest::load(matkv::artifacts_dir())?;
+    let h100 = DeviceProfile::h100();
+    let mut table = Table::new(
+        "break-even per model config (1,024-token chunk, H100 + 9100 Pro)",
+        &["config", "prefill(sim)", "KV MB", "break-even days"],
+    );
+    for (name, cfg) in &m.configs {
+        let prefill = append_cost(cfg, 1, 1024, 1024).secs_on(&h100);
+        let rule = TenDayRule::for_config(
+            cfg,
+            1024,
+            prefill,
+            h100.clone(),
+            StorageProfile::ssd_9100pro(),
+        );
+        table.row(&[
+            name.clone(),
+            format!("{:.2} ms", prefill * 1e3),
+            format!("{:.1}", rule.kv_bytes as f64 / 1e6),
+            format!("{:.1}", rule.break_even_days()),
+        ]);
+    }
+    table.print();
+
+    // --- Fig 1 trend --------------------------------------------------------
+    let mut trend = Table::new(
+        "Fig 1 — GPU vs SSD cost/performance trend",
+        &["year", "gpu", "TFLOPs/k$", "ssd", "GB/s / ($/GB)", "GB/$"],
+    );
+    for r in fig1_trend() {
+        trend.row(&[
+            r.year.to_string(),
+            r.gpu.to_string(),
+            format!("{:.1}", r.gpu_tflops_per_kusd),
+            r.ssd.to_string(),
+            format!("{:.0}", r.ssd_gbps_per_kusd_tb),
+            format!("{:.1}", r.ssd_gb_per_usd),
+        ]);
+    }
+    trend.print();
+    println!("\npaper claim preserved: SSD value (GB/$) improves faster than GPU value (TFLOPs/$).");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+"""Model configurations and shape buckets shared by L1/L2/aot and (via
+manifest.json) the rust coordinator.
+
+Three LLaMA-architecture configs stand in for the paper's LLaMA 3.2 3B /
+3.1 8B / 3.1 70B (see DESIGN.md "Substitutions"): every systems quantity
+the paper measures (prefill FLOPs vs KV-cache bytes, load-vs-compute
+crossover) is architecture-intrinsic, so scaled-down configs with seeded
+weights preserve the shapes of all figures.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    max_ctx: int  # C: padded KV-cache length (static for HLO)
+    rope_theta: float = 10000.0
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 KV-cache bytes contributed by one token (all layers)."""
+        return self.n_layers * 2 * self.n_kv_heads * self.head_dim * 4
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        qkvo = d * self.n_heads * self.head_dim * 2 + d * self.n_kv_heads * self.head_dim * 2
+        mlp = 3 * d * f
+        per_layer = qkvo + mlp + 2 * d
+        return v * d + self.n_layers * per_layer + d + d * v
+
+
+# Paper-role mapping: tiny ~ "3B-class", small ~ "8B-class", base ~ "70B-class".
+# max_ctx = 2304 covers 2x1024-token chunks + 32-token query bucket + 100
+# decode tokens + headroom, and is a multiple of the 256-token chunk bucket.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                        head_dim=32, d_ff=352, vocab=512, max_ctx=2304),
+    "small": ModelConfig("small", n_layers=6, d_model=256, n_heads=8, n_kv_heads=2,
+                         head_dim=32, d_ff=704, vocab=1024, max_ctx=2304),
+    "base": ModelConfig("base", n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+                        head_dim=64, d_ff=1408, vocab=2048, max_ctx=2304),
+}
+
+# Static shape buckets lowered to HLO: S = tokens appended per call
+# (1 = decode step, 32 = query sub-prefill, 256 = chunked document prefill),
+# B = batch-size buckets used by the dynamic batcher.
+S_BUCKETS = (1, 32, 256)
+B_BUCKETS = (1, 2, 4, 8)
+CHUNK_TOKENS = 256          # materialization granularity (doc = N chunks)
+QUERY_BUCKET = 32
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["kv_bytes_per_token"] = cfg.kv_bytes_per_token
+    d["param_count"] = cfg.param_count()
+    return d

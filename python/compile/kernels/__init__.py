@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .attention import flash_attention, vmem_footprint  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

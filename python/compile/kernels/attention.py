@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: fused flash attention over a padded KV cache.
+
+This is the paper's compute hot-spot (the prefill / sub-prefill / decode
+attention) restated for the TPU memory hierarchy (DESIGN.md
+"Hardware-Adaptation"):
+
+- grid = (B, H, nQ, nK); the K dimension iterates minor-most so the online
+  softmax state (acc, m, l) carries across K blocks in VMEM scratch —
+  the HBM<->VMEM analogue of FlashAttention's SRAM loop.  The full
+  [S, C] score matrix never materializes.
+- QK^T and PV contractions run through ``dot_general`` with
+  ``preferred_element_type=f32`` (MXU systolic array on real TPU).
+- GQA is expressed in the K/V BlockSpec index map (``h // group``), so
+  grouped KV heads are *never* expanded in memory.
+- One mask rule serves all three entry points (chunked prefill, query
+  sub-prefill over loaded MatKV caches, single-token decode): query row
+  ``i`` written at cache slot ``off[b] + i`` may attend cache slot ``j``
+  iff ``j <= off[b] + i``.  Cache slots beyond the current length hold
+  garbage from bucket padding and are excluded by the same rule.
+
+Executed with ``interpret=True`` everywhere in this repo: the CPU PJRT
+plugin cannot run Mosaic custom-calls.  Real-TPU perf is estimated from
+the VMEM footprint / MXU utilization of the block shapes (EXPERIMENTS.md
+section "Perf").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# Default block shapes: 128 rows keeps the QK^T tile MXU-shaped on the
+# sublane axis; 256 K columns amortizes softmax state updates while the
+# K/V tiles (256 x head_dim) stay well under VMEM (see vmem_footprint).
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 256
+
+
+def _attn_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                 *, block_q, block_k, n_k, scale):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # [BQ, D]
+    k = k_ref[0, 0]  # [BK, D]
+    v = v_ref[0, 0]  # [BK, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    valid = cols <= off_ref[0] + rows
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    # Explicitly re-mask p: for rows whose every column in this K block is
+    # invalid, exp(NEG_INF - NEG_INF) would otherwise contribute 1.
+    p = jnp.where(valid, jnp.exp(s - m_cur[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, off, *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K):
+    """Masked flash attention against a padded KV cache.
+
+    Args:
+      q:   [B, H, S, D]  query heads (RoPE already applied).
+      k:   [B, Hkv, C, D] padded key cache (slots >= length are garbage).
+      v:   [B, Hkv, C, D] padded value cache.
+      off: [B] int32 — per-element cache length *before* this call's tokens
+           were written; row i attends slots j <= off[b] + i.
+
+    Returns: [B, H, S, D] attention output, f32.
+    """
+    b, h, s_len, d = q.shape
+    _, h_kv, c_len, _ = k.shape
+    assert h % h_kv == 0, (h, h_kv)
+    group = h // h_kv
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, c_len)
+    assert s_len % block_q == 0 and c_len % block_k == 0, (s_len, c_len, block_q, block_k)
+    n_q, n_k = s_len // block_q, c_len // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, h, n_q, n_k)
+    kernel = functools.partial(_attn_kernel, block_q=block_q, block_k=block_k,
+                               n_k=n_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, iq, ik: (b_,)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_len, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+            pltpu.VMEM((block_q,), jnp.float32),    # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),    # l (running denom)
+        ],
+        interpret=True,
+    )(off.astype(jnp.int32), q, k, v)
+
+
+def vmem_footprint(block_q: int, block_k: int, d: int) -> int:
+    """Bytes of VMEM resident per grid step (perf-model input, not runtime)."""
+    f32 = 4
+    tiles = (block_q * d      # q
+             + 2 * block_k * d  # k, v
+             + block_q * d      # o / acc
+             + 2 * block_q      # m, l
+             + block_q * block_k)  # scores
+    return tiles * f32

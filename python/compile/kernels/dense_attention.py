@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: batch-grid masked attention over the padded cache.
+
+A second attention kernel with the *opposite* blocking strategy from
+`attention.flash_attention`:
+
+* `flash_attention` — canonical TPU flash attention: grid
+  (B, H, nQ, nK), K streamed through VMEM in blocks, online softmax in
+  scratch. Best VMEM locality, but interpret mode (the only way to run
+  Pallas on the CPU PJRT plugin) pays ~2 ms of interpreter overhead per
+  grid step — 576 steps/layer at serve shapes.
+
+* `dense_attention` (this kernel) — grid (B,): one grid step per batch
+  element, all heads and the whole padded cache resident as the block,
+  plain masked softmax in the body. For decode/sub-prefill shapes the
+  per-element KV block is Hkv*C*D*4 ≈ 1.2 MB — comfortably VMEM-resident
+  on a real TPU too, making this a legitimate decode-attention design
+  (batch-parallel, cache-in-VMEM), not just an interpreter workaround.
+
+Both kernels are verified against the same oracle (`ref.py`); aot.py
+selects per entry point (dense by default — see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dense_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, *, group):
+    q = q_ref[0]  # [H, S, D]
+    k = k_ref[0]  # [Hkv, C, D]
+    v = v_ref[0]  # [Hkv, C, D]
+    h, s_len, d = q.shape
+    h_kv, c_len, _ = k.shape
+    scale = 1.0 / (d ** 0.5)
+
+    # GQA without materializing repeated KV: fold groups into the head dim
+    # of a 3D dot_general batched over kv heads.
+    qg = q.reshape(h_kv, group * s_len, d)
+    scores = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # [Hkv, group*S, C]
+    scores = scores.reshape(h, s_len, c_len) * scale
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s_len, c_len), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s_len, c_len), 1)
+    valid = cols <= off_ref[0] + rows
+    scores = jnp.where(valid[None], scores, NEG_INF)
+
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+
+    pg = p.reshape(h_kv, group * s_len, c_len)
+    out = jax.lax.dot_general(
+        pg, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # [Hkv, group*S, D]
+    o_ref[0] = out.reshape(h, s_len, d)
+
+
+@jax.jit
+def dense_attention(q, k, v, off):
+    """Same contract as `flash_attention`: q [B,H,S,D], k/v [B,Hkv,C,D],
+    off [B]; row i attends cache slot j iff j <= off[b] + i."""
+    b, h, s_len, d = q.shape
+    _, h_kv, c_len, _ = k.shape
+    assert h % h_kv == 0
+    group = h // h_kv
+    kernel = functools.partial(_dense_kernel, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, h, s_len, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h_kv, c_len, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h_kv, c_len, d), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, s_len, d), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_len, d), jnp.float32),
+        interpret=True,
+    )(off.astype(jnp.int32), q, k, v)
+
+
+def vmem_footprint(h: int, h_kv: int, s_len: int, c_len: int, d: int) -> int:
+    """VMEM bytes per grid step on a real TPU (perf-model input)."""
+    f32 = 4
+    return f32 * (h * s_len * d * 2 + 2 * h_kv * c_len * d + h * s_len * c_len)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernel.py`
+sweeps shapes with hypothesis and asserts the Pallas kernels match these
+references via `assert_allclose`.
+"""
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, off):
+    """Reference masked attention over a padded KV cache.
+
+    Same contract as kernels.attention.flash_attention:
+      q [B,H,S,D], k/v [B,Hkv,C,D], off [B] — row i sees slot j iff
+      j <= off[b] + i.
+    """
+    _, h, s_len, d = q.shape
+    _, h_kv, c_len, _ = k.shape
+    group = h // h_kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhsd,bhcd->bhsc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rows = jnp.arange(s_len)[:, None]
+    cols = jnp.arange(c_len)[None, :]
+    valid = cols[None, None] <= off.astype(jnp.int32)[:, None, None, None] + rows[None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhsc,bhcd->bhsd", p, v.astype(jnp.float32))
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """Reference RMSNorm over the last axis: x * rsqrt(mean(x^2)+eps) * w."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return x32 * (1.0 / jnp.sqrt(ms + eps)) * w.astype(jnp.float32)

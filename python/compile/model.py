@@ -1,0 +1,264 @@
+"""L2: LLaMA-architecture decoder (RMSNorm / RoPE / GQA / SwiGLU) in JAX.
+
+One parametric entry point — ``append_step`` — serves every phase of the
+MatKV serving stack (DESIGN.md "Model configs"):
+
+  * S=256, empty cache      → chunked document prefill (ingest/materialize,
+                              and the Vanilla full-recompute baseline);
+  * S=32, preloaded cache   → query sub-prefill over KV caches loaded from
+                              flash (the MatKV serve path);
+  * S=1                     → one autoregressive decode step.
+
+The KV cache is a padded [L, B, Hkv, C, D] pair of arrays threaded
+functionally through the call; new tokens are written at per-batch-element
+offsets ``cache_len[b]`` with dynamic_update_slice, and the L1 Pallas
+attention kernel masks slots ``j > cache_len[b] + i``.  Static shapes
+(S/B/C buckets) keep the lowered HLO fully AOT-compilable; the rust
+coordinator picks the bucket per batch.
+
+Build-time only: this module is lowered once by aot.py and never imported
+at serving time.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import flash_attention
+from .kernels.dense_attention import dense_attention
+from .kernels.rmsnorm import rmsnorm
+
+# Attention kernel used by append_step. Both are Pallas kernels verified
+# against kernels/ref.py; `dense` (grid over batch, cache-in-VMEM) is the
+# serving default — under interpret=True it costs one interpreter step per
+# batch element instead of one per (b, h, q-block, k-block), a ~30x
+# wall-clock difference on the CPU PJRT backend. `flash` is the
+# canonically-blocked TPU variant kept for compile-only targets and
+# ablation (aot.py --kernel flash). See DESIGN.md "Perf".
+ATTENTION_KERNELS = {"dense": dense_attention, "flash": flash_attention}
+_attn_impl = dense_attention
+
+
+def set_attention_kernel(name: str) -> None:
+    """Select the attention kernel lowered into subsequent tracings."""
+    global _attn_impl
+    _attn_impl = ATTENTION_KERNELS[name]
+
+# Flat parameter order — the ABI between aot.py-exported weight blobs and
+# the rust runtime (runtime/weights.rs). Do not reorder.
+PARAM_ORDER = (
+    "tok_emb",   # [V, d]
+    "wq",        # [L, d, H*D]
+    "wk",        # [L, d, Hkv*D]
+    "wv",        # [L, d, Hkv*D]
+    "wo",        # [L, H*D, d]
+    "w_gate",    # [L, d, f]
+    "w_up",      # [L, d, f]
+    "w_down",    # [L, f, d]
+    "ln_attn",   # [L, d]
+    "ln_mlp",    # [L, d]
+    "ln_final",  # [d]
+    "lm_head",   # [d, V]
+)
+
+
+class Params(NamedTuple):
+    tok_emb: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+    ln_attn: jax.Array
+    ln_mlp: jax.Array
+    ln_final: jax.Array
+    lm_head: jax.Array
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    L, d, f, v = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "tok_emb": (v, d),
+        "wq": (L, d, hq * hd),
+        "wk": (L, d, hkv * hd),
+        "wv": (L, d, hkv * hd),
+        "wo": (L, hq * hd, d),
+        "w_gate": (L, d, f),
+        "w_up": (L, d, f),
+        "w_down": (L, f, d),
+        "ln_attn": (L, d),
+        "ln_mlp": (L, d),
+        "ln_final": (d,),
+        "lm_head": (d, v),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Deterministic seeded init (stands in for pretrained weights; see
+    DESIGN.md Substitutions — all measured quantities are weight-agnostic)."""
+    shapes = param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(PARAM_ORDER))
+    out = {}
+    resid_scale = 1.0 / (2.0 * cfg.n_layers) ** 0.5
+    for k, name in zip(keys, PARAM_ORDER):
+        shape = shapes[name]
+        if name.startswith("ln"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        else:
+            w = jax.random.normal(k, shape, jnp.float32) * 0.02
+            if name in ("wo", "w_down"):
+                w = w * resid_scale
+            out[name] = w
+    return Params(**out)
+
+
+def _rope(x, pos, theta: float):
+    """Rotate-half RoPE. x [B,Hx,S,D], pos [B,S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    ang = pos.astype(jnp.float32)[:, None, :, None] * freq  # [B,1,S,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _write_cache(cache_l, new, cache_len):
+    """Per-batch-element dynamic_update_slice.
+
+    cache_l [B,Hkv,C,D], new [B,Hkv,S,D], cache_len [B] → updated cache.
+    Pad rows (i >= qlen) write garbage past the live region; the attention
+    mask guarantees those slots are never read before being overwritten.
+    """
+    def upd(c, n, start):
+        return jax.lax.dynamic_update_slice(c, n, (0, start, 0))
+    return jax.vmap(upd)(cache_l, new, cache_len)
+
+
+def append_step(cfg: ModelConfig, params: Params, tokens, qlen,
+                kcache, vcache, cache_len):
+    """Append S tokens to the cache and return last-live-token logits.
+
+    Args:
+      tokens:    [B, S] int32 (padded with arbitrary ids beyond qlen).
+      qlen:      [B] int32 — live tokens per element, 1 <= qlen <= S.
+      kcache:    [L, B, Hkv, C, D] f32 padded key cache.
+      vcache:    [L, B, Hkv, C, D] f32 padded value cache.
+      cache_len: [B] int32 — live cache length before this call.
+
+    Returns: (logits [B, V] f32 of token qlen-1, new_kcache, new_vcache,
+              new_len [B]).
+    """
+    b, s = tokens.shape
+    x = params.tok_emb[tokens]  # [B,S,d]
+    pos = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B,S]
+
+    layer_params = (params.wq, params.wk, params.wv, params.wo,
+                    params.w_gate, params.w_up, params.w_down,
+                    params.ln_attn, params.ln_mlp)
+
+    def layer(x, scanned):
+        (wq, wk, wv, wo, w_gate, w_up, w_down, ln_attn, ln_mlp,
+         kc_l, vc_l) = scanned
+        h = rmsnorm(x, ln_attn)
+        q = (h @ wq).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = (h @ wk).reshape(b, s, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = (h @ wv).reshape(b, s, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        kc_l = _write_cache(kc_l, k, cache_len)
+        vc_l = _write_cache(vc_l, v, cache_len)
+        attn = _attn_impl(q, kc_l, vc_l, cache_len)  # [B,H,S,D] f32
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ wo
+        h2 = rmsnorm(x, ln_mlp)
+        x = x + (jax.nn.silu(h2 @ w_gate) * (h2 @ w_up)) @ w_down
+        return x, (kc_l, vc_l)
+
+    x, (new_k, new_v) = jax.lax.scan(layer, x, layer_params + (kcache, vcache))
+    xf = rmsnorm(x, params.ln_final)
+    idx = (qlen - 1).astype(jnp.int32)[:, None, None]
+    last = jnp.take_along_axis(xf, idx, axis=1)[:, 0]  # [B,d]
+    logits = last @ params.lm_head
+    return logits, new_k, new_v, cache_len + qlen
+
+
+def state_layout(cfg: ModelConfig, batch: int, max_ctx: int):
+    """Packed-state layout: [logits (B*V) ; kcache ; vcache], flat f32.
+
+    PJRT (via the xla crate) returns multi-output computations as a single
+    *tuple* device buffer with no tuple-element extraction API, which would
+    force a full host round-trip of the KV cache on every decode step.
+    Packing (logits, kcache, vcache) into ONE flat f32 array instead makes
+    the output a plain array buffer that rust feeds straight back into the
+    next execute_b call — the decode loop stays device-resident and only
+    the logits prefix (B*V f32, at offset 0 by construction) is copied to
+    host each step for sampling.
+    """
+    logits_n = batch * cfg.vocab
+    cache_n = cfg.n_layers * batch * cfg.n_kv_heads * max_ctx * cfg.head_dim
+    return logits_n, cache_n, logits_n + 2 * cache_n
+
+
+def make_packed_step(cfg: ModelConfig, batch: int, s_bucket: int, max_ctx: int):
+    """Flat-argument packed-state entry point for AOT lowering.
+
+    Signature: fn(*weights_in_PARAM_ORDER, tokens [B,S] i32, qlen [B] i32,
+    cache_len [B] i32, state f32[N]) -> state' f32[N]; all shapes static per
+    (batch, s_bucket, max_ctx). The logits region of the *input* state is
+    ignored; cache_len is tracked host-side.
+    """
+    logits_n, cache_n, total = state_layout(cfg, batch, max_ctx)
+    cache_shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_ctx, cfg.head_dim)
+
+    def fn(*args):
+        params = Params(*args[:len(PARAM_ORDER)])
+        tokens, qlen, cache_len, state = args[len(PARAM_ORDER):]
+        kcache = jax.lax.dynamic_slice_in_dim(state, logits_n, cache_n).reshape(cache_shape)
+        vcache = jax.lax.dynamic_slice_in_dim(state, logits_n + cache_n, cache_n).reshape(cache_shape)
+        logits, new_k, new_v, _ = append_step(cfg, params, tokens, qlen,
+                                              kcache, vcache, cache_len)
+        return jnp.concatenate([logits.reshape(-1), new_k.reshape(-1),
+                                new_v.reshape(-1)])
+
+    shapes = param_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in PARAM_ORDER]
+    specs += [
+        jax.ShapeDtypeStruct((batch, s_bucket), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((batch,), jnp.int32),           # qlen
+        jax.ShapeDtypeStruct((batch,), jnp.int32),           # cache_len
+        jax.ShapeDtypeStruct((total,), jnp.float32),         # packed state
+    ]
+    return fn, specs
+
+
+# ---------------------------------------------------------------------------
+# Pure-python reference driver (used by python/tests to validate the
+# serving recipes end-to-end before they are re-implemented in rust).
+# ---------------------------------------------------------------------------
+
+def empty_cache(cfg: ModelConfig, batch: int, max_ctx=None):
+    c = max_ctx or cfg.max_ctx
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, c, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def greedy_decode(cfg, params, kcache, vcache, cache_len, first_token, n_steps):
+    """Teacher-free greedy decode loop (reference for the rust loop)."""
+    b = first_token.shape[0]
+    tok = first_token.reshape(b, 1).astype(jnp.int32)
+    out = [tok[:, 0]]
+    qlen = jnp.ones((b,), jnp.int32)
+    for _ in range(n_steps - 1):
+        logits, kcache, vcache, cache_len = append_step(
+            cfg, params, tok, qlen, kcache, vcache, cache_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32).reshape(b, 1)
+        out.append(tok[:, 0])
+    return jnp.stack(out, axis=1), kcache, vcache, cache_len

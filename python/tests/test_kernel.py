@@ -1,0 +1,214 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (batch, heads, GQA group, S/C lengths, head_dim,
+block shapes, cache offsets); assert_allclose against the reference is the
+core correctness signal for everything the rust runtime later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, vmem_footprint
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.ref import flash_attention_ref, rmsnorm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def assert_attn_matches(b, h, h_kv, s, c, d, off, block_q, block_k):
+    q = rand(0, (b, h, s, d))
+    k = rand(1, (b, h_kv, c, d))
+    v = rand(2, (b, h_kv, c, d))
+    off = jnp.asarray(off, jnp.int32)
+    out = flash_attention(q, k, v, off, block_q=block_q, block_k=block_k)
+    ref = flash_attention_ref(q, k, v, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+class TestFlashAttentionBasic:
+    def test_decode_shape(self):
+        # S=1 decode step over a big cache
+        assert_attn_matches(2, 4, 2, 1, 256, 32, [100, 255], 1, 64)
+
+    def test_prefill_from_empty(self):
+        assert_attn_matches(1, 4, 2, 64, 64, 32, [0], 32, 32)
+
+    def test_append_mid_cache(self):
+        assert_attn_matches(2, 8, 2, 32, 512, 64, [64, 300], 32, 128)
+
+    def test_mqa_group_one(self):
+        # h == h_kv: plain MHA path through the same index map
+        assert_attn_matches(1, 4, 4, 16, 128, 16, [50], 16, 32)
+
+    def test_extreme_gqa(self):
+        # 8 query heads sharing 1 kv head
+        assert_attn_matches(1, 8, 1, 16, 128, 32, [10], 16, 64)
+
+    def test_per_batch_offsets_differ(self):
+        assert_attn_matches(4, 4, 2, 8, 256, 32, [0, 1, 128, 248], 8, 64)
+
+    def test_single_block(self):
+        # whole problem in one grid step (no online-softmax carry)
+        assert_attn_matches(1, 2, 2, 16, 16, 8, [0], 16, 16)
+
+    def test_block_q_larger_than_needed_rows(self):
+        # garbage rows (i >= live) still produce finite output
+        q = rand(0, (1, 2, 8, 16))
+        k = rand(1, (1, 2, 64, 16))
+        v = rand(2, (1, 2, 64, 16))
+        out = flash_attention(q, k, v, jnp.array([5], jnp.int32), block_q=8, block_k=32)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_values_deterministic(self):
+        a = flash_attention(rand(0, (1, 2, 8, 16)), rand(1, (1, 2, 32, 16)),
+                            rand(2, (1, 2, 32, 16)), jnp.array([4], jnp.int32),
+                            block_q=8, block_k=16)
+        b = flash_attention(rand(0, (1, 2, 8, 16)), rand(1, (1, 2, 32, 16)),
+                            rand(2, (1, 2, 32, 16)), jnp.array([4], jnp.int32),
+                            block_q=8, block_k=16)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mask_excludes_future(self):
+        # Perturbing cache slots beyond off+S must not change the output.
+        q = rand(0, (1, 2, 4, 16))
+        k = rand(1, (1, 2, 64, 16))
+        v = rand(2, (1, 2, 64, 16))
+        off = jnp.array([8], jnp.int32)
+        base = flash_attention(q, k, v, off, block_q=4, block_k=16)
+        k2 = k.at[:, :, 20:].set(1e6)
+        v2 = v.at[:, :, 20:].set(-1e6)
+        pert = flash_attention(q, k2, v2, off, block_q=4, block_k=16)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(pert), rtol=1e-6)
+
+    def test_softmax_rows_sum_to_one_property(self):
+        # With v = ones, output must be exactly ones (softmax normalizes).
+        q = rand(0, (2, 4, 8, 32))
+        k = rand(1, (2, 2, 128, 32))
+        v = jnp.ones((2, 2, 128, 32), jnp.float32)
+        out = flash_attention(q, k, v, jnp.array([3, 60], jnp.int32),
+                              block_q=8, block_k=32)
+        np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h_kv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    s_pow=st.integers(0, 5),
+    c_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32, 64]),
+    off_seed=st.integers(0, 10_000),
+)
+def test_flash_attention_hypothesis(b, h_kv, group, s_pow, c_blocks, d, off_seed):
+    s = 2 ** s_pow
+    block_k = 32
+    c = max(c_blocks * block_k, s)
+    rng = np.random.RandomState(off_seed)
+    off = rng.randint(0, c - s + 1, size=b)
+    assert_attn_matches(b, h_kv * group, h_kv, s, c, d, off.tolist(),
+                        min(s, 16), block_k)
+
+
+class TestRmsNorm:
+    def test_matches_ref_2d(self):
+        x = rand(0, (37, 64))
+        w = rand(1, (64,))
+        np.testing.assert_allclose(np.asarray(rmsnorm(x, w)),
+                                   np.asarray(rmsnorm_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_ref_3d(self):
+        x = rand(0, (3, 17, 32))
+        w = rand(1, (32,))
+        np.testing.assert_allclose(np.asarray(rmsnorm(x, w)),
+                                   np.asarray(rmsnorm_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_scale_invariance_property(self):
+        # rmsnorm(a*x) == rmsnorm(x) for a > 0 (up to eps)
+        x = rand(0, (8, 128)) * 10
+        w = jnp.ones((128,))
+        a = rmsnorm(x, w)
+        b = rmsnorm(x * 7.5, w)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 300), d=st.sampled_from([16, 32, 64, 128]),
+           seed=st.integers(0, 100))
+    def test_hypothesis_rows(self, n, d, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+        w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+        np.testing.assert_allclose(np.asarray(rmsnorm(x, w)),
+                                   np.asarray(rmsnorm_ref(x, w)),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_vmem_footprint_within_budget():
+    # Default block shapes must fit comfortably in a 16 MiB TPU VMEM.
+    assert vmem_footprint(128, 256, 64) < 2 * 1024 * 1024
+
+
+class TestDenseAttention:
+    """The batch-grid serving kernel must agree with the same oracle."""
+
+    def test_matches_ref_basic(self):
+        from compile.kernels.dense_attention import dense_attention
+        q = rand(0, (2, 4, 8, 32))
+        k = rand(1, (2, 2, 128, 32))
+        v = rand(2, (2, 2, 128, 32))
+        off = jnp.array([0, 100], jnp.int32)
+        np.testing.assert_allclose(np.asarray(dense_attention(q, k, v, off)),
+                                   np.asarray(flash_attention_ref(q, k, v, off)),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_matches_flash_kernel(self):
+        # the two Pallas kernels must agree with each other, not only ref
+        from compile.kernels.dense_attention import dense_attention
+        q = rand(3, (1, 8, 16, 64))
+        k = rand(4, (1, 2, 256, 64))
+        v = rand(5, (1, 2, 256, 64))
+        off = jnp.array([100], jnp.int32)
+        a = dense_attention(q, k, v, off)
+        b = flash_attention(q, k, v, off, block_q=16, block_k=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+    def test_decode_shape(self):
+        from compile.kernels.dense_attention import dense_attention
+        q = rand(0, (4, 4, 1, 32))
+        k = rand(1, (4, 2, 512, 32))
+        v = rand(2, (4, 2, 512, 32))
+        off = jnp.array([0, 1, 300, 511], jnp.int32)
+        np.testing.assert_allclose(np.asarray(dense_attention(q, k, v, off)),
+                                   np.asarray(flash_attention_ref(q, k, v, off)),
+                                   rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h_kv=st.sampled_from([1, 2]),
+        group=st.sampled_from([1, 2, 4]),
+        s_pow=st.integers(0, 4),
+        c_blocks=st.integers(1, 4),
+        d=st.sampled_from([8, 16, 32]),
+        off_seed=st.integers(0, 10_000),
+    )
+    def test_hypothesis(self, b, h_kv, group, s_pow, c_blocks, d, off_seed):
+        from compile.kernels.dense_attention import dense_attention
+        s = 2 ** s_pow
+        c = max(c_blocks * 32, s)
+        rng = np.random.RandomState(off_seed)
+        off = jnp.asarray(rng.randint(0, c - s + 1, size=b), jnp.int32)
+        q = rand(0, (b, h_kv * group, s, d))
+        k = rand(1, (b, h_kv, c, d))
+        v = rand(2, (b, h_kv, c, d))
+        np.testing.assert_allclose(np.asarray(dense_attention(q, k, v, off)),
+                                   np.asarray(flash_attention_ref(q, k, v, off)),
+                                   rtol=3e-5, atol=3e-5)

@@ -1,0 +1,54 @@
+//! Fig 6 — batched inference, Vanilla vs MatKV, batch sizes 1..8
+//! (paper: 1..10 over 200 requests on LLaMA-70B; our AOT buckets are
+//! {1,2,4,8}). Shape to reproduce: prefill scales ~linearly with batch
+//! while decode grows sublinearly, so past batch ~8 prefill dominates
+//! and MatKV's advantage widens toward ~2x.
+
+use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
+use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile};
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.usize("requests", 16);
+    let config = args.str("config", "base");
+
+    let sc = Scenario::build(ScenarioSpec {
+        config: config.clone(),
+        storage: StorageProfile::raid0_4x9100(),
+        n_docs: 12,
+        doc_tokens: 1024,
+        seed: 6,
+    })?;
+    let reqs = sc.requests(n, 2, 20);
+    let h100 = DeviceProfile::h100();
+    let ssd = StorageProfile::raid0_4x9100();
+    let arch = ArchSpec::standin_for(&config);
+
+    let mut table = Table::new(
+        &format!("Fig 6 — batch scaling, {n} requests (2x1024 in, 20 out), simulated H100 seconds"),
+        &["batch", "V prefill", "V decode", "V total", "M load", "M prefill", "M decode", "M total", "speedup"],
+    );
+
+    for batch in [1usize, 2, 4, 8] {
+        let (_, v) = sc.engine.serve_all(&reqs, batch, ServeMode::Vanilla)?;
+        let (_, m) = sc.engine.serve_all(&reqs, batch, ServeMode::MatKv)?;
+        let v_total = v.total_secs_on(&arch, &h100, &ssd);
+        let m_total = m.total_secs_on(&arch, &h100, &ssd);
+        table.row(&[
+            batch.to_string(),
+            format!("{:.3}", v.prefill_secs_on(&arch, &h100)),
+            format!("{:.3}", v.decode_secs_on(&arch, &h100)),
+            format!("{:.3}", v_total),
+            format!("{:.3}", m.load_secs_on(&arch, &ssd) + m.upload_secs_on(&arch, &h100)),
+            format!("{:.3}", m.prefill_secs_on(&arch, &h100)),
+            format!("{:.3}", m.decode_secs_on(&arch, &h100)),
+            format!("{:.3}", m_total),
+            format!("{:.2}x", v_total / m_total),
+        ]);
+    }
+    table.print();
+    println!("\npaper shape: speedup grows with batch size toward ~2x as prefill dominates.");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Fig 9 — effect of model size: per-object prefill compute vs KV size
+//! across the three configs (paper: LLaMA 3B/8B/70B), at 1,024 and 2,048
+//! input tokens. Shape to reproduce: prefill compute grows faster with
+//! model size than KV bytes do, so MatKV's benefit (prefill time /
+//! load time) widens with model scale, at both input lengths.
+
+use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
+use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile};
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.usize("requests", 6);
+    let h100 = DeviceProfile::h100();
+    let ssd = StorageProfile::raid0_4x9100();
+
+    for (label, top_k) in [("1,024 input tokens (Fig 9a)", 1usize), ("2,048 input tokens (Fig 9b)", 2)] {
+        let mut table = Table::new(
+            &format!("Fig 9 — model-size sweep, {label}"),
+            &["config", "role", "prefill/obj (sim ms)", "KV MB/obj", "load/obj (ms)", "benefit"],
+        );
+        for (name, role) in [("tiny", "3B-class"), ("small", "8B-class"), ("base", "70B-class")] {
+            let sc = Scenario::build(ScenarioSpec {
+                config: name.into(),
+                storage: ssd.clone(),
+                n_docs: 8,
+                doc_tokens: 1024,
+                seed: 14,
+            })?;
+            let reqs = sc.requests(n, top_k, 4);
+            let arch = ArchSpec::standin_for(name);
+            let (_, v) = sc.engine.serve_all(&reqs, 1, ServeMode::Vanilla)?;
+            let (_, m) = sc.engine.serve_all(&reqs, 1, ServeMode::MatKv)?;
+            let objs = (n * top_k) as f64;
+            let prefill_ms = v.prefill_secs_on(&arch, &h100) / objs * 1e3;
+            let kv_mb = arch.kv_bytes(1024) / 1e6;
+            let load_ms =
+                (m.load_secs_on(&arch, &ssd) + m.upload_secs_on(&arch, &h100)) / objs * 1e3;
+            table.row(&[
+                format!("{name} ({})", arch.name),
+                role.to_string(),
+                format!("{prefill_ms:.3}"),
+                format!("{kv_mb:.1}"),
+                format!("{load_ms:.3}"),
+                format!("{:.1}x", prefill_ms / load_ms),
+            ]);
+        }
+        table.print();
+    }
+    println!("\npaper shape: compute/obj (blue) grows faster than KV size (green) with model scale,");
+    println!("so the MatKV benefit (red) widens; consistent across input lengths.");
+    Ok(())
+}

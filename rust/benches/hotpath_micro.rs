@@ -1,0 +1,80 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf profiling input):
+//! KV load+decode, state splice, state upload, one decode step, logits
+//! read, vector search. Warmup + repeated timed iterations via
+//! util::bench (criterion is unavailable offline).
+
+use matkv::hwsim::StorageProfile;
+use matkv::kvstore::{KvChunk, KvStore};
+use matkv::runtime::{HostState, ModelSession};
+use matkv::util::bench::measure;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::vectordb::{FlatIndex, HashEmbedder, VectorIndex};
+use matkv::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let iters = args.usize("iters", 20);
+    let m = Manifest::load(matkv::artifacts_dir())?;
+    let cfg = m.config("small")?.clone();
+
+    println!("=== hotpath micro-benchmarks (config=small, iters={iters}) ===");
+
+    // --- kvstore: load a 1024-token chunk (throttle disabled: pure code path)
+    let dir = TempDir::new("matkv-micro")?;
+    let mut store = KvStore::open(dir.path(), StorageProfile::dram())?;
+    store.disable_throttle();
+    let plane = cfg.n_layers * cfg.n_kv_heads * 1024 * cfg.head_dim;
+    let chunk = KvChunk {
+        config_id: 1,
+        n_layers: cfg.n_layers as u32,
+        n_kv_heads: cfg.n_kv_heads as u32,
+        seq_len: 1024,
+        head_dim: cfg.head_dim as u32,
+        k: vec![0.5; plane],
+        v: vec![-0.5; plane],
+    };
+    store.store_sync(1, &chunk)?;
+    let mb = chunk.total_bytes() as f64 / 1e6;
+    let s = measure(3, iters, || store.load(1).unwrap());
+    println!("kvstore.load ({mb:.1} MB chunk)      : {s}  ({:.0} MB/s)", mb / s.mean);
+
+    // --- state splice (host memcpy choreography)
+    let mut host = HostState::zeros(&cfg, 8, cfg.max_ctx);
+    let s = measure(3, iters, || host.splice_chunk(3, 0, &chunk).unwrap());
+    println!("HostState.splice_chunk ({mb:.1} MB)  : {s}  ({:.0} MB/s)", mb / s.mean);
+
+    // --- session: upload, decode step, logits read
+    let sess = ModelSession::new(&m, "small")?;
+    let host8 = HostState::zeros(&cfg, 8, cfg.max_ctx);
+    let s = measure(2, iters.min(10), || sess.upload_state(&host8).unwrap());
+    let state_mb = host8.data.len() as f64 * 4.0 / 1e6;
+    println!("upload_state (b=8, {state_mb:.0} MB)   : {s}  ({:.0} MB/s)", state_mb / s.mean);
+
+    // the AOT entries donate the state buffer, so the decode loop must
+    // chain states exactly as the engine does
+    let mut state = sess.upload_state(&host8)?;
+    sess.warmup(&[(1, 8, cfg.max_ctx)])?;
+    let tokens = vec![5i32; 8];
+    let qlen = vec![1i32; 8];
+    let clen = vec![128i32; 8];
+    let s = measure(3, iters, || {
+        state = sess.step(&tokens, &qlen, &clen, &state).unwrap();
+    });
+    println!("decode step (s=1, b=8)            : {s}");
+
+    let s = measure(3, iters, || sess.read_logits(&state).unwrap());
+    println!("read_logits (b=8 x {} vocab)    : {s}", cfg.vocab);
+
+    // --- vector search over 10K docs
+    let emb = HashEmbedder::new(128, 7);
+    let mut ix = FlatIndex::new(128);
+    for i in 0..10_000u64 {
+        ix.insert(i, emb.embed(&[(i % 997) as u32, (i % 31) as u32, (i % 7) as u32]));
+    }
+    let q = emb.embed(&[3, 9, 27]);
+    let s = measure(3, iters, || ix.search(&q, 10));
+    println!("FlatIndex.search (10K x 128d)     : {s}");
+
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Table III — impact of storage performance on MatKV load time.
+//! Paper: 128 requests; per-request average load time and total load
+//! time for one 9100 Pro, 4x RAID-0, and DRAM. We run a scaled request
+//! count through the same pipeline, swapping the simulated storage
+//! device. Shape to reproduce: DRAM < RAID-0 < single SSD, roughly
+//! proportional to 1/bandwidth.
+
+use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
+use matkv::hwsim::StorageProfile;
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.usize("requests", 16);
+
+    let mut sc = Scenario::build(ScenarioSpec {
+        config: "base".into(), // biggest KVs -> measurable load differences
+        storage: StorageProfile::ssd_9100pro(),
+        n_docs: 8,
+        doc_tokens: 1024,
+        seed: 9,
+    })?;
+    let reqs = sc.requests(n, 2, 4);
+
+    let mut table = Table::new(
+        &format!("Table III — impact of storage performance ({n} requests, base config)"),
+        &["storage", "per-req avg load (s)", "total load (s)", "wall load (s)"],
+    );
+
+    for profile in [
+        StorageProfile::ssd_9100pro(),
+        StorageProfile::raid0_4x9100(),
+        StorageProfile::dram(),
+    ] {
+        let name = profile.name.clone();
+        sc.set_storage(profile);
+        let (_, m) = sc.engine.serve_all(&reqs, 1, ServeMode::MatKv)?;
+        table.row(&[
+            name,
+            format!("{:.4}", m.load_device_secs / n as f64),
+            format!("{:.3}", m.load_device_secs),
+            format!("{:.3}", m.load_wall_secs),
+        ]);
+    }
+    table.print();
+    println!("\npaper row ratios (single : RAID : DRAM) = 0.093 : 0.027 : 0.006 per request");
+    Ok(())
+}

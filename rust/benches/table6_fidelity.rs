@@ -1,0 +1,76 @@
+//! Table VI + §V-C4 — answer fidelity and MatKV-vs-CacheBlend speed.
+//!
+//! Accuracy substitution (DESIGN.md): with seeded weights, gold-answer F1
+//! is meaningless; the paper's actual question — how much does dropping
+//! cross-document attention perturb outputs — is measured exactly as
+//! token-F1 against the Vanilla reference. Expected ordering:
+//! Vanilla (1.0) >= CacheBlend >= MatKV, all high.
+//!
+//! Speed: the paper reports MatKV's KV loading 37% faster and TTFT 41%
+//! faster than CacheBlend (which must re-run partial prefill after
+//! loading). We measure the same two phases.
+
+use matkv::coordinator::baselines::{cacheblend_mode, mean_f1};
+use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
+use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile};
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.usize("requests", 24);
+    let h100 = DeviceProfile::h100();
+    let ssd = StorageProfile::raid0_4x9100();
+    let arch = ArchSpec::llama_3b();
+
+    // top-5 retrieval over 512-token chunks (paper: top-5, LongBench)
+    let sc = Scenario::build(ScenarioSpec {
+        config: "tiny".into(),
+        storage: StorageProfile::raid0_4x9100(),
+        n_docs: 24,
+        doc_tokens: 512,
+        seed: 20,
+    })?;
+    let reqs = sc.requests(n, 4, 12);
+
+    let (vanilla, vm) = sc.engine.serve_all(&reqs, 4, ServeMode::Vanilla)?;
+    let (matkv, mm) = sc.engine.serve_all(&reqs, 4, ServeMode::MatKv)?;
+    let (blend, bm) = sc.engine.serve_all(&reqs, 4, cacheblend_mode(sc.doc_tokens))?;
+
+    let mut acc = Table::new(
+        &format!("Table VI analogue — output fidelity vs Vanilla, {n} reqs, top-4 chunks"),
+        &["system", "token F1 vs Vanilla"],
+    );
+    acc.row(&["Vanilla".into(), format!("{:.3}", mean_f1(&vanilla, &vanilla))]);
+    acc.row(&["MatKV".into(), format!("{:.3}", mean_f1(&vanilla, &matkv))]);
+    acc.row(&["CacheBlend".into(), format!("{:.3}", mean_f1(&vanilla, &blend))]);
+    acc.print();
+
+    let mut speed = Table::new(
+        "§V-C4 — MatKV vs CacheBlend speed (load + time-to-first-token)",
+        &["system", "load (s)", "TTFT path (sim s)", "prefill steps cost"],
+    );
+    let ttft_of = |m: &matkv::coordinator::PhaseBreakdown| {
+        m.load_secs_on(&arch, &ssd)
+            + m.upload_secs_on(&arch, &h100)
+            + m.prefill_secs_on(&arch, &h100)
+    };
+    for (name, m) in [("MatKV", &mm), ("CacheBlend", &bm), ("Vanilla", &vm)] {
+        speed.row(&[
+            name.to_string(),
+            format!("{:.4}", m.load_secs_on(&arch, &ssd)),
+            format!("{:.4}", ttft_of(m)),
+            format!("{:.3}", m.prefill_secs_on(&arch, &h100)),
+        ]);
+    }
+    speed.print();
+
+    let m_ttft = ttft_of(&mm);
+    let b_ttft = ttft_of(&bm);
+    println!(
+        "\npaper shape: MatKV TTFT {:.0}% faster than CacheBlend (paper: 41%); fidelity ordering \
+         Vanilla >= CacheBlend >= MatKV.",
+        100.0 * (1.0 - m_ttft / b_ttft)
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Dynamic batching queue.
+//!
+//! Requests accumulate until either the target batch size is reached or
+//! the oldest request has waited `max_wait` — the standard
+//! size-or-timeout policy of LLM serving systems (vLLM, HF-TGI), applied
+//! over the AOT batch buckets {1, 2, 4, 8}.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::workload::RagRequest;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Preferred batch size (rounded up to a bucket by the engine).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before a partial
+    /// batch is released.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) }
+    }
+}
+
+/// FIFO dynamic batcher.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<(RagRequest, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: RagRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn push_all(&mut self, reqs: impl IntoIterator<Item = RagRequest>) {
+        let now = Instant::now();
+        for r in reqs {
+            self.queue.push_back((r, now));
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Release a batch if policy conditions hold (size reached, or oldest
+    /// request timed out). `None` = keep waiting.
+    pub fn next_batch(&mut self) -> Option<Vec<RagRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = self.queue.front().map(|(_, t)| t.elapsed()).unwrap_or_default();
+        if self.queue.len() >= self.policy.max_batch || oldest_wait >= self.policy.max_wait {
+            let n = self.queue.len().min(self.policy.max_batch);
+            return Some(self.queue.drain(..n).map(|(r, _)| r).collect());
+        }
+        None
+    }
+
+    /// Drain everything into maximal batches (offline/bench mode).
+    pub fn drain_batches(&mut self) -> Vec<Vec<RagRequest>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.policy.max_batch);
+            out.push(self.queue.drain(..n).map(|(r, _)| r).collect());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> RagRequest {
+        RagRequest { id, query: "q".into(), top_k: 2, output_tokens: 4, topic: 0 }
+    }
+
+    #[test]
+    fn releases_on_size() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        b.push(req(0));
+        b.push(req(1));
+        assert!(b.next_batch().is_none()); // below size, not timed out
+        b.push(req(2));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn releases_partial_on_timeout() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) });
+        b.push(req(0));
+        std::thread::sleep(Duration::from_millis(10));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oversize_queue_splits() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        b.push_all((0..10).map(req));
+        let batches = b.drain_batches();
+        assert_eq!(batches.iter().map(Vec::len).collect::<Vec<_>>(), vec![4, 4, 2]);
+        // FIFO order preserved across batches
+        assert_eq!(batches[2][1].id, 9);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+        assert!(b.drain_batches().is_empty());
+    }
+}

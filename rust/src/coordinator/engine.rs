@@ -1,0 +1,477 @@
+//! The MatKV serve engine (Fig 3b) and its baselines.
+//!
+//! Three serve modes over identical retrieval and decode phases:
+//!
+//! * [`ServeMode::MatKv`] — load materialized KVs from flash, splice into
+//!   the packed device state, sub-prefill only the query, decode.
+//! * [`ServeMode::Vanilla`] — recompute every retrieved chunk's KV on the
+//!   device with sequential positions and full cross-document attention
+//!   (the paper's full-KV-compute baseline).
+//! * [`ServeMode::CacheBlend`] — load KVs, then *recompute* the leading
+//!   tokens of every non-first document in context (partial
+//!   cross-attention repair, modelling CacheBlend's ~18% recompute).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::PhaseBreakdown;
+use crate::kvstore::KvStore;
+use crate::manifest::{Manifest, ModelConfig};
+use crate::runtime::session::StateBuf;
+use crate::runtime::state::argmax;
+use crate::runtime::{HostState, ModelSession};
+use crate::tokenizer::{Tokenizer, PAD};
+use crate::vectordb::{ChunkId, FlatIndex, HashEmbedder, VectorIndex};
+use crate::workload::RagRequest;
+
+/// Per-chunk metadata the coordinator keeps beside the vector index.
+#[derive(Debug, Clone)]
+pub struct ChunkMeta {
+    /// Token ids of the chunk (Vanilla recompute needs them; MatKV only
+    /// needs them at ingest).
+    pub tokens: Vec<u32>,
+    pub doc_id: u64,
+}
+
+/// Retrieval-side state, shared with the overlap loader thread.
+pub struct Retrieval {
+    pub tokenizer: Tokenizer,
+    pub embedder: HashEmbedder,
+    pub index: RwLock<FlatIndex>,
+    pub meta: RwLock<HashMap<ChunkId, ChunkMeta>>,
+}
+
+impl Retrieval {
+    /// Top-K chunk ids for a query string.
+    pub fn retrieve(&self, query: &str, k: usize) -> Vec<ChunkId> {
+        let q = self.embedder.embed(&self.tokenizer.encode(query));
+        self.index.read().unwrap().search(&q, k).into_iter().map(|r| r.chunk_id).collect()
+    }
+}
+
+/// Serving strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    MatKv,
+    Vanilla,
+    /// Recompute the first `recompute_tokens` of each non-first document
+    /// in context (must be a multiple of the chunk step).
+    CacheBlend { recompute_tokens: usize },
+}
+
+/// Engine construction knobs.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Model config name (tiny/small/base).
+    pub config: String,
+    /// Query bucket (S=32 artifact).
+    pub query_bucket: usize,
+    /// Chunked-prefill step (S=256 artifact).
+    pub chunk_step: usize,
+    /// Serve-time padded context (the C of serve artifacts).
+    pub serve_ctx: usize,
+    /// Ingest-time padded context (compact C for materialization).
+    pub ingest_ctx: usize,
+    /// Embedding dimension of the vector DB.
+    pub embed_dim: usize,
+}
+
+impl EngineOptions {
+    pub fn for_config(m: &Manifest, name: &str) -> Result<Self> {
+        let cfg = m.config(name)?;
+        Ok(EngineOptions {
+            config: name.to_string(),
+            query_bucket: m.query_bucket,
+            chunk_step: m.chunk_tokens,
+            serve_ctx: cfg.max_ctx,
+            ingest_ctx: cfg.ingest_ctx,
+            embed_dim: 128,
+        })
+    }
+}
+
+/// One generated answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub request_id: u64,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub retrieved: Vec<ChunkId>,
+}
+
+/// A batch staged by the (possibly remote) loader: everything the device
+/// needs, all host memory, `Send`.
+pub struct StagedBatch {
+    pub bucket: usize,
+    pub ids: Vec<u64>,
+    pub output_tokens: Vec<usize>,
+    pub retrieved: Vec<Vec<ChunkId>>,
+    pub host_state: HostState,
+    pub cache_len: Vec<i32>,
+    pub query_tokens: Vec<i32>,
+    pub qlen: Vec<i32>,
+    /// Doc layout per element: (start_slot, n_tokens) per retrieved doc
+    /// (CacheBlend's recompute targets).
+    pub doc_slots: Vec<Vec<(usize, usize)>>,
+    /// Partial metrics from the staging phase.
+    pub metrics: PhaseBreakdown,
+}
+
+/// Loader-side context for staging batches off the device thread.
+#[derive(Clone)]
+pub struct LoaderCtx {
+    pub retrieval: Arc<Retrieval>,
+    pub kv: Arc<KvStore>,
+    pub cfg: ModelConfig,
+    pub opts: EngineOptions,
+}
+
+impl LoaderCtx {
+    /// Batch buckets available (from the manifest artifacts).
+    fn batch_bucket(&self, n: usize) -> Result<usize> {
+        self.cfg.batch_bucket(n)
+    }
+
+    /// Stage a MatKV batch: retrieve, load KVs from flash, splice into a
+    /// host state (Fig 3b steps 1-2). No device work.
+    pub fn stage_matkv(&self, reqs: &[RagRequest]) -> Result<StagedBatch> {
+        let bucket = self.batch_bucket(reqs.len())?;
+        let mut staged = self.stage_common(reqs, bucket)?;
+
+        let t0 = Instant::now();
+        // flatten (element, doc) pairs and load them all concurrently
+        let flat: Vec<(usize, ChunkId)> = staged
+            .retrieved
+            .iter()
+            .enumerate()
+            .flat_map(|(b, ids)| ids.iter().map(move |&id| (b, id)))
+            .collect();
+        let ids: Vec<ChunkId> = flat.iter().map(|&(_, id)| id).collect();
+        let loaded = self.kv.load_many(&ids)?;
+        let expect_cfg = crate::kvstore::store::config_id(&self.cfg);
+        for ((b, _), l) in flat.iter().zip(&loaded) {
+            if l.chunk.config_id != expect_cfg {
+                bail!(
+                    "materialized KV was produced by a different model config                      ({:#x} != {:#x}) — re-ingest after changing configs",
+                    l.chunk.config_id,
+                    expect_cfg
+                );
+            }
+            let slot = staged.cache_len[*b] as usize;
+            staged.host_state.splice_chunk(*b, slot, &l.chunk)?;
+            staged.doc_slots[*b].push((slot, l.chunk.seq_len as usize));
+            staged.cache_len[*b] += l.chunk.seq_len as i32;
+            staged.metrics.load_device_secs += l.device_secs;
+            staged.metrics.loaded_bytes += l.chunk.total_bytes();
+            staged.metrics.loaded_tokens += l.chunk.seq_len as usize;
+            staged.metrics.load_reads += 1;
+        }
+        staged.metrics.load_wall_secs = t0.elapsed().as_secs_f64();
+        Ok(staged)
+    }
+
+    /// Stage a Vanilla batch: retrieval only (chunks will be recomputed
+    /// on-device from their tokens).
+    pub fn stage_vanilla(&self, reqs: &[RagRequest]) -> Result<StagedBatch> {
+        let bucket = self.batch_bucket(reqs.len())?;
+        let mut staged = self.stage_common(reqs, bucket)?;
+        // record doc layout (slots assigned sequentially at prefill time)
+        let meta = self.retrieval.meta.read().unwrap();
+        for b in 0..staged.retrieved.len() {
+            let mut slot = 0usize;
+            for id in &staged.retrieved[b] {
+                let m = meta.get(id).context("missing chunk meta")?;
+                staged.doc_slots[b].push((slot, m.tokens.len()));
+                slot += m.tokens.len();
+            }
+        }
+        Ok(staged)
+    }
+
+    /// Shared staging: retrieval, query tokenization, zero host state.
+    fn stage_common(&self, reqs: &[RagRequest], bucket: usize) -> Result<StagedBatch> {
+        if reqs.is_empty() || reqs.len() > bucket {
+            bail!("batch of {} vs bucket {bucket}", reqs.len());
+        }
+        let qb = self.opts.query_bucket;
+        let mut metrics = PhaseBreakdown { requests: reqs.len(), ..Default::default() };
+
+        let t0 = Instant::now();
+        let retrieved: Vec<Vec<ChunkId>> =
+            reqs.iter().map(|r| self.retrieval.retrieve(&r.query, r.top_k)).collect();
+        metrics.retrieve_secs = t0.elapsed().as_secs_f64();
+
+        let mut query_tokens = vec![PAD as i32; bucket * qb];
+        let mut qlen = vec![1i32; bucket];
+        for (b, r) in reqs.iter().enumerate() {
+            let (ids, live) = self.retrieval.tokenizer.encode_block(&r.query, qb);
+            for (i, id) in ids.iter().enumerate() {
+                query_tokens[b * qb + i] = *id as i32;
+            }
+            qlen[b] = live.max(1) as i32;
+        }
+
+        Ok(StagedBatch {
+            bucket,
+            ids: reqs.iter().map(|r| r.id).collect(),
+            output_tokens: reqs.iter().map(|r| r.output_tokens).collect(),
+            retrieved,
+            host_state: HostState::zeros(&self.cfg, bucket, self.opts.serve_ctx),
+            cache_len: vec![0; bucket],
+            query_tokens,
+            qlen,
+            doc_slots: vec![Vec::new(); bucket],
+            metrics,
+        })
+    }
+}
+
+/// The serve engine: owns the device session plus shared retrieval/KV
+/// state (the latter shareable with a loader thread via [`LoaderCtx`]).
+pub struct Engine {
+    pub session: ModelSession,
+    pub retrieval: Arc<Retrieval>,
+    pub kv: Arc<KvStore>,
+    pub opts: EngineOptions,
+    cfg: ModelConfig,
+}
+
+impl Engine {
+    /// Build an engine. `corpus_texts` seeds the tokenizer vocabulary.
+    pub fn new<'a>(
+        manifest: &Manifest,
+        opts: EngineOptions,
+        kv: KvStore,
+        corpus_texts: impl IntoIterator<Item = &'a str>,
+    ) -> Result<Self> {
+        let session = ModelSession::new(manifest, &opts.config)?;
+        let cfg = session.config().clone();
+        let tokenizer = Tokenizer::from_corpus(corpus_texts, cfg.vocab as u32);
+        let retrieval = Arc::new(Retrieval {
+            tokenizer,
+            embedder: HashEmbedder::new(opts.embed_dim, 0x9a7_f00d),
+            index: RwLock::new(FlatIndex::new(opts.embed_dim)),
+            meta: RwLock::new(HashMap::new()),
+        });
+        Ok(Engine { session, retrieval, kv: Arc::new(kv), opts, cfg })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Context for staging work off-thread (overlap pipeline).
+    pub fn loader_ctx(&self) -> LoaderCtx {
+        LoaderCtx {
+            retrieval: self.retrieval.clone(),
+            kv: self.kv.clone(),
+            cfg: self.cfg.clone(),
+            opts: self.opts.clone(),
+        }
+    }
+
+    /// Fresh zero state. NOT cached/shared: the AOT entries donate the
+    /// state parameter (input_output_alias), so a state buffer must never
+    /// be fed to step() twice.
+    fn zero_state(&self, bucket: usize, ctx: usize) -> Result<Rc<StateBuf>> {
+        Ok(Rc::new(self.session.zero_state(bucket, ctx)?))
+    }
+
+    /// Serve one batch end-to-end in the given mode.
+    pub fn serve_batch(
+        &self,
+        reqs: &[RagRequest],
+        mode: ServeMode,
+    ) -> Result<(Vec<Response>, PhaseBreakdown)> {
+        let ctx = self.loader_ctx();
+        let staged = match mode {
+            ServeMode::MatKv | ServeMode::CacheBlend { .. } => ctx.stage_matkv(reqs)?,
+            ServeMode::Vanilla => ctx.stage_vanilla(reqs)?,
+        };
+        self.exec_staged(staged, mode)
+    }
+
+    /// Device half: upload/prefill/decode a staged batch.
+    pub fn exec_staged(
+        &self,
+        staged: StagedBatch,
+        mode: ServeMode,
+    ) -> Result<(Vec<Response>, PhaseBreakdown)> {
+        let total_t0 = Instant::now();
+        let mut m = staged.metrics.clone();
+        let bucket = staged.bucket;
+        let ctx = self.opts.serve_ctx;
+        let n = staged.ids.len();
+
+        // ---- state setup -------------------------------------------------
+        let t0 = Instant::now();
+        let (mut state, mut cache_len): (Rc<StateBuf>, Vec<i32>) = match mode {
+            ServeMode::MatKv | ServeMode::CacheBlend { .. } => {
+                let st = self.session.upload_state(&staged.host_state)?;
+                (Rc::new(st), staged.cache_len.clone())
+            }
+            ServeMode::Vanilla => (self.zero_state(bucket, ctx)?, vec![0; bucket]),
+        };
+        m.upload_secs = t0.elapsed().as_secs_f64();
+
+        // ---- prefill -----------------------------------------------------
+        let t0 = Instant::now();
+        if mode == ServeMode::Vanilla {
+            // chunked recompute of every retrieved document, sequential
+            // positions, cross-document attention intact.
+            let step = self.opts.chunk_step;
+            let meta = self.retrieval.meta.read().unwrap();
+            let mut doc_tokens: Vec<Vec<u32>> = vec![Vec::new(); bucket];
+            for b in 0..n {
+                for id in &staged.retrieved[b] {
+                    doc_tokens[b].extend(&meta.get(id).context("chunk meta")?.tokens);
+                }
+            }
+            drop(meta);
+            let mut off = vec![0usize; bucket];
+            loop {
+                let mut any = false;
+                let mut tokens = vec![PAD as i32; bucket * step];
+                let mut qlen = vec![1i32; bucket];
+                let mut adv = vec![0i32; bucket];
+                for b in 0..bucket {
+                    let rem = doc_tokens[b].len().saturating_sub(off[b]);
+                    if rem == 0 {
+                        continue;
+                    }
+                    any = true;
+                    let take = rem.min(step);
+                    for i in 0..take {
+                        tokens[b * step + i] = doc_tokens[b][off[b] + i] as i32;
+                    }
+                    qlen[b] = take as i32;
+                    adv[b] = take as i32;
+                    m.prefill_trace.record_elem(take, cache_len[b] as usize + take);
+                }
+                if !any {
+                    break;
+                }
+                m.prefill_trace.record_step();
+                state = Rc::new(self.session.step(&tokens, &qlen, &cache_len, &state)?);
+                for b in 0..bucket {
+                    cache_len[b] += adv[b];
+                    off[b] += adv[b] as usize;
+                }
+            }
+        } else if let ServeMode::CacheBlend { recompute_tokens } = mode {
+            // partial recompute: leading tokens of every non-first doc,
+            // in-context (cross-attending everything before them).
+            let step = self.opts.chunk_step;
+            let meta = self.retrieval.meta.read().unwrap();
+            for doc_i in 1..staged.doc_slots.iter().map(|d| d.len()).max().unwrap_or(0) {
+                let mut tokens = vec![PAD as i32; bucket * step];
+                let mut qlen = vec![1i32; bucket];
+                let mut clen = vec![0i32; bucket];
+                let mut any = false;
+                for b in 0..n {
+                    let Some(&(slot, len)) = staged.doc_slots[b].get(doc_i) else { continue };
+                    let take = recompute_tokens.min(len).min(step);
+                    if take == 0 {
+                        continue;
+                    }
+                    let id = staged.retrieved[b][doc_i];
+                    let toks = &meta.get(&id).context("chunk meta")?.tokens;
+                    for i in 0..take {
+                        tokens[b * step + i] = toks[i] as i32;
+                    }
+                    qlen[b] = take as i32;
+                    clen[b] = slot as i32;
+                    any = true;
+                    m.prefill_trace.record_elem(take, slot + take);
+                }
+                if any {
+                    m.prefill_trace.record_step();
+                    state = Rc::new(self.session.step(&tokens, &qlen, &clen, &state)?);
+                }
+            }
+        }
+
+        // query sub-prefill (all modes)
+        for b in 0..n {
+            m.prefill_trace
+                .record_elem(staged.qlen[b] as usize, (cache_len[b] + staged.qlen[b]) as usize);
+        }
+        m.prefill_trace.record_step();
+        state = Rc::new(self.session.step(&staged.query_tokens, &staged.qlen, &cache_len, &state)?);
+        for b in 0..bucket {
+            cache_len[b] += staged.qlen[b];
+        }
+        m.prefill_wall_secs = t0.elapsed().as_secs_f64();
+
+        // ---- decode (greedy) ----------------------------------------------
+        let t0 = Instant::now();
+        let v = self.cfg.vocab;
+        let max_out = staged.output_tokens.iter().copied().max().unwrap_or(0);
+        let mut generated: Vec<Vec<u32>> = vec![Vec::new(); n];
+        if max_out > 0 {
+            let logits = self.session.read_logits(&state)?;
+            let mut next: Vec<i32> =
+                (0..bucket).map(|b| argmax(&logits[b * v..(b + 1) * v]) as i32).collect();
+            for (b, g) in generated.iter_mut().enumerate() {
+                g.push(next[b] as u32);
+            }
+            for _ in 1..max_out {
+                if cache_len.iter().any(|&c| c as usize + 1 > ctx) {
+                    break; // context exhausted
+                }
+                for b in 0..n {
+                    m.decode_trace.record_elem(1, cache_len[b] as usize + 1);
+                }
+                m.decode_trace.record_step();
+                state = Rc::new(self.session.step(&next, &vec![1i32; bucket], &cache_len, &state)?);
+                for c in cache_len.iter_mut() {
+                    *c += 1;
+                }
+                let logits = self.session.read_logits(&state)?;
+                next = (0..bucket).map(|b| argmax(&logits[b * v..(b + 1) * v]) as i32).collect();
+                for (b, g) in generated.iter_mut().enumerate() {
+                    g.push(next[b] as u32);
+                }
+            }
+        }
+        m.decode_wall_secs = t0.elapsed().as_secs_f64();
+
+        // ---- package -------------------------------------------------------
+        let responses = (0..n)
+            .map(|b| {
+                let want = staged.output_tokens[b].min(generated[b].len());
+                let tokens: Vec<u32> = generated[b][..want].to_vec();
+                Response {
+                    request_id: staged.ids[b],
+                    text: self.retrieval.tokenizer.decode(&tokens),
+                    tokens,
+                    retrieved: staged.retrieved[b].clone(),
+                }
+            })
+            .collect();
+        m.tokens_out = staged.output_tokens.iter().take(n).map(|&o| o.min(max_out)).sum();
+        m.total_wall_secs = total_t0.elapsed().as_secs_f64();
+        Ok((responses, m))
+    }
+
+    /// Serve a request list in fixed-size batches (no overlap).
+    pub fn serve_all(
+        &self,
+        reqs: &[RagRequest],
+        batch_size: usize,
+        mode: ServeMode,
+    ) -> Result<(Vec<Response>, PhaseBreakdown)> {
+        let mut responses = Vec::with_capacity(reqs.len());
+        let mut agg = PhaseBreakdown::default();
+        for chunk in reqs.chunks(batch_size) {
+            let (r, m) = self.serve_batch(chunk, mode)?;
+            responses.extend(r);
+            agg.add(&m);
+        }
+        Ok((responses, agg))
+    }
+}

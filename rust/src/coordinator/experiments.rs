@@ -1,0 +1,114 @@
+//! Shared scenario builders for examples and the paper-table benches.
+//!
+//! Every bench in `rust/benches/` regenerates one table/figure of the
+//! paper by driving a [`Scenario`] — a fully ingested engine over a
+//! synthetic corpus — through the serve modes under measurement.
+
+use anyhow::Result;
+
+use super::engine::{Engine, EngineOptions};
+use crate::hwsim::StorageProfile;
+use crate::kvstore::KvStore;
+use crate::util::tempdir::TempDir;
+use crate::workload::{Corpus, RagRequest, RequestGen, TurboRagProfile};
+use crate::Manifest;
+
+/// A ready-to-serve deployment (corpus ingested, KVs materialized).
+pub struct Scenario {
+    pub engine: Engine,
+    pub corpus: Corpus,
+    pub doc_tokens: usize,
+    /// Keep the KV directory alive for the scenario's lifetime.
+    _kv_dir: TempDir,
+}
+
+/// Scenario construction knobs.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub config: String,
+    pub storage: StorageProfile,
+    pub n_docs: usize,
+    pub doc_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            config: "tiny".into(),
+            storage: StorageProfile::raid0_4x9100(),
+            n_docs: 16,
+            doc_tokens: 1024,
+            seed: 42,
+        }
+    }
+}
+
+impl Scenario {
+    /// Build and ingest.
+    pub fn build(spec: ScenarioSpec) -> Result<Scenario> {
+        let manifest = Manifest::load(crate::artifacts_dir())?;
+        let corpus =
+            Corpus::generate(spec.n_docs, spec.doc_tokens, spec.n_docs.min(16), spec.seed);
+        let kv_dir = TempDir::new("matkv-scenario")?;
+        let kv = KvStore::open(kv_dir.path(), spec.storage)?;
+        let opts = EngineOptions::for_config(&manifest, &spec.config)?;
+        let engine = Engine::new(&manifest, opts, kv, corpus.texts())?;
+        engine.ingest_corpus(&corpus, spec.doc_tokens)?;
+        Ok(Scenario { engine, corpus, doc_tokens: spec.doc_tokens, _kv_dir: kv_dir })
+    }
+
+    /// TurboRAG-profile request stream (paper §V-B: top-k chunks of
+    /// `doc_tokens`, ~20-token query, `output_tokens` answer).
+    pub fn requests(&self, n: usize, top_k: usize, output_tokens: usize) -> Vec<RagRequest> {
+        let mut gen = RequestGen::new(
+            TurboRagProfile { top_k, query_tokens: 20.0, output_tokens },
+            self.corpus.n_topics,
+            1.0,
+            7,
+        );
+        gen.take(&self.corpus, n)
+    }
+
+    /// Swap the simulated storage device (Table III).
+    pub fn set_storage(&mut self, profile: StorageProfile) {
+        // Arc<KvStore> is shared with loader contexts; re-opening is the
+        // clean way to swap the throttle everywhere at once.
+        let dir = self._kv_dir.path().to_path_buf();
+        let store = KvStore::open(dir, profile).expect("reopen kvstore");
+        self.engine.kv = std::sync::Arc::new(store);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServeMode;
+
+    #[test]
+    fn scenario_builds_and_serves() {
+        let mut spec = ScenarioSpec::default();
+        spec.n_docs = 4;
+        spec.doc_tokens = 256;
+        spec.storage = StorageProfile::dram();
+        let sc = Scenario::build(spec).unwrap();
+        let reqs = sc.requests(2, 1, 3);
+        let (r, m) = sc.engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(m.tokens_out, 6);
+    }
+
+    #[test]
+    fn storage_swap_changes_profile() {
+        let mut spec = ScenarioSpec::default();
+        spec.n_docs = 2;
+        spec.doc_tokens = 256;
+        spec.storage = StorageProfile::dram();
+        let mut sc = Scenario::build(spec).unwrap();
+        assert_eq!(sc.engine.kv.profile().name, "DRAM");
+        sc.set_storage(StorageProfile::ssd_9100pro());
+        assert_eq!(sc.engine.kv.profile().name, "9100Pro");
+        // materialized files survive the swap
+        assert_eq!(sc.engine.kv.len().unwrap(), 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! The MatKV coordinator — the paper's system contribution (L3).
+//!
+//! * [`ingest`] — document ingestion: chunk → embed → vector-DB insert,
+//!   prefill on the device, materialize the KV cache to flash
+//!   (write-behind), Fig 3a.
+//! * [`engine`] — the serve path, Fig 3b: retrieve top-K → **load**
+//!   materialized KVs (MatKV) *or* recompute them (Vanilla baseline) →
+//!   query sub-prefill → batched greedy decode.
+//! * [`batcher`] — dynamic batching queue with size/timeout policy over
+//!   the AOT batch buckets.
+//! * [`overlap`] — the §III-C optimization: a loader thread stages batch
+//!   n+1's KVs from flash while the device decodes batch n.
+//! * [`baselines`] — the CacheBlend-style partial-recompute comparator.
+//! * [`metrics`] — per-phase latency breakdown + simulated device costs.
+
+pub mod batcher;
+pub mod baselines;
+pub mod engine;
+pub mod experiments;
+pub mod ingest;
+pub mod metrics;
+pub mod overlap;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use engine::{Engine, EngineOptions, Response, ServeMode};
+pub use ingest::{IngestStats, Ingestor};
+pub use metrics::{PhaseBreakdown, Percentiles};
+pub use experiments::{Scenario, ScenarioSpec};
+pub use overlap::serve_overlapped;

@@ -1,0 +1,258 @@
+//! Calibrated device/storage profiles and the Fig-1 hardware catalog.
+//!
+//! Sources: the paper's §II-C numbers (H100 $50K / 350W cap / ~500 ms to
+//! prefill 1,024 tokens of LLaMA-70B; Samsung 9100 Pro $400/4TB, 14.7
+//! GB/s, 7W active) plus public spec sheets for the catalog trend.
+
+/// A GPU-class compute device for the roofline model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Peak dense f16/bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Host<->device interconnect bandwidth, bytes/s (PCIe for both GPUs).
+    pub pcie_bw: f64,
+    /// Achievable fraction of peak FLOPs in prefill-like GEMMs (MFU).
+    pub mfu: f64,
+    /// Achievable HBM fraction during prefill (large fused ops).
+    pub prefill_membw_util: f64,
+    /// Achievable HBM fraction during decode (launch-latency-bound in the
+    /// paper's HF-transformers stack — calibrated from Table IV).
+    pub membw_util: f64,
+    /// Active power draw at full load, watts.
+    pub power_active: f64,
+    /// Idle power draw, watts.
+    pub power_idle: f64,
+    /// Street price, dollars.
+    pub price_usd: f64,
+}
+
+/// A storage device (or tier) for KV materialization.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageProfile {
+    pub name: String,
+    /// Sequential read bandwidth, bytes/s. `f64::INFINITY` = unthrottled
+    /// (the DRAM tier of Table III).
+    pub read_bw: f64,
+    /// Sequential write bandwidth, bytes/s.
+    pub write_bw: f64,
+    /// Per-request base latency, seconds.
+    pub latency_s: f64,
+    /// Active power, watts.
+    pub power_active: f64,
+    /// Idle power, watts.
+    pub power_idle: f64,
+    /// Price per byte, dollars.
+    pub usd_per_byte: f64,
+}
+
+impl DeviceProfile {
+    /// Calibrated to the paper's measured HF-transformers stack, not the
+    /// theoretical card: §II-C's anchor (1,024-token 70B prefill in 500 ms)
+    /// implies mfu = 2*70e9*1024 / (989e12 * 0.5s) ≈ 0.29. Decode is the
+    /// roofline here plus a per-ELEMENT software overhead that lives in
+    /// `ArchSpec::decode_elem_overhead_s` (reconciling Fig 5's 65 ms/step
+    /// at batch 1 with Table IV's ~450 ms/step at batch 8). Using the
+    /// measured stack keeps every prefill/decode share, crossover and
+    /// overlap benefit at the paper's proportions.
+    pub fn h100() -> Self {
+        DeviceProfile {
+            name: "H100".into(),
+            peak_flops: 989e12, // dense bf16, no sparsity
+            hbm_bw: 3.35e12,
+            pcie_bw: 55e9, // PCIe gen5 x16 measured
+            mfu: 0.29,     // paper anchor: 500 ms / 1,024 tokens of 70B
+            prefill_membw_util: 0.55,
+            membw_util: 0.7, // weight streaming; per-element software
+                             // overhead lives in ArchSpec (calibration note
+                             // there reconciles Fig 5 with Table IV)
+            power_active: 350.0, // paper: power cap reached in all configs
+            power_idle: 50.0,
+            price_usd: 50_000.0,
+        }
+    }
+
+    /// Same HF-transformers-stack calibration as [`DeviceProfile::h100`];
+    /// the paper's Fig 10 premise — decode barely slower on the low-end
+    /// card — emerges because decode is dominated by per-element software
+    /// overhead plus weight streaming, where the 4090 is only ~2.7x
+    /// behind (0.6 TB/s effective vs 2.3 TB/s), vs ~7x behind at prefill.
+    pub fn rtx4090() -> Self {
+        DeviceProfile {
+            name: "RTX4090".into(),
+            peak_flops: 165e12, // dense fp16 tensor
+            hbm_bw: 1.01e12,
+            pcie_bw: 25e9, // PCIe gen4 x16
+            mfu: 0.25,
+            prefill_membw_util: 0.5,
+            membw_util: 0.6,
+            power_active: 320.0,
+            power_idle: 20.0,
+            price_usd: 1_600.0,
+        }
+    }
+
+    /// The CPU host running PJRT in this testbed (used when reporting
+    /// measured wall-clock next to simulated device time).
+    pub fn cpu_host() -> Self {
+        DeviceProfile {
+            name: "cpu-host".into(),
+            peak_flops: 1.0e12,
+            hbm_bw: 40e9,
+            pcie_bw: 40e9,
+            mfu: 0.3,
+            prefill_membw_util: 0.5,
+            membw_util: 0.5,
+            power_active: 180.0,
+            power_idle: 90.0,
+            price_usd: 5_000.0,
+        }
+    }
+}
+
+impl StorageProfile {
+    /// Samsung 9100 Pro (PCIe 5.0, 4TB): the paper's headline SSD.
+    pub fn ssd_9100pro() -> Self {
+        StorageProfile {
+            name: "9100Pro".into(),
+            read_bw: 14.7e9,
+            write_bw: 13.3e9,
+            latency_s: 60e-6,
+            power_active: 7.0,
+            power_idle: 0.5,
+            usd_per_byte: 400.0 / 4e12, // $0.1/GB
+        }
+    }
+
+    /// Four 9100 Pros in software RAID-0 (paper's H100 server config).
+    pub fn raid0_4x9100() -> Self {
+        StorageProfile {
+            name: "RAID0-4x9100".into(),
+            // paper quotes 58.8 GB/s theoretical; their measured Table III
+            // load times correspond to ~30 GB/s effective — we use measured.
+            read_bw: 30e9,
+            write_bw: 26e9,
+            latency_s: 80e-6,
+            power_active: 30.0,
+            power_idle: 2.0,
+            usd_per_byte: 1600.0 / 16e12,
+        }
+    }
+
+    /// Samsung PM9A3 (the RTX 4090 box in Fig 10).
+    pub fn ssd_pm9a3() -> Self {
+        StorageProfile {
+            name: "PM9A3".into(),
+            read_bw: 6.5e9,
+            write_bw: 3.5e9,
+            latency_s: 90e-6,
+            power_active: 8.0,
+            power_idle: 1.0,
+            usd_per_byte: 250.0 / 1e12,
+        }
+    }
+
+    /// DRAM tier of Table III (KVs preloaded in page cache; only the
+    /// aio copy to the device remains).
+    pub fn dram() -> Self {
+        StorageProfile {
+            name: "DRAM".into(),
+            read_bw: f64::INFINITY,
+            write_bw: f64::INFINITY,
+            latency_s: 5e-6,
+            power_active: 90.0,
+            power_idle: 90.0,
+            usd_per_byte: 2000.0 / 256e9, // server DDR5 $/byte
+        }
+    }
+
+    /// Seconds to read `bytes` from this tier.
+    pub fn read_secs(&self, bytes: usize) -> f64 {
+        self.latency_s + if self.read_bw.is_finite() { bytes as f64 / self.read_bw } else { 0.0 }
+    }
+
+    /// Seconds to write `bytes` to this tier.
+    pub fn write_secs(&self, bytes: usize) -> f64 {
+        self.latency_s + if self.write_bw.is_finite() { bytes as f64 / self.write_bw } else { 0.0 }
+    }
+}
+
+/// One row of the Fig-1 cost/performance trend catalog.
+#[derive(Debug, Clone)]
+pub struct GpuCatalogRow {
+    pub year: u32,
+    pub name: &'static str,
+    pub tflops_f16: f64,
+    pub price_usd: f64,
+    pub tdp_w: f64,
+}
+
+/// GPU generations 2017-2024 (dense f16 TFLOPs, launch street price).
+pub const CATALOG_GPUS: &[GpuCatalogRow] = &[
+    GpuCatalogRow { year: 2017, name: "V100", tflops_f16: 125.0, price_usd: 10_000.0, tdp_w: 300.0 },
+    GpuCatalogRow { year: 2020, name: "A100", tflops_f16: 312.0, price_usd: 12_500.0, tdp_w: 400.0 },
+    GpuCatalogRow { year: 2022, name: "H100", tflops_f16: 989.0, price_usd: 30_000.0, tdp_w: 700.0 },
+    GpuCatalogRow { year: 2024, name: "H200", tflops_f16: 989.0, price_usd: 35_000.0, tdp_w: 700.0 },
+];
+
+/// One row of the SSD side of Fig 1.
+#[derive(Debug, Clone)]
+pub struct SsdCatalogRow {
+    pub year: u32,
+    pub name: &'static str,
+    pub read_gbps: f64,
+    pub usd_per_gb: f64,
+    pub active_w: f64,
+}
+
+/// Consumer NVMe generations 2017-2024.
+pub const CATALOG_SSDS: &[SsdCatalogRow] = &[
+    SsdCatalogRow { year: 2017, name: "960Pro", read_gbps: 3.5, usd_per_gb: 0.62, active_w: 5.3 },
+    SsdCatalogRow { year: 2020, name: "980Pro", read_gbps: 7.0, usd_per_gb: 0.23, active_w: 6.2 },
+    SsdCatalogRow { year: 2022, name: "990Pro", read_gbps: 7.45, usd_per_gb: 0.17, active_w: 6.5 },
+    SsdCatalogRow { year: 2024, name: "9100Pro", read_gbps: 14.7, usd_per_gb: 0.10, active_w: 7.0 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_9100pro_read_250mb_under_20ms() {
+        // §II-C: "a commodity SSD ... can read the same 250MB KV cache in
+        // under 20 milliseconds"
+        let t = StorageProfile::ssd_9100pro().read_secs(250 << 20);
+        assert!(t < 0.020, "got {t}");
+    }
+
+    #[test]
+    fn dram_faster_than_raid_faster_than_single() {
+        let b = 250 << 20;
+        let dram = StorageProfile::dram().read_secs(b);
+        let raid = StorageProfile::raid0_4x9100().read_secs(b);
+        let single = StorageProfile::ssd_9100pro().read_secs(b);
+        assert!(dram < raid && raid < single, "{dram} {raid} {single}");
+    }
+
+    #[test]
+    fn catalog_trends_match_paper_claims() {
+        // §II-C: SSD bandwidth up ~30x... (paper exaggerates; our catalog
+        // shows >4x 2017->2024 bandwidth and >6x $/GB improvement) while
+        // GPU flops/$ improves more slowly than SSD bytes/$.
+        let g0 = &CATALOG_GPUS[0];
+        let g1 = CATALOG_GPUS.last().unwrap();
+        let s0 = &CATALOG_SSDS[0];
+        let s1 = CATALOG_SSDS.last().unwrap();
+        let gpu_value_gain = (g1.tflops_f16 / g1.price_usd) / (g0.tflops_f16 / g0.price_usd);
+        let ssd_value_gain = s0.usd_per_gb / s1.usd_per_gb;
+        assert!(ssd_value_gain > gpu_value_gain, "{ssd_value_gain} <= {gpu_value_gain}");
+    }
+
+    #[test]
+    fn infinite_bw_tier_is_latency_only() {
+        let d = StorageProfile::dram();
+        assert_eq!(d.read_secs(1 << 30), d.latency_s);
+    }
+}

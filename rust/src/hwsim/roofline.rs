@@ -1,0 +1,111 @@
+//! Roofline phase-time model: converts a phase's FLOPs and byte movement
+//! into simulated time on a [`DeviceProfile`].
+
+use super::profiles::DeviceProfile;
+use crate::manifest::ModelConfig;
+
+/// Cost of one executed phase (an append call, a KV load, ...).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseCost {
+    /// Floating-point operations performed on the device.
+    pub flops: f64,
+    /// Bytes streamed through device memory (weights + KV + activations).
+    pub hbm_bytes: f64,
+    /// Bytes crossing host<->device (KV uploads, logits downloads).
+    pub pcie_bytes: f64,
+}
+
+impl PhaseCost {
+    /// Simulated execution time on `dev` for prefill-class work (large
+    /// fused ops — use the prefill bandwidth utilization): roofline max
+    /// of compute, memory and interconnect times.
+    pub fn secs_on(&self, dev: &DeviceProfile) -> f64 {
+        self.secs_with(dev, dev.prefill_membw_util)
+    }
+
+    /// Simulated execution time for decode-class work (one token per
+    /// invocation; bandwidth utilization calibrated to the paper's stack).
+    pub fn secs_on_decode(&self, dev: &DeviceProfile) -> f64 {
+        self.secs_with(dev, dev.membw_util)
+    }
+
+    fn secs_with(&self, dev: &DeviceProfile, membw_util: f64) -> f64 {
+        let t_flops = self.flops / (dev.peak_flops * dev.mfu);
+        let t_mem = self.hbm_bytes / (dev.hbm_bw * membw_util);
+        let t_pcie = self.pcie_bytes / dev.pcie_bw;
+        t_flops.max(t_mem).max(t_pcie)
+    }
+
+    pub fn add(&mut self, other: PhaseCost) {
+        self.flops += other.flops;
+        self.hbm_bytes += other.hbm_bytes;
+        self.pcie_bytes += other.pcie_bytes;
+    }
+}
+
+/// Cost of one `append` entry invocation (B elements, S live tokens each,
+/// ctx live cache slots) — the prefill/sub-prefill/decode building block.
+pub fn append_cost(cfg: &ModelConfig, batch: usize, s_live: usize, ctx_live: usize) -> PhaseCost {
+    let param_bytes = (cfg.param_count * 4) as f64;
+    let kv_touched = (batch * ctx_live * cfg.kv_bytes_per_token) as f64;
+    let act_bytes = (batch * s_live * cfg.d_model * 4 * 8) as f64; // rough activations
+    PhaseCost {
+        flops: batch as f64 * cfg.append_flops(s_live, ctx_live),
+        hbm_bytes: param_bytes + kv_touched + act_bytes,
+        pcie_bytes: 0.0,
+    }
+}
+
+/// Cost of uploading loaded KV bytes into device memory.
+pub fn kv_upload_cost(bytes: usize) -> PhaseCost {
+    PhaseCost { flops: 0.0, hbm_bytes: bytes as f64, pcie_bytes: bytes as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::profiles::DeviceProfile;
+    use crate::manifest::Manifest;
+
+    fn base() -> ModelConfig {
+        Manifest::load(crate::artifacts_dir()).unwrap().config("base").unwrap().clone()
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_decode_is_memory_bound() {
+        let cfg = base();
+        let h100 = DeviceProfile::h100();
+        let prefill = append_cost(&cfg, 1, 1024, 1024);
+        let decode = append_cost(&cfg, 1, 1, 2048);
+        // prefill: flops term dominates (at prefill-class bandwidth)
+        assert!(
+            prefill.flops / (h100.peak_flops * h100.mfu)
+                > prefill.hbm_bytes / (h100.hbm_bw * h100.prefill_membw_util)
+        );
+        // decode: memory term dominates
+        assert!(
+            decode.hbm_bytes / (h100.hbm_bw * h100.membw_util)
+                > decode.flops / (h100.peak_flops * h100.mfu)
+        );
+    }
+
+    #[test]
+    fn h100_beats_4090_more_at_prefill_than_decode() {
+        // Fig 10's premise: decode is much less sensitive to GPU class.
+        let cfg = base();
+        let h100 = DeviceProfile::h100();
+        let r4090 = DeviceProfile::rtx4090();
+        let prefill = append_cost(&cfg, 1, 1024, 1024);
+        let decode = append_cost(&cfg, 1, 1, 2048);
+        let prefill_ratio = prefill.secs_on(&r4090) / prefill.secs_on(&h100);
+        let decode_ratio = decode.secs_on(&r4090) / decode.secs_on(&h100);
+        assert!(prefill_ratio > decode_ratio, "{prefill_ratio} {decode_ratio}");
+    }
+
+    #[test]
+    fn cost_add_accumulates() {
+        let mut a = PhaseCost { flops: 1.0, hbm_bytes: 2.0, pcie_bytes: 3.0 };
+        a.add(PhaseCost { flops: 10.0, hbm_bytes: 20.0, pcie_bytes: 30.0 });
+        assert_eq!(a, PhaseCost { flops: 11.0, hbm_bytes: 22.0, pcie_bytes: 33.0 });
+    }
+}

@@ -1,0 +1,250 @@
+//! Stand-in architectures: costing executed work traces at paper scale.
+//!
+//! Our executed configs (tiny/small/base) are scaled ~1000x below the
+//! paper's LLaMA models, and FLOPs shrink quadratically with width while
+//! KV bytes shrink linearly — so *directly* converting our FLOPs/bytes to
+//! H100 time would misplace every compute-vs-IO crossover. Instead the
+//! engine records an architecture-independent **work trace** (how many
+//! live tokens were appended against how much live context, and how many
+//! device invocations ran — see [`crate::coordinator::metrics::WorkTrace`]),
+//! and the benches cost that *same trace* under the real architecture
+//! each config stands in for (DESIGN.md "Substitutions"):
+//!
+//!   tiny → LLaMA 3.2 3B, small → LLaMA 3.1 8B, base → LLaMA 3.1 70B
+//!   (4-bit weights, as in the paper's H100 setup).
+
+use super::profiles::DeviceProfile;
+use super::roofline::PhaseCost;
+use crate::coordinator::metrics::WorkTrace;
+use crate::manifest::ModelConfig;
+
+/// Transformer architecture description sufficient for roofline costing.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub param_count: f64,
+    /// Bytes per weight streamed from HBM (2 = f16, 0.5 = 4-bit).
+    pub bytes_per_param: f64,
+    /// Bytes of KV cache per token (storage + HBM traffic).
+    pub kv_bytes_per_token: f64,
+    /// Per-batch-element software overhead of one decode step, seconds.
+    /// Calibrated from the paper's own measurements: Fig 5 (batch 1)
+    /// implies ~65 ms/step for the 4-bit 70B while Table IV (batch 8)
+    /// implies ~450 ms/step — jointly a ~15 ms roofline term plus ~50 ms
+    /// *per element* (HF transformers' dynamic-cache concat + bnb 4-bit
+    /// dequant are per-element costs). f16 models are far cheaper.
+    pub decode_elem_overhead_s: f64,
+}
+
+impl ArchSpec {
+    /// LLaMA 3.2 3B (f16) — the paper's small model.
+    pub fn llama_3b() -> Self {
+        ArchSpec {
+            name: "LLaMA-3.2-3B".into(),
+            n_layers: 28,
+            d_model: 3072,
+            n_heads: 24,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 8192,
+            vocab: 128_256,
+            param_count: 3.2e9,
+            bytes_per_param: 2.0,
+            kv_bytes_per_token: 28.0 * 2.0 * 8.0 * 128.0 * 2.0, // 114 KB (f16)
+            decode_elem_overhead_s: 0.003,
+        }
+    }
+
+    /// LLaMA 3.1 8B (f16).
+    pub fn llama_8b() -> Self {
+        ArchSpec {
+            name: "LLaMA-3.1-8B".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 14_336,
+            vocab: 128_256,
+            param_count: 8.0e9,
+            bytes_per_param: 2.0,
+            kv_bytes_per_token: 32.0 * 2.0 * 8.0 * 128.0 * 2.0, // 131 KB
+            decode_elem_overhead_s: 0.005,
+        }
+    }
+
+    /// LLaMA 3.1 70B, 4-bit quantized (the paper's single-H100 setup).
+    /// KV bytes calibrated to the paper's anchor (250 MB / 1,024 tokens).
+    pub fn llama_70b() -> Self {
+        ArchSpec {
+            name: "LLaMA-3.1-70B-4bit".into(),
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 28_672,
+            vocab: 128_256,
+            param_count: 70.0e9,
+            bytes_per_param: 0.5,
+            kv_bytes_per_token: 250e6 / 1024.0, // 244 KB (paper §II-C)
+            decode_elem_overhead_s: 0.05, // bnb-4bit per-element decode cost
+        }
+    }
+
+    /// The paper model each executed config stands in for.
+    pub fn standin_for(config_name: &str) -> Self {
+        match config_name {
+            "tiny" => Self::llama_3b(),
+            "small" => Self::llama_8b(),
+            _ => Self::llama_70b(),
+        }
+    }
+
+    /// Cost this architecture at our own (executed) scale.
+    pub fn from_config(cfg: &ModelConfig) -> Self {
+        ArchSpec {
+            name: cfg.name.clone(),
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim,
+            d_ff: cfg.d_ff,
+            vocab: cfg.vocab,
+            param_count: cfg.param_count as f64,
+            bytes_per_param: 4.0, // f32 artifacts
+            kv_bytes_per_token: cfg.kv_bytes_per_token as f64,
+            decode_elem_overhead_s: 0.0, // our rust stack has no per-elem cost
+        }
+    }
+
+    /// FLOPs per appended live token, excluding attention-context terms.
+    fn flops_per_token(&self) -> f64 {
+        let d = self.d_model as f64;
+        let hd = (self.n_heads * self.head_dim) as f64;
+        let hkv = (self.n_kv_heads * self.head_dim) as f64;
+        let f = self.d_ff as f64;
+        self.n_layers as f64 * 2.0 * (d * hd * 2.0 + d * hkv * 2.0 + 3.0 * d * f)
+            + 2.0 * d * self.vocab as f64
+    }
+
+    /// FLOPs per (token x live-context) unit of attention.
+    fn attn_flops_per_token_ctx(&self) -> f64 {
+        self.n_layers as f64 * 2.0 * 2.0 * (self.n_heads * self.head_dim) as f64
+    }
+
+    /// Roofline cost of an executed work trace under this architecture.
+    pub fn trace_cost(&self, t: &WorkTrace) -> PhaseCost {
+        PhaseCost {
+            flops: self.flops_per_token() * t.sum_s
+                + self.attn_flops_per_token_ctx() * t.sum_s_ctx,
+            hbm_bytes: t.steps * self.param_count * self.bytes_per_param
+                + t.sum_ctx * self.kv_bytes_per_token
+                + t.sum_s * self.d_model as f64 * 4.0 * 8.0, // activations
+            pcie_bytes: 0.0,
+        }
+    }
+
+    /// Seconds of device time for a prefill-class trace.
+    pub fn trace_secs(&self, t: &WorkTrace, dev: &DeviceProfile) -> f64 {
+        self.trace_cost(t).secs_on(dev)
+    }
+
+    /// Seconds of device time for a decode-class trace: bandwidth
+    /// roofline plus the calibrated per-element software overhead
+    /// (sum_s counts element-steps for S=1 decode traces).
+    pub fn trace_secs_decode(&self, t: &WorkTrace, dev: &DeviceProfile) -> f64 {
+        self.trace_cost(t).secs_on_decode(dev) + self.decode_elem_overhead_s * t.sum_s
+    }
+
+    /// Materialized KV bytes for a token count at this scale.
+    pub fn kv_bytes(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.kv_bytes_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::WorkTrace;
+    use crate::hwsim::DeviceProfile;
+
+    fn prefill_trace(tokens: usize) -> WorkTrace {
+        // one 1,024-token chunk prefilled in four 256 steps, batch 1
+        let mut t = WorkTrace::default();
+        let step = 256;
+        for i in 0..(tokens / step) {
+            t.record_step();
+            t.record_elem(step, (i + 1) * step);
+        }
+        t
+    }
+
+    #[test]
+    fn paper_anchor_70b_prefill_time() {
+        // §II-C: prefilling 1,024 tokens of LLaMA-70B on an H100 takes
+        // ~500 ms. Our roofline with the stand-in spec must land in the
+        // right regime (same order of magnitude).
+        let arch = ArchSpec::llama_70b();
+        let secs = arch.trace_secs(&prefill_trace(1024), &DeviceProfile::h100());
+        assert!((0.1..1.5).contains(&secs), "70B prefill {secs}s");
+    }
+
+    #[test]
+    fn paper_anchor_70b_kv_size() {
+        let arch = ArchSpec::llama_70b();
+        let mb = arch.kv_bytes(1024) / 1e6;
+        assert!((200.0..300.0).contains(&mb), "{mb} MB");
+    }
+
+    #[test]
+    fn prefill_compute_dominates_load_at_70b() {
+        // the inequality the whole paper rests on
+        let arch = ArchSpec::llama_70b();
+        let prefill = arch.trace_secs(&prefill_trace(1024), &DeviceProfile::h100());
+        let load = crate::hwsim::StorageProfile::ssd_9100pro()
+            .read_secs(arch.kv_bytes(1024) as usize);
+        assert!(prefill > 5.0 * load, "prefill {prefill} vs load {load}");
+    }
+
+    #[test]
+    fn benefit_grows_with_model_size() {
+        // Fig 9's shape: prefill/load ratio widens from 3B to 70B
+        let h100 = DeviceProfile::h100();
+        let ssd = crate::hwsim::StorageProfile::raid0_4x9100();
+        let ratio = |arch: &ArchSpec| {
+            arch.trace_secs(&prefill_trace(1024), &h100)
+                / ssd.read_secs(arch.kv_bytes(1024) as usize)
+        };
+        let r3 = ratio(&ArchSpec::llama_3b());
+        let r70 = ratio(&ArchSpec::llama_70b());
+        assert!(r70 > r3, "3B {r3} vs 70B {r70}");
+    }
+
+    #[test]
+    fn decode_memory_bound_on_both_gpus() {
+        // a decode trace: 20 steps, batch 8, ctx ~2100
+        let mut t = WorkTrace::default();
+        for _ in 0..20 {
+            t.record_step();
+            for _ in 0..8 {
+                t.record_elem(1, 2100);
+            }
+        }
+        let arch = ArchSpec::llama_70b();
+        let cost = arch.trace_cost(&t);
+        let h100 = DeviceProfile::h100();
+        assert!(
+            cost.hbm_bytes / (h100.hbm_bw * h100.membw_util)
+                > cost.flops / (h100.peak_flops * h100.mfu)
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Materialized-KV store: the flash-storage half of MatKV.
+//!
+//! Each document chunk's precomputed KV cache is one file
+//! (`<dir>/<chunk_id>.kv`) holding a fixed header plus contiguous f32
+//! `[n_layers, n_kv_heads, seq, head_dim]` K then V planes — the exact
+//! layout the rust runtime splices into the packed device state, so a
+//! load is: (simulated) flash read → bounce buffer → one
+//! `buffer_from_host` upload.
+//!
+//! Real SSD hardware is replaced by a [`DeviceThrottle`] (DESIGN.md
+//! "Substitutions"): reads/writes go through the filesystem (page cache —
+//! effectively DRAM speed) and then *wall-clock delay* is injected to
+//! match a [`StorageProfile`]'s bandwidth/latency, serialized across
+//! concurrent requests exactly like a shared device. Table III (single
+//! SSD vs RAID-0 vs DRAM) falls out of swapping profiles.
+
+pub mod store;
+pub mod throttle;
+
+pub use store::{KvChunk, KvStore, StoreStats};
+pub use throttle::DeviceThrottle;

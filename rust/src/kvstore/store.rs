@@ -1,0 +1,434 @@
+//! File-backed materialized-KV store with write-behind and throttled loads.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::throttle::DeviceThrottle;
+use crate::util::aio::{IoPool, Pending};
+use crate::hwsim::StorageProfile;
+use crate::manifest::ModelConfig;
+use crate::vectordb::ChunkId;
+
+const MAGIC: u32 = 0x4d41_544b; // "MATK"
+const VERSION: u32 = 1;
+const HEADER_BYTES: usize = 8 * 4;
+
+/// One chunk's materialized KV tensors (host side).
+///
+/// `k`/`v` are `[n_layers, n_kv_heads, seq_len, head_dim]` f32,
+/// row-major — the per-batch-element slice of the packed device cache, so
+/// assembly into a serve-time cache is pure memcpy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvChunk {
+    pub config_id: u32,
+    pub n_layers: u32,
+    pub n_kv_heads: u32,
+    pub seq_len: u32,
+    pub head_dim: u32,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvChunk {
+    pub fn plane_elems(&self) -> usize {
+        (self.n_layers * self.n_kv_heads * self.seq_len * self.head_dim) as usize
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        HEADER_BYTES + 8 * self.plane_elems()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.k.len() != self.plane_elems() || self.v.len() != self.plane_elems() {
+            bail!(
+                "KvChunk plane size mismatch: k={} v={} expect={}",
+                self.k.len(),
+                self.v.len(),
+                self.plane_elems()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Stable id for a model config (validated on load so a store produced by
+/// one model is never spliced into another).
+pub fn config_id(cfg: &ModelConfig) -> u32 {
+    let mut h: u32 = 2166136261;
+    for b in cfg.name.bytes() {
+        h = (h ^ b as u32).wrapping_mul(16777619);
+    }
+    h ^= (cfg.n_layers as u32) << 24 ^ (cfg.n_kv_heads as u32) << 16 ^ cfg.head_dim as u32;
+    h
+}
+
+/// Cumulative I/O counters.
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub reads: AtomicU64,
+    pub writes: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub deletes: AtomicU64,
+}
+
+/// The store: one directory per (deployment, model config).
+pub struct KvStore {
+    dir: PathBuf,
+    throttle: Arc<DeviceThrottle>,
+    pool: IoPool,
+    pub stats: StoreStats,
+}
+
+/// Result of a load: the chunk plus its simulated device time.
+#[derive(Debug)]
+pub struct Loaded {
+    pub chunk: KvChunk,
+    pub device_secs: f64,
+}
+
+impl KvStore {
+    /// Open (creating if needed) a store under `dir`, timed as `profile`.
+    pub fn open(dir: impl AsRef<Path>, profile: StorageProfile) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        Ok(KvStore {
+            dir,
+            throttle: Arc::new(DeviceThrottle::new(profile)),
+            pool: IoPool::new(4),
+            stats: StoreStats::default(),
+        })
+    }
+
+    /// Swap the simulated storage device (Table III sweeps this).
+    pub fn set_profile(&mut self, profile: StorageProfile) {
+        self.throttle = Arc::new(DeviceThrottle::new(profile));
+    }
+
+    /// Disable wall-clock throttling (pure-functional tests).
+    pub fn disable_throttle(&mut self) {
+        let profile = self.throttle.profile().clone();
+        let mut t = DeviceThrottle::new(profile);
+        t.enabled = false;
+        self.throttle = Arc::new(t);
+    }
+
+    pub fn profile(&self) -> &StorageProfile {
+        self.throttle.profile()
+    }
+
+    fn path_of(&self, id: ChunkId) -> PathBuf {
+        self.dir.join(format!("{id:016x}.kv"))
+    }
+
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.path_of(id).exists()
+    }
+
+    fn encode(chunk: &KvChunk) -> Vec<u8> {
+        let plane = chunk.plane_elems();
+        let mut buf = Vec::with_capacity(HEADER_BYTES + 8 * plane);
+        for word in [
+            MAGIC,
+            VERSION,
+            chunk.config_id,
+            chunk.n_layers,
+            chunk.n_kv_heads,
+            chunk.seq_len,
+            chunk.head_dim,
+            0, // reserved
+        ] {
+            buf.extend_from_slice(&word.to_le_bytes());
+        }
+        for plane_data in [&chunk.k, &chunk.v] {
+            // safety: f32 slice → bytes (LE on all supported targets)
+            let bytes = unsafe {
+                std::slice::from_raw_parts(plane_data.as_ptr() as *const u8, plane_data.len() * 4)
+            };
+            buf.extend_from_slice(bytes);
+        }
+        buf
+    }
+
+    fn decode(data: &[u8]) -> Result<KvChunk> {
+        if data.len() < HEADER_BYTES {
+            bail!("KV file truncated: {} bytes", data.len());
+        }
+        let word = |i: usize| u32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+        if word(0) != MAGIC {
+            bail!("bad KV magic {:#x}", word(0));
+        }
+        if word(1) != VERSION {
+            bail!("bad KV version {}", word(1));
+        }
+        let chunk = KvChunk {
+            config_id: word(2),
+            n_layers: word(3),
+            n_kv_heads: word(4),
+            seq_len: word(5),
+            head_dim: word(6),
+            k: Vec::new(),
+            v: Vec::new(),
+        };
+        let plane = chunk.plane_elems();
+        if data.len() != HEADER_BYTES + 8 * plane {
+            bail!("KV file size mismatch: {} vs {}", data.len(), HEADER_BYTES + 8 * plane);
+        }
+        let floats = |off: usize, n: usize| -> Vec<f32> {
+            let mut out = vec![0f32; n];
+            let src = &data[off..off + 4 * n];
+            // safety: copying LE bytes into f32s
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr() as *mut u8, 4 * n);
+            }
+            out
+        };
+        Ok(KvChunk {
+            k: floats(HEADER_BYTES, plane),
+            v: floats(HEADER_BYTES + 4 * plane, plane),
+            ..chunk
+        })
+    }
+
+    /// Synchronous materialization (throttled to the device profile).
+    pub fn store_sync(&self, id: ChunkId, chunk: &KvChunk) -> Result<f64> {
+        chunk.validate()?;
+        let buf = Self::encode(chunk);
+        let start = Instant::now();
+        std::fs::write(self.path_of(id), &buf)?;
+        let secs = self.throttle.charge_write(buf.len(), start.elapsed());
+        self.stats.writes.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(secs)
+    }
+
+    /// Write-behind materialization: returns immediately, the write runs
+    /// on the store's I/O pool (the role DeepNVMe's async_io plays in the
+    /// paper's prototype). Wait on the handle (or [`KvStore::drain`]) to
+    /// observe errors and the simulated device seconds.
+    pub fn store_async(&self, id: ChunkId, chunk: KvChunk) -> Pending<Result<f64>> {
+        chunk.validate().expect("invalid chunk");
+        let path = self.path_of(id);
+        let throttle = self.throttle.clone();
+        let buf = Self::encode(&chunk);
+        self.stats.writes.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.pool.submit(move || {
+            let start = Instant::now();
+            std::fs::write(&path, &buf)?;
+            Ok(throttle.charge_write(buf.len(), start.elapsed()))
+        })
+    }
+
+    /// Block until previously spawned async writes have finished; returns
+    /// the total simulated device-write seconds.
+    pub fn drain(&self, handles: Vec<Pending<Result<f64>>>) -> Result<f64> {
+        let mut total = 0.0;
+        for h in handles {
+            total += h.wait()?;
+        }
+        Ok(total)
+    }
+
+    /// Load one chunk (throttled). Returns the chunk and device seconds.
+    pub fn load(&self, id: ChunkId) -> Result<Loaded> {
+        let path = self.path_of(id);
+        let start = Instant::now();
+        let data = std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
+        let device_secs = self.throttle.charge_read(data.len(), start.elapsed());
+        self.stats.reads.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(Loaded { chunk: Self::decode(&data)?, device_secs })
+    }
+
+    /// Load many chunks concurrently (they still serialize on the
+    /// simulated device, like real parallel reads of one SSD).
+    pub fn load_many(&self, ids: &[ChunkId]) -> Result<Vec<Loaded>> {
+        let handles: Vec<Pending<Result<(Vec<u8>, f64)>>> = ids
+            .iter()
+            .map(|&id| {
+                let path = self.path_of(id);
+                let throttle = self.throttle.clone();
+                self.pool.submit(move || {
+                    let start = Instant::now();
+                    let data = std::fs::read(&path)
+                        .with_context(|| format!("loading KV {path:?}"))?;
+                    let device_secs = throttle.charge_read(data.len(), start.elapsed());
+                    Ok((data, device_secs))
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(ids.len());
+        for h in handles {
+            let (data, device_secs) = h.wait()?;
+            self.stats.reads.fetch_add(1, Ordering::Relaxed);
+            self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+            out.push(Loaded { chunk: Self::decode(&data)?, device_secs });
+        }
+        Ok(out)
+    }
+
+    /// Delete a chunk's materialized KV (vector-DB delete path).
+    pub fn delete(&self, id: ChunkId) -> Result<bool> {
+        match std::fs::remove_file(self.path_of(id)) {
+            Ok(()) => {
+                self.stats.deletes.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Number of materialized chunks on disk.
+    pub fn len(&self) -> Result<usize> {
+        Ok(std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "kv"))
+            .count())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Total bytes of materialized KV on disk (TCO accounting).
+    pub fn bytes_on_disk(&self) -> Result<u64> {
+        let mut total = 0;
+        for e in std::fs::read_dir(&self.dir)? {
+            let e = e?;
+            if e.path().extension().is_some_and(|x| x == "kv") {
+                total += e.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(seed: u32, seq: u32) -> KvChunk {
+        let plane = (2 * 2 * seq * 4) as usize;
+        KvChunk {
+            config_id: 0xabcd,
+            n_layers: 2,
+            n_kv_heads: 2,
+            seq_len: seq,
+            head_dim: 4,
+            k: (0..plane).map(|i| (i as f32) + seed as f32).collect(),
+            v: (0..plane).map(|i| -(i as f32) - seed as f32).collect(),
+        }
+    }
+
+    fn store() -> (crate::util::tempdir::TempDir, KvStore) {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-test").unwrap();
+        let mut s = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+        s.disable_throttle();
+        (dir, s)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (_d, s) = store();
+        let c = chunk(7, 16);
+        s.store_sync(42, &c).unwrap();
+        let loaded = s.load(42).unwrap();
+        assert_eq!(loaded.chunk, c);
+    }
+
+    #[test]
+    fn async_write_behind_roundtrip() {
+        let (_d, s) = store();
+        let c = chunk(9, 8);
+        let h = s.store_async(7, c.clone());
+        s.drain(vec![h]).unwrap();
+        assert_eq!(s.load(7).unwrap().chunk, c);
+    }
+
+    #[test]
+    fn load_many_preserves_order() {
+        let (_d, s) = store();
+        for i in 0..5u64 {
+            s.store_sync(i, &chunk(i as u32, 8)).unwrap();
+        }
+        let loaded = s.load_many(&[3, 1, 4]).unwrap();
+        assert_eq!(loaded[0].chunk.k[0], chunk(3, 8).k[0]);
+        assert_eq!(loaded[1].chunk.k[0], chunk(1, 8).k[0]);
+        assert_eq!(loaded[2].chunk.k[0], chunk(4, 8).k[0]);
+    }
+
+    #[test]
+    fn delete_and_contains() {
+        let (_d, s) = store();
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        assert!(s.contains(1));
+        assert!(s.delete(1).unwrap());
+        assert!(!s.contains(1));
+        assert!(!s.delete(1).unwrap());
+        assert!(s.load(1).is_err());
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let (_d, s) = store();
+        s.store_sync(5, &chunk(5, 8)).unwrap();
+        // truncate
+        let path = s.path_of(5);
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+        assert!(s.load(5).is_err());
+        // bad magic
+        let mut bad = data.clone();
+        bad[0] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(s.load(5).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (_d, s) = store();
+        let c = chunk(1, 8);
+        s.store_sync(1, &c).unwrap();
+        s.load(1).unwrap();
+        s.load(1).unwrap();
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats.writes.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats.bytes_read.load(Ordering::Relaxed), 2 * c.total_bytes() as u64);
+        assert_eq!(s.len().unwrap(), 1);
+        assert_eq!(s.bytes_on_disk().unwrap(), c.total_bytes() as u64);
+    }
+
+    #[test]
+    fn throttled_load_is_slower() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-thr").unwrap();
+        let slow = StorageProfile {
+            name: "slow".into(),
+            read_bw: 50e6,
+            write_bw: 1e12,
+            latency_s: 0.0,
+            power_active: 1.0,
+            power_idle: 0.0,
+            usd_per_byte: 0.0,
+        };
+        let s = KvStore::open(dir.path(), slow).unwrap();
+        let c = chunk(1, 256); // 2*2*256*4 *2 planes *4B = 64KB
+        s.store_sync(1, &c).unwrap();
+        let loaded = s.load(1).unwrap();
+        let expect = c.total_bytes() as f64 / 50e6;
+        assert!((loaded.device_secs - expect).abs() / expect < 0.3);
+    }
+
+    #[test]
+    fn size_validation() {
+        let mut c = chunk(1, 8);
+        c.k.pop();
+        let (_d, s) = store();
+        assert!(s.store_sync(1, &c).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Shared-device bandwidth/latency simulation.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::hwsim::StorageProfile;
+
+/// Serializes simulated transfer time across concurrent users of one
+/// storage device, like a real SSD's single internal bus.
+///
+/// Each transfer computes its device time from the profile, reserves a
+/// slot `[start, start+t)` after the device's current `busy_until`, and
+/// sleeps the caller until the slot ends (minus however long the real
+/// filesystem I/O already took). With an unthrottled profile (DRAM tier)
+/// this degenerates to a no-op.
+#[derive(Debug)]
+pub struct DeviceThrottle {
+    profile: StorageProfile,
+    busy_until: Mutex<Option<Instant>>,
+    /// Disable sleeping entirely (pure-functional tests).
+    pub enabled: bool,
+}
+
+impl DeviceThrottle {
+    pub fn new(profile: StorageProfile) -> Self {
+        DeviceThrottle { profile, busy_until: Mutex::new(None), enabled: true }
+    }
+
+    pub fn profile(&self) -> &StorageProfile {
+        &self.profile
+    }
+
+    fn reserve(&self, device_secs: f64) -> Instant {
+        let now = Instant::now();
+        let mut busy = self.busy_until.lock().unwrap();
+        let start = busy.filter(|b| *b > now).unwrap_or(now);
+        let end = start + Duration::from_secs_f64(device_secs);
+        *busy = Some(end);
+        end
+    }
+
+    /// Charge a read of `bytes`; returns the simulated device seconds.
+    /// `already_spent` is the real I/O time already consumed (subtracted
+    /// from the injected sleep so total wall time matches the profile).
+    pub fn charge_read(&self, bytes: usize, already_spent: Duration) -> f64 {
+        self.charge(self.profile.read_secs(bytes), already_spent)
+    }
+
+    /// Charge a write of `bytes`; returns the simulated device seconds.
+    pub fn charge_write(&self, bytes: usize, already_spent: Duration) -> f64 {
+        self.charge(self.profile.write_secs(bytes), already_spent)
+    }
+
+    fn charge(&self, device_secs: f64, already_spent: Duration) -> f64 {
+        if !self.enabled || !device_secs.is_finite() {
+            return device_secs;
+        }
+        let end = self.reserve((device_secs - already_spent.as_secs_f64()).max(0.0));
+        let now = Instant::now();
+        if end > now {
+            std::thread::sleep(end - now);
+        }
+        device_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn slow_profile(bw: f64) -> StorageProfile {
+        StorageProfile {
+            name: "test".into(),
+            read_bw: bw,
+            write_bw: bw,
+            latency_s: 0.0,
+            power_active: 1.0,
+            power_idle: 0.0,
+            usd_per_byte: 1e-9,
+        }
+    }
+
+    #[test]
+    fn read_takes_simulated_time() {
+        let t = DeviceThrottle::new(slow_profile(100e6)); // 100 MB/s
+        let start = Instant::now();
+        let secs = t.charge_read(10 << 20, Duration::ZERO); // 10 MB → 100ms
+        assert!((secs - 0.1048).abs() < 0.01, "{secs}");
+        assert!(start.elapsed().as_secs_f64() >= 0.09);
+    }
+
+    #[test]
+    fn concurrent_reads_serialize() {
+        // Two 5MB reads at 100MB/s on one device take ~100ms total, not 50.
+        let t = Arc::new(DeviceThrottle::new(slow_profile(100e6)));
+        let start = Instant::now();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || t.charge_read(5 << 20, Duration::ZERO))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        assert!(elapsed >= 0.09, "reads overlapped: {elapsed}");
+    }
+
+    #[test]
+    fn disabled_throttle_is_instant() {
+        let mut t = DeviceThrottle::new(slow_profile(1.0)); // absurdly slow
+        t.enabled = false;
+        let start = Instant::now();
+        t.charge_read(1 << 30, Duration::ZERO);
+        assert!(start.elapsed().as_millis() < 50);
+    }
+
+    #[test]
+    fn already_spent_is_credited() {
+        let t = DeviceThrottle::new(slow_profile(100e6));
+        let start = Instant::now();
+        // claim we already spent 95ms of the ~105ms budget
+        t.charge_read(10 << 20, Duration::from_millis(95));
+        assert!(start.elapsed().as_millis() < 60);
+    }
+
+    #[test]
+    fn infinite_bw_profile_never_sleeps() {
+        let t = DeviceThrottle::new(crate::hwsim::StorageProfile::dram());
+        let start = Instant::now();
+        for _ in 0..100 {
+            t.charge_read(1 << 30, Duration::ZERO);
+        }
+        assert!(start.elapsed().as_millis() < 100);
+    }
+}

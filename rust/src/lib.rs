@@ -1,0 +1,44 @@
+//! # MatKV — trading compute for flash storage in LLM inference
+//!
+//! Reproduction of *MatKV* (Shin et al., CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the ingest
+//!   pipeline that materializes document KV caches to flash, the serve
+//!   path that loads them instead of recomputing prefill, dynamic
+//!   batching, the decode/IO overlap pipeline, the Vanilla and
+//!   CacheBlend-style baselines, plus every substrate they need (vector
+//!   DB, KV store with storage-device simulation, tokenizer, workload
+//!   generation, hardware/energy/economics models).
+//! * **L2 (python/compile, build-time)** — a LLaMA-architecture model in
+//!   JAX whose single packed-state entry point serves chunked prefill,
+//!   query sub-prefill over loaded KVs, and decode; AOT-lowered to HLO
+//!   text per (config, S, B, C) bucket.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas flash-attention
+//!   and RMSNorm kernels lowered into the same HLO.
+//!
+//! At serving time only this crate runs: [`runtime`] loads the AOT
+//! artifacts through the PJRT CPU client (`xla` crate) and the decode
+//! loop stays device-resident via packed-state buffer feedback.
+
+pub mod coordinator;
+pub mod hwsim;
+pub mod util;
+pub mod kvstore;
+pub mod manifest;
+pub mod runtime;
+pub mod tokenizer;
+pub mod vectordb;
+pub mod workload;
+
+pub use manifest::{Manifest, ModelConfig};
+
+/// Convenience result alias used across the crate.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory: `$MATKV_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MATKV_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

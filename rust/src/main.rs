@@ -1,0 +1,169 @@
+//! `matkv` — leader binary: CLI over the MatKV serving stack.
+//!
+//! ```text
+//! matkv info                         # manifest / artifact summary
+//! matkv serve --config tiny ...      # synthetic RAG workload end-to-end
+//! matkv economics                    # ten-day rule + Fig 1 trend
+//! ```
+
+use anyhow::Result;
+
+use matkv::coordinator::baselines::cacheblend_mode;
+use matkv::coordinator::{serve_overlapped, Engine, EngineOptions, ServeMode};
+use matkv::hwsim::economics::fig1_trend;
+use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
+use matkv::kvstore::KvStore;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::workload::{Corpus, RequestGen, TurboRagProfile};
+use matkv::Manifest;
+
+const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
+  serve flags: --config tiny|small|base --requests N --batch B --docs N
+               --doc-tokens N --mode matkv|vanilla|cacheblend --overlap
+               --storage 9100pro|raid0|pm9a3|dram --kv-dir PATH";
+
+fn storage_profile(name: &str) -> Result<StorageProfile> {
+    Ok(match name {
+        "9100pro" => StorageProfile::ssd_9100pro(),
+        "raid0" => StorageProfile::raid0_4x9100(),
+        "pm9a3" => StorageProfile::ssd_pm9a3(),
+        "dram" => StorageProfile::dram(),
+        other => anyhow::bail!("unknown storage profile {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    match args.command.as_deref() {
+        Some("info") => info(),
+        Some("serve") => serve(&args),
+        Some("economics") => economics(),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let m = Manifest::load(matkv::artifacts_dir())?;
+    println!("manifest v{} — chunk={} query_bucket={}", m.version, m.chunk_tokens, m.query_bucket);
+    for (name, cfg) in &m.configs {
+        println!(
+            "  {name:6} L={} d={} heads={}/{} ctx={} params={:.1}M artifacts={} kv/tok={}B",
+            cfg.n_layers,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.max_ctx,
+            cfg.param_count as f64 / 1e6,
+            cfg.artifacts.len(),
+            cfg.kv_bytes_per_token,
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let config = args.str("config", "tiny");
+    let requests = args.usize("requests", 16);
+    let batch = args.usize("batch", 4);
+    let docs = args.usize("docs", 24);
+    let doc_tokens = args.usize("doc-tokens", 512);
+    let mode_name = args.str("mode", "matkv");
+    let overlap = args.flag("overlap");
+
+    let m = Manifest::load(matkv::artifacts_dir())?;
+    let corpus = Corpus::generate(docs, doc_tokens, docs.min(16), 42);
+    let _tmp;
+    let dir = match args.opt("kv-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => {
+            let t = TempDir::new("matkv-serve")?;
+            let p = t.path().to_path_buf();
+            _tmp = t;
+            p
+        }
+    };
+    let kv = KvStore::open(&dir, storage_profile(&args.str("storage", "9100pro"))?)?;
+    let opts = EngineOptions::for_config(&m, &config)?;
+    let engine = Engine::new(&m, opts, kv, corpus.texts())?;
+
+    eprintln!("[ingest] {docs} docs x {doc_tokens} tokens ...");
+    let ing = engine.ingest_corpus(&corpus, doc_tokens)?;
+    eprintln!(
+        "[ingest] prefill {:.2}s, materialized {:.1} MB (sim write {:.3}s)",
+        ing.prefill_wall_secs,
+        ing.materialized_bytes as f64 / 1e6,
+        ing.write_device_secs
+    );
+
+    let mut gen = RequestGen::new(TurboRagProfile::default(), corpus.n_topics, 1.0, 7);
+    let reqs = gen.take(&corpus, requests);
+    let serve_mode = match mode_name.as_str() {
+        "matkv" => ServeMode::MatKv,
+        "vanilla" => ServeMode::Vanilla,
+        "cacheblend" => cacheblend_mode(doc_tokens),
+        other => anyhow::bail!("unknown mode {other}"),
+    };
+
+    let (responses, metrics) = if overlap {
+        let (r, m2, rep) = serve_overlapped(&engine, &reqs, batch, serve_mode)?;
+        eprintln!(
+            "[overlap] loader busy {:.2}s, exec busy {:.2}s, stalls {:.3}s",
+            rep.loader_busy_secs, rep.exec_busy_secs, rep.exec_stall_secs
+        );
+        (r, m2)
+    } else {
+        engine.serve_all(&reqs, batch, serve_mode)?
+    };
+
+    let h100 = DeviceProfile::h100();
+    let arch = ArchSpec::standin_for(&config);
+    let storage = storage_profile(&args.str("storage", "9100pro"))?;
+    println!("mode={mode_name} overlap={overlap} requests={} batch={batch}", responses.len());
+    println!(
+        "measured: total {:.2}s | retrieve {:.3}s | load {:.3}s | prefill {:.3}s | decode {:.3}s | {:.1} tok/s",
+        metrics.total_wall_secs,
+        metrics.retrieve_secs,
+        metrics.load_wall_secs,
+        metrics.prefill_wall_secs,
+        metrics.decode_wall_secs,
+        metrics.throughput()
+    );
+    println!(
+        "simulated H100 @ {} scale: load {:.4}s | prefill {:.4}s | decode {:.4}s | total {:.4}s",
+        arch.name,
+        metrics.load_secs_on(&arch, &storage),
+        metrics.prefill_secs_on(&arch, &h100),
+        metrics.decode_secs_on(&arch, &h100),
+        metrics.total_secs_on(&arch, &h100, &storage)
+    );
+    for r in responses.iter().take(2) {
+        println!("  req {} -> {:?} (docs {:?})", r.request_id, r.text, r.retrieved);
+    }
+    Ok(())
+}
+
+fn economics() -> Result<()> {
+    let rule = TenDayRule::paper_anchor();
+    println!("Ten-day rule (paper anchor: LLaMA-70B/1024 tok, H100 vs 9100 Pro)");
+    println!("  recompute cost : ${:.6}/access", rule.recompute_cost_usd());
+    println!("  storage cost   : ${:.4} for {} MB", rule.storage_cost_usd(), rule.kv_bytes >> 20);
+    println!("  break-even     : {:.1} days", rule.break_even_days());
+    println!(
+        "  @1/hour access : {:.0}x cheaper, {:.0}x lower prefill latency",
+        rule.cost_ratio_at_interval(3600.0),
+        rule.latency_ratio()
+    );
+    println!("\nFig 1 — cost/performance trend:");
+    println!("  year  gpu    TFLOPs/k$   ssd      GB/s/(k$/TB)  GB/$");
+    for r in fig1_trend() {
+        println!(
+            "  {}  {:6} {:9.1}   {:8} {:10.1}  {:6.1}",
+            r.year, r.gpu, r.gpu_tflops_per_kusd, r.ssd, r.ssd_gbps_per_kusd_tb, r.ssd_gb_per_usd
+        );
+    }
+    Ok(())
+}

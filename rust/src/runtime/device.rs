@@ -1,0 +1,124 @@
+//! Thin wrapper over the PJRT CPU client with typed upload/download
+//! helpers. All device objects live on the thread that created them; the
+//! overlap pipeline keeps device work on the executor thread and only
+//! stages host memory on the loader thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// The PJRT device (CPU plugin in this testbed).
+pub struct Device {
+    client: PjRtClient,
+    /// Compiled `state[0:n]` slice readers, keyed by (total, n) — see
+    /// [`Device::read_prefix_f32`].
+    prefix_readers: RefCell<HashMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Device {
+    pub fn cpu() -> Result<Self> {
+        Ok(Device {
+            client: PjRtClient::cpu().context("creating PJRT CPU client")?,
+            prefix_readers: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into a loaded executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))
+    }
+
+    /// Upload an f32 tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Download a whole f32 buffer.
+    pub fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit: Literal = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Read the first `n` f32 elements of a buffer without transferring
+    /// the rest (the per-step logits read of the packed state).
+    ///
+    /// xla_extension 0.5.1's TFRT CPU client does not implement
+    /// `CopyRawToHost`, so this goes through a compiled slice computation
+    /// (see [`Device::compile_prefix_reader`]) executed on-device: only
+    /// the tiny slice output is transferred to host.
+    pub fn read_prefix_f32(&self, buf: &PjRtBuffer, n: usize) -> Result<Vec<f32>> {
+        let total = xla::ArrayShape::try_from(&buf.on_device_shape()?)?.element_count();
+        if total == n {
+            let lit: Literal = buf.to_literal_sync()?;
+            return Ok(lit.to_vec::<f32>()?);
+        }
+        let exe = self.prefix_reader(total, n)?;
+        let result = exe.execute_b(&[buf])?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Compiled (and cached) `f(state f32[total]) -> state[0:n]`.
+    fn prefix_reader(&self, total: usize, n: usize) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.prefix_readers.borrow().get(&(total, n)) {
+            return Ok(e.clone());
+        }
+        let builder = xla::XlaBuilder::new("prefix_reader");
+        let param = builder
+            .parameter(0, xla::ElementType::F32, &[total as i64], "state")
+            .map_err(|e| anyhow::anyhow!("builder parameter: {e}"))?;
+        let sliced =
+            param.slice_in_dim1(0, n as i64, 0).map_err(|e| anyhow::anyhow!("slice: {e}"))?;
+        let comp = builder.build(&sliced).map_err(|e| anyhow::anyhow!("build: {e}"))?;
+        let exe = Rc::new(
+            self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile prefix reader: {e}"))?,
+        );
+        self.prefix_readers.borrow_mut().insert((total, n), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let d = Device::cpu().unwrap();
+        let data: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let buf = d.upload_f32(&data, &[4, 6]).unwrap();
+        assert_eq!(d.download_f32(&buf).unwrap(), data);
+    }
+
+    #[test]
+    fn prefix_read_matches_full() {
+        let d = Device::cpu().unwrap();
+        let data: Vec<f32> = (0..1000).map(|x| (x as f32).sin()).collect();
+        let buf = d.upload_f32(&data, &[1000]).unwrap();
+        let head = d.read_prefix_f32(&buf, 10).unwrap();
+        assert_eq!(&head, &data[..10]);
+    }
+
+    #[test]
+    fn i32_upload() {
+        let d = Device::cpu().unwrap();
+        let buf = d.upload_i32(&[1, 2, 3], &[1, 3]).unwrap();
+        let lit: Literal = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on the
+//! CPU PJRT client via the `xla` crate.
+//!
+//! Hot-path design (see python/compile/model.py `state_layout`): every
+//! entry point is a *packed-state* computation — one flat f32 output that
+//! rust feeds straight back into the next `execute_b` call, so the KV
+//! cache never leaves the device during chunked prefill or decode; only
+//! the `B*vocab` logits prefix is copied to host per step for sampling.
+//!
+//! Weights are uploaded once per config at session creation and shared by
+//! every entry point (python exports them in `PARAM_ORDER`).
+
+pub mod device;
+pub mod session;
+pub mod state;
+pub mod weights;
+
+pub use device::Device;
+pub use session::{ModelSession, StepStats};
+pub use state::HostState;

@@ -1,0 +1,285 @@
+//! A compiled model session: weights resident on device, entry points
+//! lazily compiled per (S, B, C) bucket, packed-state stepping.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
+
+use super::device::Device;
+use super::state::HostState;
+use super::weights::load_weights;
+use crate::manifest::{Manifest, ModelConfig};
+
+/// A packed state resident on device, tagged with its bucket shape.
+pub struct StateBuf {
+    pub buf: PjRtBuffer,
+    pub batch: usize,
+    pub max_ctx: usize,
+}
+
+/// Cumulative execution statistics (profiling/bench input).
+#[derive(Debug, Default, Clone)]
+pub struct StepStats {
+    pub steps: u64,
+    pub execute_secs: f64,
+    pub compile_secs: f64,
+    pub upload_secs: f64,
+    pub logits_read_secs: f64,
+}
+
+/// One model config loaded on one PJRT device.
+pub struct ModelSession {
+    dev: Device,
+    cfg: ModelConfig,
+    weights: Vec<PjRtBuffer>,
+    exes: RefCell<HashMap<(usize, usize, usize), Rc<PjRtLoadedExecutable>>>,
+    artifact_paths: HashMap<(usize, usize, usize), std::path::PathBuf>,
+    pub stats: RefCell<StepStats>,
+}
+
+impl ModelSession {
+    /// Create a session: PJRT client + weight upload (entry points compile
+    /// lazily on first use).
+    pub fn new(manifest: &Manifest, config_name: &str) -> Result<Self> {
+        let dev = Device::cpu()?;
+        let cfg = manifest.config(config_name)?.clone();
+        let weights = load_weights(&dev, manifest, &cfg)?;
+        let artifact_paths = cfg
+            .artifacts
+            .iter()
+            .map(|a| ((a.s, a.b, a.c), manifest.path(&a.file)))
+            .collect();
+        Ok(ModelSession {
+            dev,
+            cfg,
+            weights,
+            exes: RefCell::new(HashMap::new()),
+            artifact_paths,
+            stats: RefCell::new(StepStats::default()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.dev
+    }
+
+    /// Lazily compile (and cache) the (s, b, c) entry point.
+    pub fn executable(&self, s: usize, b: usize, c: usize) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&(s, b, c)) {
+            return Ok(e.clone());
+        }
+        let path = self
+            .artifact_paths
+            .get(&(s, b, c))
+            .with_context(|| format!("no artifact for s={s} b={b} c={c} ({})", self.cfg.name))?;
+        let start = Instant::now();
+        let exe = Rc::new(self.dev.compile_hlo_text(path)?);
+        self.stats.borrow_mut().compile_secs += start.elapsed().as_secs_f64();
+        self.exes.borrow_mut().insert((s, b, c), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of buckets (hides compile latency from benches).
+    pub fn warmup(&self, buckets: &[(usize, usize, usize)]) -> Result<()> {
+        for &(s, b, c) in buckets {
+            self.executable(s, b, c)?;
+        }
+        Ok(())
+    }
+
+    /// Upload a host-staged state.
+    pub fn upload_state(&self, st: &HostState) -> Result<StateBuf> {
+        let start = Instant::now();
+        let buf = self.dev.upload_f32(&st.data, &[st.total_elems()])?;
+        self.stats.borrow_mut().upload_secs += start.elapsed().as_secs_f64();
+        Ok(StateBuf { buf, batch: st.batch, max_ctx: st.max_ctx })
+    }
+
+    /// Fresh zero state on device for a (batch, ctx) bucket.
+    pub fn zero_state(&self, batch: usize, max_ctx: usize) -> Result<StateBuf> {
+        self.upload_state(&HostState::zeros(&self.cfg, batch, max_ctx))
+    }
+
+    /// Download a device state into host form.
+    pub fn download_state(&self, st: &StateBuf) -> Result<HostState> {
+        let data = self.dev.download_f32(&st.buf)?;
+        HostState::from_vec(&self.cfg, st.batch, st.max_ctx, data)
+    }
+
+    /// One append step: S-bucket chosen by `tokens.len() / batch`.
+    ///
+    /// `tokens` is row-major `[batch, s]` (pad with any id beyond
+    /// `qlen[b]`), `qlen[b]` ∈ 1..=s live tokens, `cache_len[b]` the live
+    /// cache length before this call. Consumes and returns the device
+    /// state; the old state buffer remains valid (functional update) and
+    /// is dropped by the caller going out of scope.
+    pub fn step(
+        &self,
+        tokens: &[i32],
+        qlen: &[i32],
+        cache_len: &[i32],
+        state: &StateBuf,
+    ) -> Result<StateBuf> {
+        let b = state.batch;
+        if tokens.len() % b != 0 || qlen.len() != b || cache_len.len() != b {
+            bail!("step arg shapes inconsistent with batch {b}");
+        }
+        let s = tokens.len() / b;
+        let exe = self.executable(s, b, state.max_ctx)?;
+        let tok_buf = self.dev.upload_i32(tokens, &[b, s])?;
+        let qlen_buf = self.dev.upload_i32(qlen, &[b])?;
+        let clen_buf = self.dev.upload_i32(cache_len, &[b])?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&qlen_buf);
+        args.push(&clen_buf);
+        args.push(&state.buf);
+        let start = Instant::now();
+        let mut out = exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.execute_secs += start.elapsed().as_secs_f64();
+            st.steps += 1;
+        }
+        let buf = out
+            .pop()
+            .and_then(|mut replica| if replica.len() == 1 { replica.pop() } else { None })
+            .context("expected exactly one output buffer (packed state)")?;
+        Ok(StateBuf { buf, batch: b, max_ctx: state.max_ctx })
+    }
+
+    /// Read the `[batch, vocab]` logits prefix of a device state.
+    pub fn read_logits(&self, state: &StateBuf) -> Result<Vec<f32>> {
+        let start = Instant::now();
+        let out = self.dev.read_prefix_f32(&state.buf, state.batch * self.cfg.vocab)?;
+        self.stats.borrow_mut().logits_read_secs += start.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::state::argmax;
+
+    fn session() -> ModelSession {
+        let m = Manifest::load(crate::artifacts_dir()).unwrap();
+        ModelSession::new(&m, "tiny").unwrap()
+    }
+
+    #[test]
+    fn golden_numerics_match_python() {
+        // Cross-language handshake: replay artifacts/<cfg>/golden.json.
+        use crate::util::json::Json;
+        let m = Manifest::load(crate::artifacts_dir()).unwrap();
+        for name in ["tiny", "small"] {
+            let sess = ModelSession::new(&m, name).unwrap();
+            let golden = Json::parse(
+                &std::fs::read_to_string(m.path(&format!("{name}/golden.json"))).unwrap(),
+            )
+            .unwrap();
+            let s = golden.get("s").unwrap().as_usize().unwrap();
+            let c = golden.get("c").unwrap().as_usize().unwrap();
+            let tokens: Vec<i32> = golden
+                .get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_f64().unwrap() as i32)
+                .collect();
+            assert_eq!(tokens.len(), s);
+            let qlen = golden.get("qlen").unwrap().as_f64().unwrap() as i32;
+            let state = sess.zero_state(1, c).unwrap();
+            let out = sess.step(&tokens, &[qlen], &[0], &state).unwrap();
+            let logits = sess.read_logits(&out).unwrap();
+            let expect: Vec<f64> = golden
+                .get("logits_head")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect();
+            for (i, e) in expect.iter().enumerate() {
+                assert!(
+                    (logits[i] as f64 - e).abs() < 1e-3 * e.abs().max(1.0),
+                    "{name} logit {i}: {} vs {e}",
+                    logits[i]
+                );
+            }
+            let am = golden.get("argmax").unwrap().as_usize().unwrap();
+            assert_eq!(argmax(&logits[..sess.config().vocab]), am, "{name} argmax");
+        }
+    }
+
+    #[test]
+    fn state_feedback_roundtrip() {
+        // two chunked steps == python invariant (indirectly): just check
+        // the state can be fed back and logits change deterministically
+        let sess = session();
+        let c = sess.config().max_ctx;
+        let state = sess.zero_state(1, c).unwrap();
+        let t1: Vec<i32> = (0..32).map(|i| (i * 3) % 512).collect();
+        let s1 = sess.step(&t1, &[32], &[0], &state).unwrap();
+        let l1 = sess.read_logits(&s1).unwrap();
+        let s2 = sess.step(&t1, &[32], &[32], &s1).unwrap();
+        let l2 = sess.read_logits(&s2).unwrap();
+        assert_ne!(l1, l2);
+        // replay determinism
+        let state_b = sess.zero_state(1, c).unwrap();
+        let s1b = sess.step(&t1, &[32], &[0], &state_b).unwrap();
+        assert_eq!(l1, sess.read_logits(&s1b).unwrap());
+    }
+
+    #[test]
+    fn decode_bucket_s1() {
+        let sess = session();
+        let c = sess.config().max_ctx;
+        let state = sess.zero_state(1, c).unwrap();
+        let s1 = sess.step(&[7], &[1], &[0], &state).unwrap();
+        let logits = sess.read_logits(&s1).unwrap();
+        assert_eq!(logits.len(), 512);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn batch4_independent_elements() {
+        let sess = session();
+        let c = sess.config().max_ctx;
+        let state = sess.zero_state(4, c).unwrap();
+        // element 0 and 2 get identical tokens — identical logits expected
+        let mut tokens = vec![0i32; 4 * 32];
+        for i in 0..32 {
+            tokens[i] = (i as i32 * 5) % 512; // b0
+            tokens[2 * 32 + i] = (i as i32 * 5) % 512; // b2
+            tokens[32 + i] = (i as i32 * 11 + 3) % 512; // b1
+            tokens[3 * 32 + i] = (i as i32 * 13 + 7) % 512; // b3
+        }
+        let out = sess.step(&tokens, &[32; 4], &[0; 4], &state).unwrap();
+        let logits = sess.read_logits(&out).unwrap();
+        let v = sess.config().vocab;
+        assert_eq!(&logits[..v], &logits[2 * v..3 * v]);
+        assert_ne!(&logits[..v], &logits[v..2 * v]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let sess = session();
+        let c = sess.config().max_ctx;
+        let state = sess.zero_state(1, c).unwrap();
+        let _ = sess.step(&[1], &[1], &[0], &state).unwrap();
+        let st = sess.stats.borrow();
+        assert_eq!(st.steps, 1);
+        assert!(st.execute_secs > 0.0);
+        assert!(st.compile_secs > 0.0);
+    }
+}

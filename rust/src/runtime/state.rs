@@ -1,0 +1,216 @@
+//! Host-side packed-state assembly.
+//!
+//! Mirrors python/compile/model.py `state_layout`: a packed state is
+//! `[logits (B*V) ; kcache (L,B,Hkv,C,D) ; vcache (L,B,Hkv,C,D)]` flat
+//! f32. This module does the memcpy choreography between that layout and
+//! the per-chunk `[L,Hkv,seq,D]` planes the KV store materializes.
+
+use anyhow::{bail, Result};
+
+use crate::kvstore::KvChunk;
+use crate::manifest::ModelConfig;
+
+/// A packed state staged in host memory (before upload / after download).
+#[derive(Debug, Clone)]
+pub struct HostState {
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub max_ctx: usize,
+    pub logits_n: usize,
+    pub cache_n: usize,
+    // architecture copies for offset math
+    n_layers: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+}
+
+impl HostState {
+    /// Fresh all-zero state for a (config, batch, ctx) bucket.
+    pub fn zeros(cfg: &ModelConfig, batch: usize, max_ctx: usize) -> Self {
+        let logits_n = batch * cfg.vocab;
+        let cache_n = cfg.n_layers * batch * cfg.n_kv_heads * max_ctx * cfg.head_dim;
+        HostState {
+            data: vec![0f32; logits_n + 2 * cache_n],
+            batch,
+            max_ctx,
+            logits_n,
+            cache_n,
+            n_layers: cfg.n_layers,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim,
+        }
+    }
+
+    /// Wrap a downloaded state vector.
+    pub fn from_vec(cfg: &ModelConfig, batch: usize, max_ctx: usize, data: Vec<f32>) -> Result<Self> {
+        let mut s = Self::zeros(cfg, batch, max_ctx);
+        if data.len() != s.data.len() {
+            bail!("state size mismatch: {} vs {}", data.len(), s.data.len());
+        }
+        s.data = data;
+        Ok(s)
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.logits_n + 2 * self.cache_n
+    }
+
+    /// Flat offset of cache position (plane, l, b, h, slot) where plane
+    /// 0 = K, 1 = V; points at a contiguous `head_dim` run.
+    #[inline]
+    fn off(&self, plane: usize, l: usize, b: usize, h: usize, slot: usize) -> usize {
+        self.logits_n
+            + plane * self.cache_n
+            + ((((l * self.batch + b) * self.n_kv_heads + h) * self.max_ctx) + slot) * self.head_dim
+    }
+
+    /// Splice a materialized chunk's KV planes into batch element `b`
+    /// starting at cache slot `slot`. Chunk planes are `[L,Hkv,seq,D]`.
+    pub fn splice_chunk(&mut self, b: usize, slot: usize, chunk: &KvChunk) -> Result<()> {
+        let (l_n, h_n, seq, d) = (
+            chunk.n_layers as usize,
+            chunk.n_kv_heads as usize,
+            chunk.seq_len as usize,
+            chunk.head_dim as usize,
+        );
+        if l_n != self.n_layers || h_n != self.n_kv_heads || d != self.head_dim {
+            bail!("chunk/config shape mismatch");
+        }
+        if slot + seq > self.max_ctx {
+            bail!("chunk of {seq} tokens does not fit at slot {slot} (C={})", self.max_ctx);
+        }
+        if b >= self.batch {
+            bail!("batch index {b} out of range {}", self.batch);
+        }
+        let run = seq * d;
+        for (plane, src_all) in [(0, &chunk.k), (1, &chunk.v)] {
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let src = &src_all[(l * h_n + h) * run..(l * h_n + h + 1) * run];
+                    let dst_off = self.off(plane, l, b, h, slot);
+                    self.data[dst_off..dst_off + run].copy_from_slice(src);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract `[slot, slot+seq)` of batch element `b` as a KV chunk
+    /// (the materialization path after an ingest prefill).
+    pub fn extract_chunk(&self, cfg_id: u32, b: usize, slot: usize, seq: usize) -> KvChunk {
+        assert!(slot + seq <= self.max_ctx && b < self.batch);
+        let run = seq * self.head_dim;
+        let plane_elems = self.n_layers * self.n_kv_heads * run;
+        let mut k = Vec::with_capacity(plane_elems);
+        let mut v = Vec::with_capacity(plane_elems);
+        for (plane, dst) in [(0, &mut k), (1, &mut v)] {
+            for l in 0..self.n_layers {
+                for h in 0..self.n_kv_heads {
+                    let off = self.off(plane, l, b, h, slot);
+                    dst.extend_from_slice(&self.data[off..off + run]);
+                }
+            }
+        }
+        KvChunk {
+            config_id: cfg_id,
+            n_layers: self.n_layers as u32,
+            n_kv_heads: self.n_kv_heads as u32,
+            seq_len: seq as u32,
+            head_dim: self.head_dim as u32,
+            k,
+            v,
+        }
+    }
+
+    /// The logits of batch element `b` (from a downloaded state).
+    pub fn logits(&self, b: usize) -> &[f32] {
+        let v = self.logits_n / self.batch;
+        &self.data[b * v..(b + 1) * v]
+    }
+}
+
+/// Greedy-argmax over one element's logits.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::MIN;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    fn cfg() -> ModelConfig {
+        Manifest::load(crate::artifacts_dir()).unwrap().config("tiny").unwrap().clone()
+    }
+
+    fn test_chunk(cfg: &ModelConfig, seq: usize, seed: f32) -> KvChunk {
+        let plane = cfg.n_layers * cfg.n_kv_heads * seq * cfg.head_dim;
+        KvChunk {
+            config_id: 1,
+            n_layers: cfg.n_layers as u32,
+            n_kv_heads: cfg.n_kv_heads as u32,
+            seq_len: seq as u32,
+            head_dim: cfg.head_dim as u32,
+            k: (0..plane).map(|i| i as f32 + seed).collect(),
+            v: (0..plane).map(|i| -(i as f32) - seed).collect(),
+        }
+    }
+
+    #[test]
+    fn splice_then_extract_roundtrip() {
+        let cfg = cfg();
+        let mut st = HostState::zeros(&cfg, 2, 512);
+        let chunk = test_chunk(&cfg, 64, 5.0);
+        st.splice_chunk(1, 128, &chunk).unwrap();
+        let back = st.extract_chunk(1, 1, 128, 64);
+        assert_eq!(back.k, chunk.k);
+        assert_eq!(back.v, chunk.v);
+        // other element untouched
+        let other = st.extract_chunk(1, 0, 128, 64);
+        assert!(other.k.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn adjacent_chunks_dont_overlap() {
+        let cfg = cfg();
+        let mut st = HostState::zeros(&cfg, 1, 512);
+        let a = test_chunk(&cfg, 32, 1.0);
+        let b = test_chunk(&cfg, 32, 1000.0);
+        st.splice_chunk(0, 0, &a).unwrap();
+        st.splice_chunk(0, 32, &b).unwrap();
+        assert_eq!(st.extract_chunk(1, 0, 0, 32).k, a.k);
+        assert_eq!(st.extract_chunk(1, 0, 32, 32).k, b.k);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let cfg = cfg();
+        let mut st = HostState::zeros(&cfg, 1, 128);
+        let chunk = test_chunk(&cfg, 64, 0.0);
+        assert!(st.splice_chunk(0, 100, &chunk).is_err()); // overflows C
+        assert!(st.splice_chunk(1, 0, &chunk).is_err()); // bad batch idx
+    }
+
+    #[test]
+    fn logits_view() {
+        let cfg = cfg();
+        let mut st = HostState::zeros(&cfg, 2, 128);
+        st.data[cfg.vocab] = 42.0; // element 1, logit 0
+        assert_eq!(st.logits(1)[0], 42.0);
+        assert_eq!(st.logits(0)[0], 0.0);
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.0, 3.0, -1.0, 3.0]), 1); // first max wins
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Weight loading: raw f32 blobs (python `aot.export_weights`) → device
+//! buffers, uploaded once per session in `PARAM_ORDER`.
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use super::device::Device;
+use crate::manifest::{Manifest, ModelConfig};
+
+/// Read one weight blob into host memory.
+pub fn read_blob(path: &std::path::Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading weight {path:?}"))?;
+    if bytes.len() != expect_elems * 4 {
+        bail!("weight {path:?}: {} bytes, expected {}", bytes.len(), expect_elems * 4);
+    }
+    let mut out = vec![0f32; expect_elems];
+    // safety: plain LE f32 copy
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+    }
+    Ok(out)
+}
+
+/// Upload all weights of a config in manifest `param_order`.
+pub fn load_weights(dev: &Device, m: &Manifest, cfg: &ModelConfig) -> Result<Vec<PjRtBuffer>> {
+    let mut by_name: std::collections::HashMap<&str, &crate::manifest::WeightEntry> =
+        cfg.weights.iter().map(|w| (w.name.as_str(), w)).collect();
+    let mut out = Vec::with_capacity(m.param_order.len());
+    for name in &m.param_order {
+        let w = by_name
+            .remove(name.as_str())
+            .with_context(|| format!("weight {name} missing from manifest for {}", cfg.name))?;
+        let elems: usize = w.shape.iter().product();
+        let host = read_blob(&m.weight_path(cfg, w), elems)?;
+        out.push(dev.upload_f32(&host, &w.shape)?);
+    }
+    if !by_name.is_empty() {
+        bail!("unconsumed weights: {:?}", by_name.keys().collect::<Vec<_>>());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_all_configs() {
+        let m = Manifest::load(crate::artifacts_dir()).unwrap();
+        let dev = Device::cpu().unwrap();
+        for name in ["tiny", "small"] {
+            let cfg = m.config(name).unwrap();
+            let bufs = load_weights(&dev, &m, cfg).unwrap();
+            assert_eq!(bufs.len(), m.param_order.len());
+        }
+    }
+
+    #[test]
+    fn blob_size_validated() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-weights-test").unwrap();
+        let p = dir.path().join("w.bin");
+        std::fs::write(&p, [0u8; 12]).unwrap();
+        assert_eq!(read_blob(&p, 3).unwrap(), vec![0f32; 3]);
+        assert!(read_blob(&p, 4).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Thread-pool async file I/O — the role DeepNVMe's `async_io` plays in
+//! the paper's prototype: write-behind materialization and concurrent
+//! reads that overlap with compute on the caller's thread.
+//!
+//! A fixed pool of worker threads consumes closures from a channel;
+//! submitters get a [`Pending`] handle they can `wait()` on (or drop into
+//! a drain list). No work-stealing, no async runtime — bounded, simple,
+//! deterministic shutdown.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Handle to an in-flight I/O task producing `T`.
+pub struct Pending<T> {
+    slot: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> Pending<T> {
+    fn new() -> (Self, Self) {
+        let slot = Arc::new((Mutex::new(None), Condvar::new()));
+        (Pending { slot: slot.clone() }, Pending { slot })
+    }
+
+    fn fill(&self, v: T) {
+        let (m, cv) = &*self.slot;
+        *m.lock().unwrap() = Some(v);
+        cv.notify_all();
+    }
+
+    /// Block until the task completes and take its result.
+    pub fn wait(self) -> T {
+        let (m, cv) = &*self.slot;
+        let mut guard = m.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<T> {
+        self.slot.0.lock().unwrap().take()
+    }
+}
+
+/// Fixed-size I/O thread pool.
+pub struct IoPool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl IoPool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = sync_channel::<Job>(threads * 4);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("matkv-io-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => return, // pool dropped
+                        }
+                    })
+                    .expect("spawning io worker")
+            })
+            .collect();
+        IoPool { tx: Some(tx), workers }
+    }
+
+    /// Submit a task; returns a waitable handle.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> Pending<T> {
+        let (theirs, ours) = Pending::new();
+        let tx = self.tx.as_ref().expect("pool shut down");
+        tx.send(Box::new(move || theirs.fill(f()))).expect("io pool alive");
+        ours
+    }
+
+    /// Submit a batch and wait for all results, in order.
+    pub fn map_wait<T: Send + 'static>(
+        &self,
+        fs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let handles: Vec<Pending<T>> = fs.into_iter().map(|f| self.submit(f)).collect();
+        handles.into_iter().map(Pending::wait).collect()
+    }
+}
+
+impl Drop for IoPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn submit_and_wait() {
+        let pool = IoPool::new(2);
+        let h = pool.submit(|| 21 * 2);
+        assert_eq!(h.wait(), 42);
+    }
+
+    #[test]
+    fn many_tasks_all_complete() {
+        let pool = IoPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|i| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i
+                })
+            })
+            .collect();
+        let sum: usize = handles.into_iter().map(Pending::wait).sum();
+        assert_eq!(sum, 99 * 100 / 2);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_wait_preserves_order() {
+        let pool = IoPool::new(3);
+        let fs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..10usize)
+            .map(|i| {
+                Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(10 - i as u64));
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        assert_eq!(pool.map_wait(fs), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = IoPool::new(2);
+        let h = pool.submit(|| 1);
+        drop(pool); // must not hang
+        assert_eq!(h.wait(), 1);
+    }
+
+    #[test]
+    fn try_take_nonblocking() {
+        let pool = IoPool::new(1);
+        let h = pool.submit(|| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            7
+        });
+        // immediately: probably not done
+        let _ = h.try_take();
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(h.try_take(), Some(7));
+    }
+}

@@ -1,0 +1,150 @@
+//! Measurement harness for the `benches/` targets (criterion is
+//! unavailable offline; this provides the same discipline: warmup,
+//! repeated timed iterations, robust summary statistics).
+
+use std::time::Instant;
+
+/// Summary of repeated measurements (seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(mut samples: Vec<f64>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let n = samples.len();
+        let pick = |p: f64| samples[(((n - 1) as f64) * p).round() as usize];
+        Summary {
+            iters: n,
+            mean: samples.iter().sum::<f64>() / n as f64,
+            p50: pick(0.5),
+            p95: pick(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>9.4}s  p50 {:>9.4}s  p95 {:>9.4}s  (n={})",
+            self.mean, self.p50, self.p95, self.iters
+        )
+    }
+}
+
+/// Run `f` with `warmup` discarded iterations then `iters` timed ones.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let samples = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::of(samples)
+}
+
+/// Pretty table printer for paper-style rows.
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row width");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+/// Format seconds compactly.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let s = Summary::of(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut calls = 0;
+        let s = measure(2, 5, || calls += 1);
+        assert_eq!(s.iters, 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_secs(0.0025), "2.5ms");
+        assert_eq!(fmt_secs(2.5e-5), "25us");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny flag-style argument parser for the leader binary and examples:
+//! `--name value` pairs plus boolean `--flag`s after a subcommand word.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.command = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                }
+                _ => {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --config tiny --requests 32 --overlap");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.str("config", "x"), "tiny");
+        assert_eq!(a.usize("requests", 0), 32);
+        assert!(a.flag("overlap"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("info");
+        assert_eq!(a.usize("batch", 4), 4);
+        assert_eq!(a.f64("skew", 1.0), 1.0);
+        assert_eq!(a.opt("none"), None);
+    }
+
+    #[test]
+    fn rejects_positionals_after_flags() {
+        assert!(Args::parse(["serve".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--x 1");
+        assert_eq!(a.command, None);
+        assert_eq!(a.usize("x", 0), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dependency-free infrastructure substrates.
+//!
+//! This build runs fully offline, so the usual ecosystem crates are
+//! replaced by small purpose-built implementations:
+//!
+//! * [`json`] — minimal JSON parser (manifest.json / golden.json ABI).
+//! * [`aio`] — thread-pool async file I/O with write-behind handles (the
+//!   role DeepNVMe's `async_io` plays in the paper's prototype).
+//! * [`cli`] — flag-style argument parsing for the leader binary.
+//! * [`bench`] — measurement harness (warmup + timed iterations +
+//!   mean/p50/p99) used by every `benches/` target.
+//! * [`tempdir`] — self-cleaning temporary directories for tests/benches.
+
+pub mod aio;
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod tempdir;

@@ -1,0 +1,147 @@
+//! Deterministic hashed bag-of-tokens embedder.
+//!
+//! Each token id is hashed (splitmix64) to a fixed pseudo-random unit
+//! direction in `dim` dimensions; a text's embedding is the L2-normalized
+//! sum of its token directions. Texts sharing many tokens embed close in
+//! cosine distance — exactly the property the RAG retrieval path needs —
+//! while remaining fully deterministic and offline.
+
+/// splitmix64: cheap, high-quality 64-bit mixer.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Hashed bag-of-tokens embedder (stand-in for all-MiniLM-L6-v2).
+#[derive(Debug, Clone)]
+pub struct HashEmbedder {
+    dim: usize,
+    seed: u64,
+}
+
+impl HashEmbedder {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        assert!(dim >= 8, "embedding dim too small");
+        HashEmbedder { dim, seed }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Pseudo-random direction for one token (unnormalized, ±1 entries).
+    fn token_direction(&self, token: u32, out: &mut [f32]) {
+        let mut h = splitmix64(self.seed ^ (token as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let mut bits = 0u64;
+        let mut remaining = 0;
+        for slot in out.iter_mut() {
+            if remaining == 0 {
+                h = splitmix64(h);
+                bits = h;
+                remaining = 64;
+            }
+            *slot += if bits & 1 == 1 { 1.0 } else { -1.0 };
+            bits >>= 1;
+            remaining -= 1;
+        }
+    }
+
+    /// Embed a token sequence: normalized sum of token directions.
+    pub fn embed(&self, tokens: &[u32]) -> Vec<f32> {
+        let mut v = vec![0f32; self.dim];
+        for &t in tokens {
+            self.token_direction(t, &mut v);
+        }
+        l2_normalize(&mut v);
+        v
+    }
+}
+
+/// Normalize in place (zero vectors become the unit e0 direction so that
+/// downstream cosine math never sees NaN).
+pub fn l2_normalize(v: &mut [f32]) {
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    } else if let Some(first) = v.first_mut() {
+        *first = 1.0;
+    }
+}
+
+/// Cosine similarity of two L2-normalized vectors (= dot product).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: the hot loop of FlatIndex::search.
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let e = HashEmbedder::new(64, 7);
+        assert_eq!(e.embed(&[1, 2, 3]), e.embed(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn normalized() {
+        let e = HashEmbedder::new(64, 7);
+        let v = e.embed(&[5, 9, 200, 3]);
+        let n: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n - 1.0).abs() < 1e-5, "{n}");
+    }
+
+    #[test]
+    fn shared_tokens_embed_closer() {
+        let e = HashEmbedder::new(128, 7);
+        let a = e.embed(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = e.embed(&[1, 2, 3, 4, 5, 6, 9, 10]); // 6/8 shared
+        let c = e.embed(&[100, 101, 102, 103, 104, 105, 106, 107]); // disjoint
+        assert!(dot(&a, &b) > dot(&a, &c) + 0.2);
+    }
+
+    #[test]
+    fn empty_tokens_is_unit_vector() {
+        let e = HashEmbedder::new(16, 7);
+        let v = e.embed(&[]);
+        assert_eq!(v[0], 1.0);
+    }
+
+    #[test]
+    fn prop_order_invariant_and_unit_norm() {
+        let e = HashEmbedder::new(32, 42);
+        let mut rng = crate::workload::Rng::new(17);
+        for _ in 0..100 {
+            let n = 1 + rng.below(29);
+            let mut ts: Vec<u32> = (0..n).map(|_| rng.below(1000) as u32).collect();
+            let a = e.embed(&ts);
+            assert!((dot(&a, &a) - 1.0).abs() < 1e-4);
+            ts.reverse();
+            let b = e.embed(&ts);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! In-process vector database substrate (the paper uses ChromaDB).
+//!
+//! Stores one embedding per document chunk keyed by `chunk_id`, and
+//! answers top-K cosine queries. Two index implementations:
+//!
+//! * [`FlatIndex`] — exact brute-force scan (default; matches ChromaDB's
+//!   behaviour at our scales and is the ground truth for IVF recall).
+//! * [`IvfIndex`] — inverted-file approximate index (k-means coarse
+//!   quantizer, `nprobe` lists searched) for the Fig 2 experiment's
+//!   900K-chunk scale.
+//!
+//! Embeddings come from [`embed::HashEmbedder`], a deterministic hashed
+//! bag-of-tokens projection standing in for all-MiniLM-L6-v2 (DESIGN.md
+//! "Substitutions": retrieval semantics, not embedding quality, is what
+//! MatKV exercises).
+
+pub mod embed;
+pub mod store;
+
+pub use embed::HashEmbedder;
+pub use store::{FlatIndex, IvfIndex, SearchResult, VectorIndex};
+
+/// Identifier of a document chunk; also names its materialized KV file.
+pub type ChunkId = u64;

@@ -1,0 +1,357 @@
+//! Vector indexes: exact flat scan and IVF approximate search.
+
+use std::collections::HashMap;
+
+use super::embed::{dot, l2_normalize, splitmix64};
+use super::ChunkId;
+
+/// One search hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchResult {
+    pub chunk_id: ChunkId,
+    pub score: f32,
+}
+
+/// Common interface of the flat and IVF indexes.
+pub trait VectorIndex: Send {
+    /// Insert (or replace) a chunk embedding.
+    fn insert(&mut self, id: ChunkId, embedding: Vec<f32>);
+    /// Remove a chunk (its materialized KV is deleted alongside — see
+    /// `coordinator::ingest::delete`). Returns true if present.
+    fn delete(&mut self, id: ChunkId) -> bool;
+    /// Exact or approximate top-k by cosine similarity.
+    fn search(&self, query: &[f32], k: usize) -> Vec<SearchResult>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Exact brute-force index: contiguous embedding matrix + id column.
+///
+/// Deleted slots are swap-removed so the scan stays dense; at the scales
+/// of every experiment but Fig 2 this is both the fastest and the ground
+/// truth for recall checks.
+#[derive(Debug, Default)]
+pub struct FlatIndex {
+    dim: usize,
+    ids: Vec<ChunkId>,
+    data: Vec<f32>, // row-major [len, dim]
+    pos: HashMap<ChunkId, usize>,
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize) -> Self {
+        FlatIndex { dim, ids: Vec::new(), data: Vec::new(), pos: HashMap::new() }
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn insert(&mut self, id: ChunkId, mut embedding: Vec<f32>) {
+        assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
+        l2_normalize(&mut embedding);
+        if let Some(&i) = self.pos.get(&id) {
+            self.data[i * self.dim..(i + 1) * self.dim].copy_from_slice(&embedding);
+            return;
+        }
+        self.pos.insert(id, self.ids.len());
+        self.ids.push(id);
+        self.data.extend_from_slice(&embedding);
+    }
+
+    fn delete(&mut self, id: ChunkId) -> bool {
+        let Some(i) = self.pos.remove(&id) else { return false };
+        let last = self.ids.len() - 1;
+        if i != last {
+            let moved = self.ids[last];
+            self.ids.swap(i, last);
+            let (head, tail) = self.data.split_at_mut(last * self.dim);
+            head[i * self.dim..(i + 1) * self.dim].copy_from_slice(&tail[..self.dim]);
+            self.pos.insert(moved, i);
+        }
+        self.ids.pop();
+        self.data.truncate(last * self.dim);
+        true
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<SearchResult> {
+        assert_eq!(query.len(), self.dim);
+        let mut top: Vec<SearchResult> = Vec::with_capacity(k + 1);
+        for i in 0..self.ids.len() {
+            let score = dot(query, self.row(i));
+            if top.len() < k || score > top.last().map(|r| r.score).unwrap_or(f32::MIN) {
+                let at = top.partition_point(|r| r.score >= score);
+                top.insert(at, SearchResult { chunk_id: self.ids[i], score });
+                top.truncate(k);
+            }
+        }
+        top
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+/// IVF (inverted-file) approximate index.
+///
+/// A k-means coarse quantizer over a training sample partitions vectors
+/// into `nlist` cells; a query scans only the `nprobe` nearest cells.
+/// This is the same structure FAISS/ChromaDB use for million-scale
+/// corpora (the Fig 2 experiment runs 900K chunks / 100K queries).
+pub struct IvfIndex {
+    dim: usize,
+    nlist: usize,
+    pub nprobe: usize,
+    centroids: Vec<f32>, // [nlist, dim]
+    lists: Vec<Vec<(ChunkId, Vec<f32>)>>,
+    whereabouts: HashMap<ChunkId, usize>,
+    trained: bool,
+    seed: u64,
+}
+
+impl IvfIndex {
+    pub fn new(dim: usize, nlist: usize, nprobe: usize, seed: u64) -> Self {
+        IvfIndex {
+            dim,
+            nlist: nlist.max(1),
+            nprobe: nprobe.clamp(1, nlist.max(1)),
+            centroids: Vec::new(),
+            lists: vec![Vec::new(); nlist.max(1)],
+            whereabouts: HashMap::new(),
+            trained: false,
+            seed,
+        }
+    }
+
+    /// K-means (few iterations of Lloyd's) over a sample of vectors.
+    pub fn train(&mut self, sample: &[Vec<f32>], iters: usize) {
+        assert!(!sample.is_empty());
+        // init: pseudo-random distinct picks
+        self.centroids = Vec::with_capacity(self.nlist * self.dim);
+        for i in 0..self.nlist {
+            let idx = (splitmix64(self.seed ^ i as u64) % sample.len() as u64) as usize;
+            self.centroids.extend_from_slice(&sample[idx]);
+        }
+        for _ in 0..iters {
+            let mut sums = vec![0f32; self.nlist * self.dim];
+            let mut counts = vec![0usize; self.nlist];
+            for v in sample {
+                let c = self.nearest_centroid(v);
+                counts[c] += 1;
+                for (s, x) in sums[c * self.dim..(c + 1) * self.dim].iter_mut().zip(v) {
+                    *s += x;
+                }
+            }
+            for c in 0..self.nlist {
+                if counts[c] > 0 {
+                    let row = &mut sums[c * self.dim..(c + 1) * self.dim];
+                    l2_normalize(row);
+                    self.centroids[c * self.dim..(c + 1) * self.dim].copy_from_slice(row);
+                }
+            }
+        }
+        self.trained = true;
+    }
+
+    fn nearest_centroid(&self, v: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_score = f32::MIN;
+        for c in 0..self.nlist {
+            let score = dot(v, &self.centroids[c * self.dim..(c + 1) * self.dim]);
+            if score > best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        best
+    }
+
+    fn probe_order(&self, v: &[f32]) -> Vec<usize> {
+        let mut scored: Vec<(usize, f32)> = (0..self.nlist)
+            .map(|c| (c, dot(v, &self.centroids[c * self.dim..(c + 1) * self.dim])))
+            .collect();
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+        scored.into_iter().map(|(c, _)| c).collect()
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn insert(&mut self, id: ChunkId, mut embedding: Vec<f32>) {
+        assert!(self.trained, "IvfIndex::train before insert");
+        assert_eq!(embedding.len(), self.dim);
+        l2_normalize(&mut embedding);
+        if self.whereabouts.contains_key(&id) {
+            self.delete(id);
+        }
+        let c = self.nearest_centroid(&embedding);
+        self.lists[c].push((id, embedding));
+        self.whereabouts.insert(id, c);
+    }
+
+    fn delete(&mut self, id: ChunkId) -> bool {
+        let Some(c) = self.whereabouts.remove(&id) else { return false };
+        let list = &mut self.lists[c];
+        if let Some(i) = list.iter().position(|(x, _)| *x == id) {
+            list.swap_remove(i);
+            return true;
+        }
+        false
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<SearchResult> {
+        let mut top: Vec<SearchResult> = Vec::with_capacity(k + 1);
+        for &c in self.probe_order(query).iter().take(self.nprobe) {
+            for (id, v) in &self.lists[c] {
+                let score = dot(query, v);
+                if top.len() < k || score > top.last().map(|r| r.score).unwrap_or(f32::MIN) {
+                    let at = top.partition_point(|r| r.score >= score);
+                    top.insert(at, SearchResult { chunk_id: *id, score });
+                    top.truncate(k);
+                }
+            }
+        }
+        top
+    }
+
+    fn len(&self) -> usize {
+        self.whereabouts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vectordb::HashEmbedder;
+
+    fn emb(dim: usize, seed: u64) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim)
+            .map(|i| (splitmix64(seed ^ i as u64) as f32 / u64::MAX as f32) - 0.5)
+            .collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn flat_exact_top1_is_self() {
+        let mut ix = FlatIndex::new(16);
+        for i in 0..100u64 {
+            ix.insert(i, emb(16, i));
+        }
+        for i in (0..100u64).step_by(17) {
+            let hits = ix.search(&emb(16, i), 3);
+            assert_eq!(hits[0].chunk_id, i);
+            assert!(hits[0].score > 0.999);
+        }
+    }
+
+    #[test]
+    fn flat_delete_swaps_correctly() {
+        let mut ix = FlatIndex::new(8);
+        for i in 0..10u64 {
+            ix.insert(i, emb(8, i));
+        }
+        assert!(ix.delete(3));
+        assert!(!ix.delete(3));
+        assert_eq!(ix.len(), 9);
+        // remaining entries still searchable
+        for i in [0u64, 9, 5] {
+            assert_eq!(ix.search(&emb(8, i), 1)[0].chunk_id, i);
+        }
+        // deleted entry no longer returned
+        assert!(ix.search(&emb(8, 3), 10).iter().all(|r| r.chunk_id != 3));
+    }
+
+    #[test]
+    fn flat_insert_replaces() {
+        let mut ix = FlatIndex::new(8);
+        ix.insert(1, emb(8, 1));
+        ix.insert(1, emb(8, 99));
+        assert_eq!(ix.len(), 1);
+        assert_eq!(ix.search(&emb(8, 99), 1)[0].chunk_id, 1);
+    }
+
+    #[test]
+    fn flat_search_returns_sorted_k() {
+        let mut ix = FlatIndex::new(8);
+        for i in 0..50u64 {
+            ix.insert(i, emb(8, i));
+        }
+        let hits = ix.search(&emb(8, 7), 10);
+        assert_eq!(hits.len(), 10);
+        for w in hits.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn ivf_recall_against_flat() {
+        let e = HashEmbedder::new(32, 3);
+        let docs: Vec<Vec<u32>> = (0..500u32)
+            .map(|i| (0..20).map(|j| i / 10 + j * 31).collect())
+            .collect();
+        let embs: Vec<Vec<f32>> = docs.iter().map(|d| e.embed(d)).collect();
+        let mut flat = FlatIndex::new(32);
+        let mut ivf = IvfIndex::new(32, 16, 6, 9);
+        ivf.train(&embs, 5);
+        for (i, v) in embs.iter().enumerate() {
+            flat.insert(i as u64, v.clone());
+            ivf.insert(i as u64, v.clone());
+        }
+        // recall@10 of IVF vs exact should be high with nprobe=6/16
+        let mut hits = 0;
+        let mut total = 0;
+        for q in (0..500).step_by(29) {
+            let truth: Vec<u64> =
+                flat.search(&embs[q], 10).into_iter().map(|r| r.chunk_id).collect();
+            let approx: Vec<u64> =
+                ivf.search(&embs[q], 10).into_iter().map(|r| r.chunk_id).collect();
+            total += truth.len();
+            hits += truth.iter().filter(|t| approx.contains(t)).count();
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.6, "ivf recall too low: {recall}");
+    }
+
+    #[test]
+    fn ivf_delete() {
+        let mut ivf = IvfIndex::new(8, 4, 4, 1);
+        let sample: Vec<Vec<f32>> = (0..20u64).map(|i| emb(8, i)).collect();
+        ivf.train(&sample, 3);
+        for (i, v) in sample.iter().enumerate() {
+            ivf.insert(i as u64, v.clone());
+        }
+        assert!(ivf.delete(5));
+        assert_eq!(ivf.len(), 19);
+        assert!(ivf.search(&emb(8, 5), 20).iter().all(|r| r.chunk_id != 5));
+    }
+
+    #[test]
+    fn prop_flat_len_tracks_inserts_deletes() {
+        // randomized insert/delete interleavings vs a HashSet model
+        let mut rng = crate::workload::Rng::new(99);
+        for _case in 0..50 {
+            let mut ix = FlatIndex::new(8);
+            let mut reference = std::collections::HashSet::new();
+            let ops = 1 + rng.below(59);
+            for _ in 0..ops {
+                let id = rng.below(20) as u64;
+                if rng.f64() < 0.5 {
+                    ix.insert(id, emb(8, id));
+                    reference.insert(id);
+                } else {
+                    let was = ix.delete(id);
+                    assert_eq!(was, reference.remove(&id));
+                }
+                assert_eq!(ix.len(), reference.len());
+            }
+            for id in reference {
+                assert_eq!(ix.search(&emb(8, id), 1)[0].chunk_id, id);
+            }
+        }
+    }
+}

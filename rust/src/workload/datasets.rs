@@ -1,0 +1,102 @@
+//! Dataset profiles for Table I and the QA-style fidelity experiments.
+//!
+//! Table I of the paper reports average query/answer token counts for four
+//! public RAG benchmarks. We generate synthetic datasets whose length
+//! distributions match those means, and the `paper_tables` bench
+//! re-measures them — closing the loop between profile and generator.
+
+use super::corpus::Corpus;
+use super::rng::Rng;
+
+/// Length profile of one RAG QA dataset (Table I row).
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub avg_query_tokens: f64,
+    pub avg_answer_tokens: f64,
+    /// Documents retrieved per question (top-k in the paper's eval).
+    pub top_k: usize,
+    /// Multi-hop datasets need evidence combined across documents.
+    pub multi_hop: bool,
+}
+
+/// The four Table-I datasets.
+pub const TABLE1_DATASETS: &[DatasetProfile] = &[
+    DatasetProfile { name: "CRAG", avg_query_tokens: 15.56, avg_answer_tokens: 11.17, top_k: 5, multi_hop: false },
+    DatasetProfile { name: "TriviaQA", avg_query_tokens: 18.16, avg_answer_tokens: 4.05, top_k: 5, multi_hop: false },
+    DatasetProfile { name: "GoogleNQ", avg_query_tokens: 10.09, avg_answer_tokens: 5.77, top_k: 5, multi_hop: false },
+    DatasetProfile { name: "HotpotQA", avg_query_tokens: 23.11, avg_answer_tokens: 3.53, top_k: 5, multi_hop: true },
+];
+
+/// One synthetic QA item.
+#[derive(Debug, Clone)]
+pub struct QaItem {
+    pub query: String,
+    pub answer_len: usize,
+    /// Topic(s) whose documents contain the evidence.
+    pub evidence_topics: Vec<usize>,
+}
+
+/// Generate `n` QA items following a dataset profile over a corpus.
+pub fn generate_qa(
+    profile: &DatasetProfile,
+    corpus: &Corpus,
+    n: usize,
+    seed: u64,
+) -> Vec<QaItem> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let n_topics = if profile.multi_hop { 2 } else { 1 };
+            let topics: Vec<usize> =
+                (0..n_topics).map(|_| rng.below(corpus.n_topics)).collect();
+            let qlen = rng.length_around(profile.avg_query_tokens, 3, 64);
+            // split query words across evidence topics (multi-hop questions
+            // mention entities from both documents)
+            let per_topic = qlen / topics.len();
+            let mut words = Vec::new();
+            for &t in &topics {
+                words.push(corpus.query_for_topic(t, per_topic.max(1), &mut rng));
+            }
+            QaItem {
+                query: words.join(" "),
+                answer_len: rng.length_around(profile.avg_answer_tokens, 1, 32),
+                evidence_topics: topics,
+            }
+        })
+        .collect()
+}
+
+/// Measured means of a generated dataset (Table I regeneration).
+pub fn measure_means(items: &[QaItem]) -> (f64, f64) {
+    let q: usize = items.iter().map(|i| i.query.split_whitespace().count()).sum();
+    let a: usize = items.iter().map(|i| i.answer_len).sum();
+    (q as f64 / items.len() as f64, a as f64 / items.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_means_match_profiles() {
+        let corpus = Corpus::generate(50, 64, 10, 1);
+        for p in TABLE1_DATASETS {
+            let items = generate_qa(p, &corpus, 2000, 7);
+            let (q, a) = measure_means(&items);
+            assert!((q - p.avg_query_tokens).abs() / p.avg_query_tokens < 0.25,
+                    "{}: query mean {q} vs {}", p.name, p.avg_query_tokens);
+            assert!((a - p.avg_answer_tokens).abs() / p.avg_answer_tokens.max(2.0) < 0.4,
+                    "{}: answer mean {a} vs {}", p.name, p.avg_answer_tokens);
+        }
+    }
+
+    #[test]
+    fn multi_hop_has_two_evidence_topics() {
+        let corpus = Corpus::generate(50, 64, 10, 1);
+        let hotpot = &TABLE1_DATASETS[3];
+        assert!(hotpot.multi_hop);
+        let items = generate_qa(hotpot, &corpus, 10, 3);
+        assert!(items.iter().all(|i| i.evidence_topics.len() == 2));
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic RAG workload generation (DESIGN.md "Substitutions": stands in
+//! for TurboRAG samples, LongBench QA sets and the deep1B access trace —
+//! every figure depends only on token counts, chunk sizes and access skew,
+//! all controlled parameters here).
+
+pub mod corpus;
+pub mod datasets;
+pub mod requests;
+pub mod rng;
+pub mod zipf;
+
+pub use corpus::{Corpus, Document};
+pub use datasets::{DatasetProfile, TABLE1_DATASETS};
+pub use requests::{RagRequest, RequestGen, TurboRagProfile};
+pub use rng::Rng;
+pub use zipf::Zipf;

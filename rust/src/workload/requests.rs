@@ -1,0 +1,111 @@
+//! Serving-request generation: the TurboRAG-profile workload used by the
+//! paper's §V-B experiments (2×1,024-token chunks + ~20-token query +
+//! 20-token answer per request), with all knobs exposed for the parameter
+//! sweeps of Figs 6/8/9.
+
+use super::corpus::Corpus;
+use super::rng::Rng;
+use super::zipf::Zipf;
+
+/// One serving request as the coordinator consumes it.
+#[derive(Debug, Clone)]
+pub struct RagRequest {
+    pub id: u64,
+    pub query: String,
+    /// Number of document chunks to retrieve (top-k).
+    pub top_k: usize,
+    /// Decode length (answer tokens to generate).
+    pub output_tokens: usize,
+    /// Topic the query is about (ground truth for retrieval checks).
+    pub topic: usize,
+}
+
+/// Workload profile matching the paper's TurboRAG samples.
+#[derive(Debug, Clone, Copy)]
+pub struct TurboRagProfile {
+    /// Retrieved chunks per request (paper default: 2).
+    pub top_k: usize,
+    /// Mean query length in tokens (paper: 17.67 ≈ 20).
+    pub query_tokens: f64,
+    /// Answer tokens generated (paper: 20).
+    pub output_tokens: usize,
+}
+
+impl Default for TurboRagProfile {
+    fn default() -> Self {
+        TurboRagProfile { top_k: 2, query_tokens: 20.0, output_tokens: 20 }
+    }
+}
+
+/// Deterministic request stream with Zipf-skewed topic popularity.
+pub struct RequestGen {
+    profile: TurboRagProfile,
+    zipf: Zipf,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl RequestGen {
+    pub fn new(profile: TurboRagProfile, n_topics: usize, skew: f64, seed: u64) -> Self {
+        RequestGen { profile, zipf: Zipf::new(n_topics, skew), rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// Generate the next request over `corpus`.
+    pub fn next(&mut self, corpus: &Corpus) -> RagRequest {
+        let topic = self.zipf.sample(&mut self.rng);
+        let qlen = self.rng.length_around(self.profile.query_tokens, 4, 31);
+        let query = corpus.query_for_topic(topic, qlen, &mut self.rng);
+        let id = self.next_id;
+        self.next_id += 1;
+        RagRequest {
+            id,
+            query,
+            top_k: self.profile.top_k,
+            output_tokens: self.profile.output_tokens,
+            topic,
+        }
+    }
+
+    pub fn take(&mut self, corpus: &Corpus, n: usize) -> Vec<RagRequest> {
+        (0..n).map(|_| self.next(corpus)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_deterministic() {
+        let corpus = Corpus::generate(20, 64, 5, 1);
+        let mut a = RequestGen::new(TurboRagProfile::default(), 5, 1.0, 7);
+        let mut b = RequestGen::new(TurboRagProfile::default(), 5, 1.0, 7);
+        for _ in 0..20 {
+            let (x, y) = (a.next(&corpus), b.next(&corpus));
+            assert_eq!(x.query, y.query);
+            assert_eq!(x.topic, y.topic);
+        }
+    }
+
+    #[test]
+    fn ids_monotonic_and_lengths_bounded() {
+        let corpus = Corpus::generate(20, 64, 5, 1);
+        let mut g = RequestGen::new(TurboRagProfile::default(), 5, 1.0, 3);
+        let reqs = g.take(&corpus, 50);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            let n = r.query.split_whitespace().count();
+            assert!((4..32).contains(&n), "{n}");
+        }
+    }
+
+    #[test]
+    fn topics_skewed() {
+        let corpus = Corpus::generate(100, 32, 100, 1);
+        let mut g = RequestGen::new(TurboRagProfile::default(), 100, 1.1, 5);
+        let reqs = g.take(&corpus, 2000);
+        let hot = reqs.iter().filter(|r| r.topic == 0).count();
+        let cold = reqs.iter().filter(|r| r.topic == 99).count();
+        assert!(hot > cold * 3, "hot={hot} cold={cold}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Small deterministic PRNG (xoshiro256**, seeded via splitmix64).
+//! Dependency-free so workloads replay bit-identically across platforms.
+
+use crate::vectordb::embed::splitmix64;
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut s = [0u64; 4];
+        let mut x = seed;
+        for slot in &mut s {
+            x = splitmix64(x);
+            *slot = x;
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Approximately Poisson-shaped positive integer with the given mean
+    /// (clamped geometric mixture — good enough for length sampling).
+    pub fn length_around(&mut self, mean: f64, min: usize, max: usize) -> usize {
+        let jitter = 0.5 + self.f64(); // [0.5, 1.5)
+        ((mean * jitter).round() as usize).clamp(min, max)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn length_mean_roughly_right() {
+        let mut r = Rng::new(5);
+        let n = 5000;
+        let sum: usize = (0..n).map(|_| r.length_around(20.0, 1, 100)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((15.0..25.0).contains(&mean), "{mean}");
+    }
+}

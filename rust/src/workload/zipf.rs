@@ -1,0 +1,103 @@
+//! Zipf-distributed sampling over ranked items.
+//!
+//! Drives the Fig-2 experiment: document popularity in real RAG traces is
+//! highly skewed ("a small fraction of documents accounts for the
+//! majority of retrieval requests" — paper §II-C quoting RAGCache), which
+//! a Zipf(s≈1) rank distribution reproduces.
+
+use super::rng::Rng;
+
+/// Precomputed-CDF Zipf sampler over ranks `0..n`.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `s` is the skew exponent (s=0 → uniform; s≈1 → web-like skew).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0f64;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Sample a rank in `0..n` (rank 0 = most popular).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank0_most_popular() {
+        let z = Zipf::new(1000, 1.0);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[999] * 10);
+    }
+
+    #[test]
+    fn uniform_when_s_zero() {
+        let z = Zipf::new(100, 0.0);
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!((*max as f64) < (*min as f64) * 1.6, "{min} {max}");
+    }
+
+    #[test]
+    fn skew_produces_fig2_shape() {
+        // Paper Fig 2 (scaled): with ~9 chunks per query over a 9M corpus
+        // and 1M queries, >10% of chunks are accessed 2+ times. Our scaled
+        // version must show the same heavy repeat mass.
+        let n = 10_000;
+        let z = Zipf::new(n, 0.9);
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0u32; n];
+        for _ in 0..10_000 {
+            for _ in 0..10 {
+                counts[z.sample(&mut rng)] += 1;
+            }
+        }
+        let repeated = counts.iter().filter(|&&c| c >= 2).count();
+        assert!(repeated as f64 > 0.05 * n as f64, "{repeated}");
+    }
+
+    #[test]
+    fn prop_samples_in_range() {
+        let mut meta = Rng::new(1234);
+        for _ in 0..50 {
+            let n = 1 + meta.below(499);
+            let s = meta.f64() * 2.0;
+            let z = Zipf::new(n, s);
+            let mut rng = Rng::new(meta.next_u64());
+            for _ in 0..50 {
+                assert!(z.sample(&mut rng) < n);
+            }
+        }
+    }
+}
