@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         n_docs,
         doc_tokens: 1024,
         seed: 42,
+        ..ScenarioSpec::default()
     })?;
     let reqs = sc.requests(n_requests, 2, out_tokens);
     let h100 = DeviceProfile::h100();

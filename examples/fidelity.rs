@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 16,
         doc_tokens: 512,
         seed: 21,
+        ..ScenarioSpec::default()
     })?;
     let reqs = sc.requests(12, 2, 12);
 

@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 12,
         doc_tokens: 1024,
         seed: 3,
+        ..ScenarioSpec::default()
     })?;
     let reqs = sc.requests(16, 1, 20);
 

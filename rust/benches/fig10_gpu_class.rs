@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 12,
         doc_tokens: 1024,
         seed: 10,
+        ..ScenarioSpec::default()
     })?;
 
     let h100 = DeviceProfile::h100();

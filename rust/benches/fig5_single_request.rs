@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 12,
         doc_tokens: 1024,
         seed: 5,
+        ..ScenarioSpec::default()
     })?;
     let reqs = sc.requests(n, 2, 20);
     let h100 = DeviceProfile::h100();

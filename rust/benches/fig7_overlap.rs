@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
             n_docs: 12,
             doc_tokens: 1024,
             seed: 8,
+            ..ScenarioSpec::default()
         })?;
         let reqs = sc.requests(n, 2, 20);
 

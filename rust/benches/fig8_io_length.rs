@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 16,
         doc_tokens: 512,
         seed: 12,
+        ..ScenarioSpec::default()
     })?;
 
     // --- (a) vary number of retrieved chunks -------------------------------

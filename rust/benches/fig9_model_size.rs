@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
                 n_docs: 8,
                 doc_tokens: 1024,
                 seed: 14,
+                ..ScenarioSpec::default()
             })?;
             let reqs = sc.requests(n, top_k, 4);
             let arch = ArchSpec::standin_for(name);

@@ -35,9 +35,18 @@ fn main() -> anyhow::Result<()> {
         v: vec![-0.5; plane],
     };
     store.store_sync(1, &chunk)?;
-    let mb = chunk.total_bytes() as f64 / 1e6;
+    let mb = store.encoded_bytes(&chunk) as f64 / 1e6;
     let s = measure(3, iters, || store.load(1).unwrap());
-    println!("kvstore.load ({mb:.1} MB chunk)      : {s}  ({:.0} MB/s)", mb / s.mean);
+    println!("kvstore.load ({mb:.1} MB v2 file)    : {s}  ({:.0} MB/s)", mb / s.mean);
+
+    // --- kvstore: same load served by the DRAM hot tier (Arc clone, no
+    // file read, no decode)
+    let mut hot_store = KvStore::open(dir.path(), StorageProfile::dram())?;
+    hot_store.disable_throttle();
+    hot_store.set_hot_tier(256 << 20);
+    hot_store.load(1)?; // warm the tier
+    let s = measure(3, iters, || hot_store.load(1).unwrap());
+    println!("kvstore.load (hot-tier hit)       : {s}");
 
     // --- state splice (host memcpy choreography)
     let mut host = HostState::zeros(&cfg, 8, cfg.max_ctx);

@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 8,
         doc_tokens: 1024,
         seed: 9,
+        ..ScenarioSpec::default()
     })?;
     let reqs = sc.requests(n, 2, 4);
 

@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         n_docs: 24,
         doc_tokens: 512,
         seed: 20,
+        ..ScenarioSpec::default()
     })?;
     let reqs = sc.requests(n, 4, 12);
 

@@ -136,8 +136,9 @@ impl LoaderCtx {
         self.cfg.batch_bucket(n)
     }
 
-    /// Stage a MatKV batch: retrieve, load KVs from flash, splice into a
-    /// host state (Fig 3b steps 1-2). No device work.
+    /// Stage a MatKV batch: retrieve, load KVs from the tiered store
+    /// (DRAM hot tier first, then flash), splice into a host state
+    /// (Fig 3b steps 1-2). No device work.
     pub fn stage_matkv(&self, reqs: &[RagRequest]) -> Result<StagedBatch> {
         let bucket = self.batch_bucket(reqs.len())?;
         let mut staged = self.stage_common(reqs, bucket)?;
@@ -165,10 +166,16 @@ impl LoaderCtx {
             staged.host_state.splice_chunk(*b, slot, &l.chunk)?;
             staged.doc_slots[*b].push((slot, l.chunk.seq_len as usize));
             staged.cache_len[*b] += l.chunk.seq_len as i32;
-            staged.metrics.load_device_secs += l.device_secs;
-            staged.metrics.loaded_bytes += l.chunk.total_bytes();
             staged.metrics.loaded_tokens += l.chunk.seq_len as usize;
-            staged.metrics.load_reads += 1;
+            if l.from_cache {
+                staged.metrics.cache_hits += 1;
+                staged.metrics.cache_tokens += l.chunk.seq_len as usize;
+                staged.metrics.cache_bytes_saved += l.file_bytes;
+            } else {
+                staged.metrics.load_device_secs += l.device_secs;
+                staged.metrics.loaded_bytes += l.file_bytes;
+                staged.metrics.load_reads += 1;
+            }
         }
         staged.metrics.load_wall_secs = t0.elapsed().as_secs_f64();
         Ok(staged)
@@ -332,6 +339,23 @@ impl Engine {
                 }
             }
             drop(meta);
+            // Guard the whole budget up front: recomputed docs + query +
+            // decode all advance the same cache, and stepping past C
+            // would silently attend garbage instead of failing.
+            for b in 0..n {
+                let need = doc_tokens[b].len()
+                    + staged.qlen[b] as usize
+                    + staged.output_tokens[b].saturating_sub(1);
+                if need > ctx {
+                    bail!(
+                        "request {}: {} doc tokens + {} query + {} decode budget exceeds serve context {ctx}",
+                        staged.ids[b],
+                        doc_tokens[b].len(),
+                        staged.qlen[b],
+                        staged.output_tokens[b],
+                    );
+                }
+            }
             let mut off = vec![0usize; bucket];
             loop {
                 let mut any = false;
@@ -395,7 +419,22 @@ impl Engine {
             }
         }
 
-        // query sub-prefill (all modes)
+        // query sub-prefill (all modes). The splice/prefill paths only
+        // guarantee the *documents* fit; the query must too, or this
+        // step writes KV past C and attends garbage. (Decode, by
+        // contrast, is allowed to run out of context — it breaks early
+        // and tokens_out reports what was actually generated.)
+        for b in 0..n {
+            if (cache_len[b] + staged.qlen[b]) as usize > ctx {
+                bail!(
+                    "request {}: query of {} tokens does not fit after {} cached tokens \
+                     (serve context {ctx})",
+                    staged.ids[b],
+                    staged.qlen[b],
+                    cache_len[b],
+                );
+            }
+        }
         for b in 0..n {
             m.prefill_trace
                 .record_elem(staged.qlen[b] as usize, (cache_len[b] + staged.qlen[b]) as usize);
@@ -441,7 +480,7 @@ impl Engine {
         m.decode_wall_secs = t0.elapsed().as_secs_f64();
 
         // ---- package -------------------------------------------------------
-        let responses = (0..n)
+        let responses: Vec<Response> = (0..n)
             .map(|b| {
                 let want = staged.output_tokens[b].min(generated[b].len());
                 let tokens: Vec<u32> = generated[b][..want].to_vec();
@@ -453,7 +492,10 @@ impl Engine {
                 }
             })
             .collect();
-        m.tokens_out = staged.output_tokens.iter().take(n).map(|&o| o.min(max_out)).sum();
+        // Count what was actually generated — decode can break early on
+        // context exhaustion, and throughput must not be flattered by
+        // the *requested* budget.
+        m.tokens_out = responses.iter().map(|r| r.tokens.len()).sum();
         m.total_wall_secs = total_t0.elapsed().as_secs_f64();
         Ok((responses, m))
     }

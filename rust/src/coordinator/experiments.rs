@@ -18,6 +18,8 @@ pub struct Scenario {
     pub engine: Engine,
     pub corpus: Corpus,
     pub doc_tokens: usize,
+    /// Hot-tier budget to re-apply when the storage device is swapped.
+    hot_tier_bytes: usize,
     /// Keep the KV directory alive for the scenario's lifetime.
     _kv_dir: TempDir,
 }
@@ -30,6 +32,8 @@ pub struct ScenarioSpec {
     pub n_docs: usize,
     pub doc_tokens: usize,
     pub seed: u64,
+    /// DRAM hot-tier budget in bytes (0 = flash only).
+    pub hot_tier_bytes: usize,
 }
 
 impl Default for ScenarioSpec {
@@ -40,6 +44,7 @@ impl Default for ScenarioSpec {
             n_docs: 16,
             doc_tokens: 1024,
             seed: 42,
+            hot_tier_bytes: 0,
         }
     }
 }
@@ -51,11 +56,18 @@ impl Scenario {
         let corpus =
             Corpus::generate(spec.n_docs, spec.doc_tokens, spec.n_docs.min(16), spec.seed);
         let kv_dir = TempDir::new("matkv-scenario")?;
-        let kv = KvStore::open(kv_dir.path(), spec.storage)?;
+        let mut kv = KvStore::open(kv_dir.path(), spec.storage)?;
+        kv.set_hot_tier(spec.hot_tier_bytes);
         let opts = EngineOptions::for_config(&manifest, &spec.config)?;
         let engine = Engine::new(&manifest, opts, kv, corpus.texts())?;
         engine.ingest_corpus(&corpus, spec.doc_tokens)?;
-        Ok(Scenario { engine, corpus, doc_tokens: spec.doc_tokens, _kv_dir: kv_dir })
+        Ok(Scenario {
+            engine,
+            corpus,
+            doc_tokens: spec.doc_tokens,
+            hot_tier_bytes: spec.hot_tier_bytes,
+            _kv_dir: kv_dir,
+        })
     }
 
     /// TurboRAG-profile request stream (paper §V-B: top-k chunks of
@@ -73,9 +85,12 @@ impl Scenario {
     /// Swap the simulated storage device (Table III).
     pub fn set_storage(&mut self, profile: StorageProfile) {
         // Arc<KvStore> is shared with loader contexts; re-opening is the
-        // clean way to swap the throttle everywhere at once.
+        // clean way to swap the throttle everywhere at once. The hot
+        // tier restarts cold, exactly like a real node after a device
+        // swap.
         let dir = self._kv_dir.path().to_path_buf();
-        let store = KvStore::open(dir, profile).expect("reopen kvstore");
+        let mut store = KvStore::open(dir, profile).expect("reopen kvstore");
+        store.set_hot_tier(self.hot_tier_bytes);
         self.engine.kv = std::sync::Arc::new(store);
     }
 }
@@ -96,6 +111,21 @@ mod tests {
         let (r, m) = sc.engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
         assert_eq!(r.len(), 2);
         assert_eq!(m.tokens_out, 6);
+    }
+
+    #[test]
+    fn scenario_hot_tier_hits_on_repeat_traffic() {
+        let mut spec = ScenarioSpec::default();
+        spec.n_docs = 4;
+        spec.doc_tokens = 256;
+        spec.storage = StorageProfile::dram();
+        spec.hot_tier_bytes = 256 << 20;
+        let sc = Scenario::build(spec).unwrap();
+        let reqs = sc.requests(4, 1, 2);
+        let (_, cold) = sc.engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+        let (_, warm) = sc.engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+        assert!(warm.cache_hits > 0, "no hot-tier hits on repeat traffic");
+        assert!(warm.load_device_secs < cold.load_device_secs);
     }
 
     #[test]

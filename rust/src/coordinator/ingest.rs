@@ -94,7 +94,7 @@ impl Engine {
             stats.prefill_wall_secs += t0.elapsed().as_secs_f64();
             for (b, d) in docs.iter().enumerate() {
                 let chunk = host.extract_chunk(cfg_id, b, 0, doc_tokens);
-                stats.materialized_bytes += chunk.total_bytes();
+                stats.materialized_bytes += self.kv.encoded_bytes(&chunk);
                 pending.push(self.kv.store_async(d.id, chunk));
             }
             stats.docs += docs.len();

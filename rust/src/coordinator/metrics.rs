@@ -60,12 +60,20 @@ pub struct PhaseBreakdown {
     pub load_wall_secs: f64,
     /// Simulated storage-device seconds of those loads (at executed scale).
     pub load_device_secs: f64,
-    /// Bytes of KV loaded from storage (executed scale).
+    /// Bytes of KV read from the storage device (executed scale;
+    /// hot-tier hits excluded).
     pub loaded_bytes: usize,
-    /// Tokens of KV loaded (architecture-independent).
+    /// Tokens of KV spliced from the store, hot-tier hits included
+    /// (architecture-independent; all of them cross PCIe at serve time).
     pub loaded_tokens: usize,
-    /// Number of chunk reads issued.
+    /// Number of chunk reads issued to the storage device.
     pub load_reads: usize,
+    /// Chunk loads served by the DRAM hot tier (no device read).
+    pub cache_hits: usize,
+    /// Tokens of KV served by the hot tier (subset of `loaded_tokens`).
+    pub cache_tokens: usize,
+    /// On-disk bytes the hot tier avoided reading (executed scale).
+    pub cache_bytes_saved: usize,
     /// Host→device state upload wall time.
     pub upload_secs: f64,
     /// Prefill (doc recompute and/or query sub-prefill) wall time.
@@ -93,6 +101,9 @@ impl PhaseBreakdown {
         self.loaded_bytes += other.loaded_bytes;
         self.loaded_tokens += other.loaded_tokens;
         self.load_reads += other.load_reads;
+        self.cache_hits += other.cache_hits;
+        self.cache_tokens += other.cache_tokens;
+        self.cache_bytes_saved += other.cache_bytes_saved;
         self.upload_secs += other.upload_secs;
         self.prefill_wall_secs += other.prefill_wall_secs;
         self.prefill_trace.add(&other.prefill_trace);
@@ -114,11 +125,12 @@ impl PhaseBreakdown {
         arch.trace_secs_decode(&self.decode_trace, dev)
     }
 
-    /// Simulated KV-load seconds at architecture scale on a storage tier.
+    /// Simulated KV-load seconds at architecture scale on a storage
+    /// tier. Hot-tier hits never touched the device, so only the miss
+    /// tokens are charged to it.
     pub fn load_secs_on(&self, arch: &ArchSpec, storage: &StorageProfile) -> f64 {
-        let bytes = arch.kv_bytes(self.loaded_tokens);
-        storage.latency_s * self.load_reads as f64
-            + if storage.read_bw.is_finite() { bytes / storage.read_bw } else { 0.0 }
+        let bytes = arch.kv_bytes(self.loaded_tokens.saturating_sub(self.cache_tokens));
+        storage.read_secs_batch(bytes, self.load_reads)
     }
 
     /// Simulated host→device upload of the loaded KVs (PCIe).
@@ -211,12 +223,42 @@ mod tests {
     #[test]
     fn add_accumulates_all_fields() {
         let mut a = PhaseBreakdown { retrieve_secs: 1.0, requests: 2, tokens_out: 10, ..Default::default() };
-        let b = PhaseBreakdown { retrieve_secs: 2.0, requests: 3, tokens_out: 5, loaded_tokens: 7, ..Default::default() };
+        let b = PhaseBreakdown {
+            retrieve_secs: 2.0,
+            requests: 3,
+            tokens_out: 5,
+            loaded_tokens: 7,
+            cache_hits: 2,
+            cache_tokens: 4,
+            cache_bytes_saved: 99,
+            ..Default::default()
+        };
         a.add(&b);
         assert_eq!(a.retrieve_secs, 3.0);
         assert_eq!(a.requests, 5);
         assert_eq!(a.tokens_out, 15);
         assert_eq!(a.loaded_tokens, 7);
+        assert_eq!(a.cache_hits, 2);
+        assert_eq!(a.cache_tokens, 4);
+        assert_eq!(a.cache_bytes_saved, 99);
+    }
+
+    #[test]
+    fn load_costing_discounts_hot_tier_hits() {
+        let arch = crate::hwsim::standin::ArchSpec::llama_70b();
+        let ssd = crate::hwsim::StorageProfile::ssd_9100pro();
+        let mut b = PhaseBreakdown { loaded_tokens: 2048, load_reads: 2, ..Default::default() };
+        let cold = b.load_secs_on(&arch, &ssd);
+        // half the chunks now come from the hot tier
+        b.cache_hits = 1;
+        b.cache_tokens = 1024;
+        b.load_reads = 1;
+        let warm = b.load_secs_on(&arch, &ssd);
+        assert!(warm < cold, "{warm} vs {cold}");
+        // PCIe upload is unchanged: every spliced token still crosses
+        assert_eq!(b.upload_secs_on(&arch, &crate::hwsim::DeviceProfile::h100()),
+            PhaseBreakdown { loaded_tokens: 2048, ..Default::default() }
+                .upload_secs_on(&arch, &crate::hwsim::DeviceProfile::h100()));
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //! leave that thread). Channel capacity 1 gives classic double buffering:
 //! at steady state the storage device and the compute device are both
 //! busy, which is exactly the paper's Fig 4.
+//!
+//! The loader goes through the tiered store: DRAM hot-tier hits shave
+//! their chunks off the loader's critical path entirely (no throttled
+//! device read), which shrinks `loader_busy_secs` and with it the only
+//! stage that can stall the executor. Per-batch hit counts surface in
+//! the aggregated [`PhaseBreakdown`] (`cache_hits`/`cache_bytes_saved`).
 
 use std::sync::mpsc;
 use std::time::Instant;

@@ -170,7 +170,15 @@ impl StorageProfile {
 
     /// Seconds to read `bytes` from this tier.
     pub fn read_secs(&self, bytes: usize) -> f64 {
-        self.latency_s + if self.read_bw.is_finite() { bytes as f64 / self.read_bw } else { 0.0 }
+        self.read_secs_batch(bytes as f64, 1)
+    }
+
+    /// Seconds to service `reads` read requests totalling `bytes` bytes
+    /// (per-request latency paid once per read, bandwidth shared). Used
+    /// by the serve-path costing, where hot-tier hits reduce `reads`.
+    pub fn read_secs_batch(&self, bytes: f64, reads: usize) -> f64 {
+        self.latency_s * reads as f64
+            + if self.read_bw.is_finite() { bytes / self.read_bw } else { 0.0 }
     }
 
     /// Seconds to write `bytes` to this tier.
@@ -254,5 +262,14 @@ mod tests {
     fn infinite_bw_tier_is_latency_only() {
         let d = StorageProfile::dram();
         assert_eq!(d.read_secs(1 << 30), d.latency_s);
+    }
+
+    #[test]
+    fn batched_reads_pay_latency_per_request() {
+        let s = StorageProfile::ssd_9100pro();
+        let one = s.read_secs_batch(1e9, 1);
+        let four = s.read_secs_batch(1e9, 4);
+        assert!((four - one - 3.0 * s.latency_s).abs() < 1e-12);
+        assert_eq!(s.read_secs_batch(0.0, 0), 0.0);
     }
 }

@@ -1,0 +1,333 @@
+//! Byte-budgeted DRAM hot tier in front of the flash-backed [`KvStore`].
+//!
+//! Fig 2's access distribution is heavily skewed: a small set of popular
+//! chunks absorbs most retrievals. Keeping exactly that set resident in
+//! DRAM turns the serve hot path's dominant cost — bytes moved from the
+//! storage device per request — into a memory reference for the popular
+//! mass, while the flash tier keeps the corpus-sized tail cheap. This is
+//! the first rung of the storage hierarchy ("LLM in a flash" /
+//! kv-cache-tier style): DRAM (hot) over flash (capacity).
+//!
+//! The tier is an LRU over decoded [`KvChunk`]s, budgeted in *resident
+//! bytes* ([`KvChunk::dram_bytes`], f32 planes — decode cost is paid once
+//! at fill time, hits hand out `Arc` clones with zero copies). It is
+//! `Sync`: the overlap pipeline's loader thread and any number of
+//! concurrent `load_many` workers share one tier through the store's
+//! `Arc`.
+//!
+//! [`KvStore`]: super::KvStore
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::store::KvChunk;
+use crate::vectordb::ChunkId;
+
+/// Cumulative hit/miss/eviction counters (relaxed atomics, like
+/// [`super::StoreStats`]).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub insertions: AtomicU64,
+    pub evictions: AtomicU64,
+    /// On-disk bytes that hits avoided reading from the device.
+    pub bytes_saved: AtomicU64,
+}
+
+impl CacheStats {
+    /// Hits / (hits + misses); 0 when the tier was never consulted.
+    pub fn hit_ratio(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m > 0.0 {
+            h / (h + m)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Outcome of a [`HotTier::probe`].
+pub enum Probe {
+    /// Resident: the chunk plus the on-disk bytes the hit avoided.
+    Hit(Arc<KvChunk>, usize),
+    /// Not resident: the id's current invalidation generation (to pass
+    /// to [`HotTier::insert_at`] after the device read).
+    Miss(u64),
+}
+
+struct Entry {
+    chunk: Arc<KvChunk>,
+    /// Size of the backing file (what a miss would have read).
+    file_bytes: usize,
+    /// Resident bytes charged against the budget.
+    cost: usize,
+    /// Recency stamp; key into `Lru::order`.
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Lru {
+    map: HashMap<ChunkId, Entry>,
+    /// tick → id, oldest first (ticks are unique: one logical clock).
+    order: BTreeMap<u64, ChunkId>,
+    /// Per-id invalidation generation (bumped by [`HotTier::invalidate`];
+    /// a missing entry means generation 0). Lets loaders detect that a
+    /// write/delete raced *their* chunk's file read without suppressing
+    /// admission of unrelated chunks (see [`HotTier::insert_at`]). Tiny:
+    /// two u64 per ever-invalidated id, vs megabytes per cached chunk.
+    gens: HashMap<ChunkId, u64>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// The DRAM hot tier: an LRU map `ChunkId → Arc<KvChunk>` holding at
+/// most `budget` resident bytes.
+pub struct HotTier {
+    budget: usize,
+    lru: Mutex<Lru>,
+    pub stats: CacheStats,
+}
+
+impl HotTier {
+    pub fn new(budget_bytes: usize) -> Self {
+        HotTier {
+            budget: budget_bytes,
+            lru: Mutex::new(Lru::default()),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Resident bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.lru.lock().unwrap().bytes
+    }
+
+    /// Number of resident chunks.
+    pub fn len(&self) -> usize {
+        self.lru.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a chunk. A hit promotes it to most-recently-used and
+    /// returns the chunk plus the file bytes the hit avoided reading.
+    pub fn get(&self, id: ChunkId) -> Option<(Arc<KvChunk>, usize)> {
+        match self.probe(id) {
+            Probe::Hit(chunk, file_bytes) => Some((chunk, file_bytes)),
+            Probe::Miss(_) => None,
+        }
+    }
+
+    /// Single-lock lookup for the load path: a hit promotes the entry
+    /// and returns it; a miss also reports the id's current invalidation
+    /// generation, so the caller can admit the upcoming device read via
+    /// [`HotTier::insert_at`] without re-taking the lock.
+    pub fn probe(&self, id: ChunkId) -> Probe {
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        lru.clock += 1;
+        let tick = lru.clock;
+        let gen = lru.gens.get(&id).copied().unwrap_or(0);
+        let Some(e) = lru.map.get_mut(&id) else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            return Probe::Miss(gen);
+        };
+        let old_tick = std::mem::replace(&mut e.tick, tick);
+        let chunk = e.chunk.clone();
+        let file_bytes = e.file_bytes;
+        lru.order.remove(&old_tick);
+        lru.order.insert(tick, id);
+        self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_saved.fetch_add(file_bytes as u64, Ordering::Relaxed);
+        Probe::Hit(chunk, file_bytes)
+    }
+
+    /// Current invalidation generation of `id`. Loaders capture it
+    /// *before* reading the backing file and pass it to
+    /// [`HotTier::insert_at`] so a read that raced a re-materialization
+    /// of the same chunk can never populate the tier with superseded
+    /// bytes.
+    pub fn generation(&self, id: ChunkId) -> u64 {
+        self.lru.lock().unwrap().gens.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Drop `id` and advance its generation. Writers call this on both
+    /// sides of the file write (and deleters around the unlink): the
+    /// generation bump rejects in-flight stale inserts of this id, and
+    /// the remove cleans up any that slipped in under the old one.
+    pub fn invalidate(&self, id: ChunkId) {
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        *lru.gens.entry(id).or_insert(0) += 1;
+        if let Some(e) = lru.map.remove(&id) {
+            lru.order.remove(&e.tick);
+            lru.bytes -= e.cost;
+        }
+    }
+
+    /// Insert (or refresh) a chunk, then evict least-recently-used
+    /// entries until the tier is back under budget. `file_bytes` is the
+    /// on-disk size recorded for hit accounting; the budget is charged
+    /// at DRAM footprint. A chunk larger than the whole budget is not
+    /// admitted (it would evict everything for a single resident).
+    pub fn insert(&self, id: ChunkId, chunk: Arc<KvChunk>, file_bytes: usize) {
+        let gen = self.generation(id);
+        self.insert_at(id, chunk, file_bytes, gen);
+    }
+
+    /// [`HotTier::insert`] guarded by the id's invalidation generation:
+    /// if this chunk was invalidated since `seen_gen` was captured, the
+    /// loaded bytes may be stale and are not admitted. Invalidations of
+    /// *other* ids don't interfere.
+    pub fn insert_at(&self, id: ChunkId, chunk: Arc<KvChunk>, file_bytes: usize, seen_gen: u64) {
+        let cost = chunk.dram_bytes();
+        if cost > self.budget {
+            return;
+        }
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
+            return; // a write/delete raced this load; don't cache stale bytes
+        }
+        lru.clock += 1;
+        let tick = lru.clock;
+        if let Some(old) = lru.map.remove(&id) {
+            lru.order.remove(&old.tick);
+            lru.bytes -= old.cost;
+        }
+        lru.bytes += cost;
+        lru.map.insert(id, Entry { chunk, file_bytes, cost, tick });
+        lru.order.insert(tick, id);
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+        while lru.bytes > self.budget {
+            let Some((&oldest, &evict)) = lru.order.iter().next() else { break };
+            lru.order.remove(&oldest);
+            if let Some(e) = lru.map.remove(&evict) {
+                lru.bytes -= e.cost;
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(seed: u32) -> Arc<KvChunk> {
+        let plane = 2 * 2 * 8 * 4;
+        Arc::new(KvChunk {
+            config_id: 1,
+            n_layers: 2,
+            n_kv_heads: 2,
+            seq_len: 8,
+            head_dim: 4,
+            k: (0..plane).map(|i| (i + seed) as f32).collect(),
+            v: (0..plane).map(|i| -((i + seed) as f32)).collect(),
+        })
+    }
+
+    fn cost() -> usize {
+        chunk(0).dram_bytes()
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let tier = HotTier::new(2 * cost());
+        tier.insert(1, chunk(1), 100);
+        tier.insert(2, chunk(2), 100);
+        assert!(tier.get(1).is_some()); // promote 1 → LRU victim is 2
+        tier.insert(3, chunk(3), 100);
+        assert_eq!(tier.len(), 2);
+        assert!(tier.get(2).is_none(), "LRU entry must be the one evicted");
+        assert!(tier.get(1).is_some());
+        assert!(tier.get(3).is_some());
+        assert_eq!(tier.stats.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn byte_budget_enforced() {
+        let budget = 2 * cost() + cost() / 2;
+        let tier = HotTier::new(budget);
+        for i in 0..5 {
+            tier.insert(i, chunk(i as u32), 100);
+            assert!(tier.bytes() <= budget, "over budget after insert {i}");
+        }
+        assert_eq!(tier.len(), 2);
+        assert_eq!(tier.bytes(), 2 * cost());
+    }
+
+    #[test]
+    fn oversize_chunk_not_admitted() {
+        let tier = HotTier::new(cost() - 1);
+        tier.insert(1, chunk(1), 100);
+        assert_eq!(tier.len(), 0);
+        assert_eq!(tier.bytes(), 0);
+    }
+
+    #[test]
+    fn hit_miss_stats() {
+        let tier = HotTier::new(4 * cost());
+        assert!(tier.get(7).is_none());
+        tier.insert(7, chunk(7), 640);
+        let (c, fb) = tier.get(7).unwrap();
+        assert_eq!(c.k, chunk(7).k);
+        assert_eq!(fb, 640);
+        tier.get(7).unwrap();
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(tier.stats.misses.load(Ordering::Relaxed), 1);
+        assert_eq!(tier.stats.bytes_saved.load(Ordering::Relaxed), 2 * 640);
+        assert!((tier.stats.hit_ratio() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_charge() {
+        let tier = HotTier::new(4 * cost());
+        tier.insert(1, chunk(1), 100);
+        tier.insert(1, chunk(9), 100);
+        assert_eq!(tier.len(), 1);
+        assert_eq!(tier.bytes(), cost());
+        assert_eq!(tier.get(1).unwrap().0.k, chunk(9).k, "stale chunk survived reinsert");
+    }
+
+    #[test]
+    fn generation_guard_rejects_stale_insert() {
+        let tier = HotTier::new(4 * cost());
+        // loader captured the generation, then a writer invalidated: the
+        // loader's (possibly stale) chunk must not be admitted.
+        let seen = tier.generation(9);
+        tier.invalidate(9);
+        tier.insert_at(9, chunk(9), 100, seen);
+        assert_eq!(tier.len(), 0);
+        assert!(tier.get(9).is_none());
+        // a load that starts after the invalidation is admitted
+        tier.insert_at(9, chunk(9), 100, tier.generation(9));
+        assert!(tier.get(9).is_some());
+        // invalidating one id never suppresses admission of another
+        let other = tier.generation(8);
+        tier.invalidate(9);
+        tier.insert_at(8, chunk(8), 100, other);
+        assert!(tier.get(8).is_some(), "unrelated invalidation blocked admission");
+    }
+
+    #[test]
+    fn invalidate_drops_entry() {
+        let tier = HotTier::new(4 * cost());
+        tier.insert(1, chunk(1), 100);
+        tier.invalidate(1);
+        assert_eq!(tier.len(), 0);
+        assert_eq!(tier.bytes(), 0);
+        assert!(tier.get(1).is_none());
+        tier.invalidate(1); // idempotent on absent entries
+    }
+}

@@ -1,21 +1,36 @@
-//! Materialized-KV store: the flash-storage half of MatKV.
+//! Materialized-KV store: the storage half of MatKV, now a two-level
+//! hierarchy.
 //!
 //! Each document chunk's precomputed KV cache is one file
-//! (`<dir>/<chunk_id>.kv`) holding a fixed header plus contiguous f32
-//! `[n_layers, n_kv_heads, seq, head_dim]` K then V planes — the exact
-//! layout the rust runtime splices into the packed device state, so a
-//! load is: (simulated) flash read → bounce buffer → one
+//! (`<dir>/<chunk_id>.kv`) holding a fixed header plus contiguous
+//! `[n_layers, n_kv_heads, seq, head_dim]` K then V planes — f32 in the
+//! v1 format, f16 in the (default) v2 format, which halves both flash
+//! bytes and simulated device-read time. The layout matches what the
+//! rust runtime splices into the packed device state, so a load is:
+//! (simulated) flash read → decode → bounce buffer → one
 //! `buffer_from_host` upload.
+//!
+//! In front of the flash tier sits an optional byte-budgeted **DRAM hot
+//! tier** ([`HotTier`], [`KvStore::set_hot_tier`]): an LRU of decoded
+//! chunks that serves the popular mass of Fig 2's Zipf-skewed access
+//! distribution at memory speed, with hit/miss/eviction stats surfaced
+//! through [`CacheStats`] and per-batch through
+//! [`crate::coordinator::metrics::PhaseBreakdown`].
 //!
 //! Real SSD hardware is replaced by a [`DeviceThrottle`] (DESIGN.md
 //! "Substitutions"): reads/writes go through the filesystem (page cache —
 //! effectively DRAM speed) and then *wall-clock delay* is injected to
 //! match a [`StorageProfile`]'s bandwidth/latency, serialized across
 //! concurrent requests exactly like a shared device. Table III (single
-//! SSD vs RAID-0 vs DRAM) falls out of swapping profiles.
+//! SSD vs RAID-0 vs DRAM) falls out of swapping profiles; hot-tier hits
+//! bypass the throttle entirely.
+//!
+//! [`StorageProfile`]: crate::hwsim::StorageProfile
 
+pub mod cache;
 pub mod store;
 pub mod throttle;
 
-pub use store::{KvChunk, KvStore, StoreStats};
+pub use cache::{CacheStats, HotTier, Probe};
+pub use store::{KvChunk, KvFormat, KvStore, Loaded, StoreStats};
 pub use throttle::DeviceThrottle;

@@ -1,4 +1,15 @@
-//! File-backed materialized-KV store with write-behind and throttled loads.
+//! File-backed materialized-KV store with write-behind, throttled loads,
+//! and an optional DRAM hot tier ([`HotTier`]).
+//!
+//! Two on-disk formats share one header layout (8 little-endian u32
+//! words: magic, version, config id, layers, kv-heads, seq, head dim,
+//! reserved):
+//!
+//! * **v1** — K/V planes as f32 (the original format; still loads).
+//! * **v2** — K/V planes as f16: half the flash bytes, half the
+//!   simulated device-read seconds for the same chunk. The default
+//!   write format; decode dispatches on the version word, so stores
+//!   holding a mix of v1 and v2 files serve both transparently.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -7,21 +18,50 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::cache::{HotTier, Probe};
 use super::throttle::DeviceThrottle;
-use crate::util::aio::{IoPool, Pending};
 use crate::hwsim::StorageProfile;
 use crate::manifest::ModelConfig;
+use crate::util::aio::{IoPool, Pending};
+use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
 use crate::vectordb::ChunkId;
 
 const MAGIC: u32 = 0x4d41_544b; // "MATK"
-const VERSION: u32 = 1;
 const HEADER_BYTES: usize = 8 * 4;
+
+/// On-disk plane encoding. The header's version word selects the
+/// decoder; the store's configured format selects the encoder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvFormat {
+    /// f32 planes (version word 1).
+    V1,
+    /// f16 planes (version word 2) — half the bytes of v1.
+    V2,
+}
+
+impl KvFormat {
+    pub fn version(self) -> u32 {
+        match self {
+            KvFormat::V1 => 1,
+            KvFormat::V2 => 2,
+        }
+    }
+
+    /// Bytes per stored K/V element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvFormat::V1 => 4,
+            KvFormat::V2 => 2,
+        }
+    }
+}
 
 /// One chunk's materialized KV tensors (host side).
 ///
 /// `k`/`v` are `[n_layers, n_kv_heads, seq_len, head_dim]` f32,
 /// row-major — the per-batch-element slice of the packed device cache, so
-/// assembly into a serve-time cache is pure memcpy.
+/// assembly into a serve-time cache is pure memcpy. In-memory planes are
+/// always f32 regardless of the on-disk format.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KvChunk {
     pub config_id: u32,
@@ -35,11 +75,25 @@ pub struct KvChunk {
 
 impl KvChunk {
     pub fn plane_elems(&self) -> usize {
-        (self.n_layers * self.n_kv_heads * self.seq_len * self.head_dim) as usize
+        self.n_layers as usize
+            * self.n_kv_heads as usize
+            * self.seq_len as usize
+            * self.head_dim as usize
     }
 
+    /// In-memory (f32 planes) footprint — also the v1 file size.
     pub fn total_bytes(&self) -> usize {
         HEADER_BYTES + 8 * self.plane_elems()
+    }
+
+    /// Resident bytes when held by the DRAM hot tier.
+    pub fn dram_bytes(&self) -> usize {
+        std::mem::size_of::<KvChunk>() + 8 * self.plane_elems()
+    }
+
+    /// On-disk size when encoded as `format`.
+    pub fn file_bytes(&self, format: KvFormat) -> usize {
+        HEADER_BYTES + 2 * format.elem_bytes() * self.plane_elems()
     }
 
     fn validate(&self) -> Result<()> {
@@ -66,7 +120,8 @@ pub fn config_id(cfg: &ModelConfig) -> u32 {
     h
 }
 
-/// Cumulative I/O counters.
+/// Cumulative I/O counters (device reads/writes; hot-tier hits never
+/// touch these — see [`super::CacheStats`]).
 #[derive(Debug, Default)]
 pub struct StoreStats {
     pub reads: AtomicU64,
@@ -76,23 +131,32 @@ pub struct StoreStats {
     pub deletes: AtomicU64,
 }
 
-/// The store: one directory per (deployment, model config).
+/// The store: one directory per (deployment, model config), fronted by
+/// an optional byte-budgeted DRAM hot tier.
 pub struct KvStore {
     dir: PathBuf,
     throttle: Arc<DeviceThrottle>,
     pool: IoPool,
-    pub stats: StoreStats,
+    format: KvFormat,
+    hot: Option<Arc<HotTier>>,
+    pub stats: Arc<StoreStats>,
 }
 
-/// Result of a load: the chunk plus its simulated device time.
+/// Result of a load: the chunk plus where it came from and what it cost.
 #[derive(Debug)]
 pub struct Loaded {
-    pub chunk: KvChunk,
+    pub chunk: Arc<KvChunk>,
+    /// Simulated storage-device seconds (0 for hot-tier hits).
     pub device_secs: f64,
+    /// Size of the chunk's on-disk file (for a hit: the read it avoided).
+    pub file_bytes: usize,
+    /// Served from the DRAM hot tier, no device read issued.
+    pub from_cache: bool,
 }
 
 impl KvStore {
     /// Open (creating if needed) a store under `dir`, timed as `profile`.
+    /// Writes default to the v2 (f16) format; no hot tier.
     pub fn open(dir: impl AsRef<Path>, profile: StorageProfile) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
@@ -100,7 +164,9 @@ impl KvStore {
             dir,
             throttle: Arc::new(DeviceThrottle::new(profile)),
             pool: IoPool::new(4),
-            stats: StoreStats::default(),
+            format: KvFormat::V2,
+            hot: None,
+            stats: Arc::new(StoreStats::default()),
         })
     }
 
@@ -121,6 +187,32 @@ impl KvStore {
         self.throttle.profile()
     }
 
+    /// Select the on-disk format for subsequent writes (loads always
+    /// accept both).
+    pub fn set_format(&mut self, format: KvFormat) {
+        self.format = format;
+    }
+
+    pub fn format(&self) -> KvFormat {
+        self.format
+    }
+
+    /// Enable a DRAM hot tier of `budget_bytes` resident bytes
+    /// (0 disables). Replacing the tier drops its contents.
+    pub fn set_hot_tier(&mut self, budget_bytes: usize) {
+        self.hot =
+            if budget_bytes > 0 { Some(Arc::new(HotTier::new(budget_bytes))) } else { None };
+    }
+
+    pub fn hot_tier(&self) -> Option<&HotTier> {
+        self.hot.as_deref()
+    }
+
+    /// On-disk size of `chunk` in the store's current write format.
+    pub fn encoded_bytes(&self, chunk: &KvChunk) -> usize {
+        chunk.file_bytes(self.format)
+    }
+
     fn path_of(&self, id: ChunkId) -> PathBuf {
         self.dir.join(format!("{id:016x}.kv"))
     }
@@ -129,12 +221,12 @@ impl KvStore {
         self.path_of(id).exists()
     }
 
-    fn encode(chunk: &KvChunk) -> Vec<u8> {
+    fn encode(chunk: &KvChunk, format: KvFormat) -> Vec<u8> {
         let plane = chunk.plane_elems();
-        let mut buf = Vec::with_capacity(HEADER_BYTES + 8 * plane);
+        let mut buf = Vec::with_capacity(HEADER_BYTES + 2 * format.elem_bytes() * plane);
         for word in [
             MAGIC,
-            VERSION,
+            format.version(),
             chunk.config_id,
             chunk.n_layers,
             chunk.n_kv_heads,
@@ -145,11 +237,18 @@ impl KvStore {
             buf.extend_from_slice(&word.to_le_bytes());
         }
         for plane_data in [&chunk.k, &chunk.v] {
-            // safety: f32 slice → bytes (LE on all supported targets)
-            let bytes = unsafe {
-                std::slice::from_raw_parts(plane_data.as_ptr() as *const u8, plane_data.len() * 4)
-            };
-            buf.extend_from_slice(bytes);
+            match format {
+                KvFormat::V1 => {
+                    for &x in plane_data.iter() {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                KvFormat::V2 => {
+                    for &x in plane_data.iter() {
+                        buf.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+                    }
+                }
+            }
         }
         buf
     }
@@ -162,45 +261,70 @@ impl KvStore {
         if word(0) != MAGIC {
             bail!("bad KV magic {:#x}", word(0));
         }
-        if word(1) != VERSION {
-            bail!("bad KV version {}", word(1));
+        let format = match word(1) {
+            1 => KvFormat::V1,
+            2 => KvFormat::V2,
+            v => bail!("unsupported KV version {v}"),
+        };
+        // Header dimensions are untrusted: all size math is checked so a
+        // corrupt/adversarial header can never wrap and pass the size
+        // check (u32 products overflow u32 and even u64 at the extremes).
+        let plane_u64 = [word(3), word(4), word(5), word(6)]
+            .into_iter()
+            .try_fold(1u64, |acc, w| acc.checked_mul(w as u64))
+            .context("KV header dimensions overflow")?;
+        let elem_bytes = format.elem_bytes() as u64;
+        let expected = plane_u64
+            .checked_mul(2 * elem_bytes)
+            .and_then(|b| b.checked_add(HEADER_BYTES as u64))
+            .context("KV header dimensions overflow")?;
+        if data.len() as u64 != expected {
+            bail!("KV file size mismatch: {} vs {expected}", data.len());
         }
-        let chunk = KvChunk {
+        let plane = plane_u64 as usize; // fits: expected == data.len()
+        let floats = |idx: usize| -> Vec<f32> {
+            let off = HEADER_BYTES + idx * plane * elem_bytes as usize;
+            let src = &data[off..off + plane * elem_bytes as usize];
+            match format {
+                KvFormat::V1 => src
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+                KvFormat::V2 => src
+                    .chunks_exact(2)
+                    .map(|b| f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap())))
+                    .collect(),
+            }
+        };
+        Ok(KvChunk {
             config_id: word(2),
             n_layers: word(3),
             n_kv_heads: word(4),
             seq_len: word(5),
             head_dim: word(6),
-            k: Vec::new(),
-            v: Vec::new(),
-        };
-        let plane = chunk.plane_elems();
-        if data.len() != HEADER_BYTES + 8 * plane {
-            bail!("KV file size mismatch: {} vs {}", data.len(), HEADER_BYTES + 8 * plane);
-        }
-        let floats = |off: usize, n: usize| -> Vec<f32> {
-            let mut out = vec![0f32; n];
-            let src = &data[off..off + 4 * n];
-            // safety: copying LE bytes into f32s
-            unsafe {
-                std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr() as *mut u8, 4 * n);
-            }
-            out
-        };
-        Ok(KvChunk {
-            k: floats(HEADER_BYTES, plane),
-            v: floats(HEADER_BYTES + 4 * plane, plane),
-            ..chunk
+            k: floats(0),
+            v: floats(1),
         })
     }
 
     /// Synchronous materialization (throttled to the device profile).
+    ///
+    /// The hot tier is invalidated on *both* sides of the write: the
+    /// first pass drops the resident copy, the second (generation bump)
+    /// rejects any concurrent load that read the superseded file while
+    /// the write was in flight — the tier never serves a stale KV.
     pub fn store_sync(&self, id: ChunkId, chunk: &KvChunk) -> Result<f64> {
         chunk.validate()?;
-        let buf = Self::encode(chunk);
+        if let Some(hot) = &self.hot {
+            hot.invalidate(id);
+        }
+        let buf = Self::encode(chunk, self.format);
         let start = Instant::now();
         std::fs::write(self.path_of(id), &buf)?;
         let secs = self.throttle.charge_write(buf.len(), start.elapsed());
+        if let Some(hot) = &self.hot {
+            hot.invalidate(id);
+        }
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
         Ok(secs)
@@ -209,18 +333,35 @@ impl KvStore {
     /// Write-behind materialization: returns immediately, the write runs
     /// on the store's I/O pool (the role DeepNVMe's async_io plays in the
     /// paper's prototype). Wait on the handle (or [`KvStore::drain`]) to
-    /// observe errors and the simulated device seconds.
+    /// observe errors and the simulated device seconds. Invalid chunks
+    /// and I/O failures surface as `Err` through the handle — never a
+    /// panic — and failed writes are not counted in [`StoreStats`].
     pub fn store_async(&self, id: ChunkId, chunk: KvChunk) -> Pending<Result<f64>> {
-        chunk.validate().expect("invalid chunk");
+        if let Err(e) = chunk.validate() {
+            return self.pool.submit(move || Err(e));
+        }
+        if let Some(hot) = &self.hot {
+            hot.invalidate(id);
+        }
         let path = self.path_of(id);
         let throttle = self.throttle.clone();
-        let buf = Self::encode(&chunk);
-        self.stats.writes.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        let stats = self.stats.clone();
+        let hot = self.hot.clone();
+        let buf = Self::encode(&chunk, self.format);
         self.pool.submit(move || {
             let start = Instant::now();
             std::fs::write(&path, &buf)?;
-            Ok(throttle.charge_write(buf.len(), start.elapsed()))
+            let secs = throttle.charge_write(buf.len(), start.elapsed());
+            // Second invalidation once the write landed: a load that
+            // raced the write and read the old bytes can no longer keep
+            // or re-admit them (see store_sync).
+            if let Some(hot) = &hot {
+                hot.invalidate(id);
+            }
+            // Accounting happens only once the write actually landed.
+            stats.writes.fetch_add(1, Ordering::Relaxed);
+            stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+            Ok(secs)
         })
     }
 
@@ -234,48 +375,91 @@ impl KvStore {
         Ok(total)
     }
 
-    /// Load one chunk (throttled). Returns the chunk and device seconds.
+    /// Load one chunk: hot tier first (free), then the throttled device.
     pub fn load(&self, id: ChunkId) -> Result<Loaded> {
-        let path = self.path_of(id);
-        let start = Instant::now();
-        let data = std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
-        let device_secs = self.throttle.charge_read(data.len(), start.elapsed());
-        self.stats.reads.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
-        Ok(Loaded { chunk: Self::decode(&data)?, device_secs })
+        let mut loaded = self.load_many(std::slice::from_ref(&id))?;
+        Ok(loaded.pop().expect("load_many returns one Loaded per id"))
     }
 
-    /// Load many chunks concurrently (they still serialize on the
-    /// simulated device, like real parallel reads of one SSD).
+    /// Load many chunks concurrently. Hot-tier hits are answered inline;
+    /// misses go through the I/O pool (and still serialize on the
+    /// simulated device, like real parallel reads of one SSD). Output
+    /// order matches `ids`.
     pub fn load_many(&self, ids: &[ChunkId]) -> Result<Vec<Loaded>> {
-        let handles: Vec<Pending<Result<(Vec<u8>, f64)>>> = ids
+        enum Slot {
+            Hit(Loaded),
+            /// A device read plus the id's invalidation generation,
+            /// captured before the read could start: if a write/delete
+            /// races this load, the stale bytes are not cached.
+            Miss(u64, Pending<Result<(Vec<u8>, f64)>>),
+        }
+        let slots: Vec<Slot> = ids
             .iter()
             .map(|&id| {
+                let mut gen = 0;
+                if let Some(hot) = &self.hot {
+                    match hot.probe(id) {
+                        Probe::Hit(chunk, file_bytes) => {
+                            return Slot::Hit(Loaded {
+                                chunk,
+                                device_secs: 0.0,
+                                file_bytes,
+                                from_cache: true,
+                            });
+                        }
+                        Probe::Miss(g) => gen = g,
+                    }
+                }
                 let path = self.path_of(id);
                 let throttle = self.throttle.clone();
-                self.pool.submit(move || {
-                    let start = Instant::now();
-                    let data = std::fs::read(&path)
-                        .with_context(|| format!("loading KV {path:?}"))?;
-                    let device_secs = throttle.charge_read(data.len(), start.elapsed());
-                    Ok((data, device_secs))
-                })
+                Slot::Miss(
+                    gen,
+                    self.pool.submit(move || {
+                        let start = Instant::now();
+                        let data =
+                            std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
+                        let device_secs = throttle.charge_read(data.len(), start.elapsed());
+                        Ok((data, device_secs))
+                    }),
+                )
             })
             .collect();
         let mut out = Vec::with_capacity(ids.len());
-        for h in handles {
-            let (data, device_secs) = h.wait()?;
-            self.stats.reads.fetch_add(1, Ordering::Relaxed);
-            self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
-            out.push(Loaded { chunk: Self::decode(&data)?, device_secs });
+        for (slot, &id) in slots.into_iter().zip(ids) {
+            match slot {
+                Slot::Hit(l) => out.push(l),
+                Slot::Miss(gen, h) => {
+                    let (data, device_secs) = h.wait()?;
+                    self.stats.reads.fetch_add(1, Ordering::Relaxed);
+                    self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+                    let chunk = Arc::new(Self::decode(&data)?);
+                    if let Some(hot) = &self.hot {
+                        hot.insert_at(id, chunk.clone(), data.len(), gen);
+                    }
+                    out.push(Loaded {
+                        chunk,
+                        device_secs,
+                        file_bytes: data.len(),
+                        from_cache: false,
+                    });
+                }
+            }
         }
         Ok(out)
     }
 
-    /// Delete a chunk's materialized KV (vector-DB delete path).
+    /// Delete a chunk's materialized KV (vector-DB delete path). Like
+    /// the write paths, the hot tier is invalidated around the unlink so
+    /// a racing load can't resurrect the deleted chunk in DRAM.
     pub fn delete(&self, id: ChunkId) -> Result<bool> {
+        if let Some(hot) = &self.hot {
+            hot.invalidate(id);
+        }
         match std::fs::remove_file(self.path_of(id)) {
             Ok(()) => {
+                if let Some(hot) = &self.hot {
+                    hot.invalidate(id);
+                }
                 self.stats.deletes.fetch_add(1, Ordering::Relaxed);
                 Ok(true)
             }
@@ -312,6 +496,7 @@ impl KvStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::{Rng, Zipf};
 
     fn chunk(seed: u32, seq: u32) -> KvChunk {
         let plane = (2 * 2 * seq * 4) as usize;
@@ -321,6 +506,7 @@ mod tests {
             n_kv_heads: 2,
             seq_len: seq,
             head_dim: 4,
+            // Integer payloads (<= 2048) survive the f16 format exactly.
             k: (0..plane).map(|i| (i as f32) + seed as f32).collect(),
             v: (0..plane).map(|i| -(i as f32) - seed as f32).collect(),
         }
@@ -339,7 +525,9 @@ mod tests {
         let c = chunk(7, 16);
         s.store_sync(42, &c).unwrap();
         let loaded = s.load(42).unwrap();
-        assert_eq!(loaded.chunk, c);
+        assert_eq!(*loaded.chunk, c);
+        assert!(!loaded.from_cache);
+        assert_eq!(loaded.file_bytes, s.encoded_bytes(&c));
     }
 
     #[test]
@@ -348,7 +536,7 @@ mod tests {
         let c = chunk(9, 8);
         let h = s.store_async(7, c.clone());
         s.drain(vec![h]).unwrap();
-        assert_eq!(s.load(7).unwrap().chunk, c);
+        assert_eq!(*s.load(7).unwrap().chunk, c);
     }
 
     #[test]
@@ -388,20 +576,124 @@ mod tests {
         bad[0] ^= 0xff;
         std::fs::write(&path, &bad).unwrap();
         assert!(s.load(5).is_err());
+        // unknown version
+        let mut bad = data.clone();
+        bad[4] = 9;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(s.load(5).is_err());
+    }
+
+    #[test]
+    fn corrupt_header_rejected_without_overflow() {
+        // Adversarial dims whose u32 product wraps to 0: a 32-byte file
+        // would pass an unchecked size check while claiming 2^16 layers.
+        let (_d, s) = store();
+        let mut buf = Vec::new();
+        for word in [MAGIC, 1u32, 0xabcd, 0x1_0000, 0x1_0000, 1, 1, 0] {
+            buf.extend_from_slice(&word.to_le_bytes());
+        }
+        std::fs::write(s.path_of(66), &buf).unwrap();
+        let err = s.load(66).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("mismatch") || msg.contains("overflow"), "{msg}");
+
+        // Dims that overflow even u64 must hit the checked-math bail.
+        let mut buf = Vec::new();
+        for word in [MAGIC, 2u32, 0xabcd, u32::MAX, u32::MAX, u32::MAX, u32::MAX, 0] {
+            buf.extend_from_slice(&word.to_le_bytes());
+        }
+        std::fs::write(s.path_of(67), &buf).unwrap();
+        let err = s.load(67).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn store_async_invalid_chunk_errors_not_panics() {
+        let (_d, s) = store();
+        let mut c = chunk(1, 8);
+        c.k.pop(); // plane mismatch
+        let h = s.store_async(3, c);
+        assert!(h.wait().is_err());
+        assert!(!s.contains(3));
+        assert_eq!(s.stats.writes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn failed_async_write_not_counted() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-fail").unwrap();
+        let sub = dir.path().join("kv");
+        let mut s = KvStore::open(&sub, StorageProfile::dram()).unwrap();
+        s.disable_throttle();
+        std::fs::remove_dir_all(&sub).unwrap(); // make every write fail
+        let h = s.store_async(1, chunk(1, 8));
+        assert!(h.wait().is_err());
+        assert_eq!(s.stats.writes.load(Ordering::Relaxed), 0);
+        assert_eq!(s.stats.bytes_written.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-v1").unwrap();
+        let mut writer = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+        writer.disable_throttle();
+        writer.set_format(KvFormat::V1);
+        // fractional payload: would NOT survive f16, so exact equality
+        // proves the v1 decode path ran losslessly.
+        let mut c = chunk(3, 8);
+        for x in c.k.iter_mut().chain(c.v.iter_mut()) {
+            *x += 0.123_456_7;
+        }
+        writer.store_sync(11, &c).unwrap();
+        assert_eq!(writer.encoded_bytes(&c), c.total_bytes());
+
+        let mut reader = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+        reader.disable_throttle();
+        assert_eq!(reader.format(), KvFormat::V2); // default is v2...
+        assert_eq!(*reader.load(11).unwrap().chunk, c); // ...yet v1 loads
+    }
+
+    #[test]
+    fn v2_files_half_the_bytes() {
+        let c = chunk(1, 32);
+        let v1 = KvStore::encode(&c, KvFormat::V1).len();
+        let v2 = KvStore::encode(&c, KvFormat::V2).len();
+        assert_eq!(v1, c.total_bytes());
+        assert_eq!(v2, c.file_bytes(KvFormat::V2));
+        let ratio = v2 as f64 / v1 as f64;
+        assert!(ratio < 0.55, "v2/v1 = {ratio}");
+
+        let (_d, s) = store();
+        s.store_sync(1, &c).unwrap();
+        assert_eq!(s.bytes_on_disk().unwrap(), v2 as u64);
+    }
+
+    #[test]
+    fn v2_quantization_error_bounded() {
+        let (_d, s) = store();
+        let mut c = chunk(0, 8);
+        for (i, x) in c.k.iter_mut().enumerate() {
+            *x = (i as f32 + 0.321).sin() * 3.7;
+        }
+        s.store_sync(8, &c).unwrap();
+        let loaded = s.load(8).unwrap();
+        for (a, b) in c.k.iter().zip(&loaded.chunk.k) {
+            assert!((a - b).abs() <= a.abs() / 1024.0 + 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]
     fn stats_accumulate() {
         let (_d, s) = store();
         let c = chunk(1, 8);
+        let file = s.encoded_bytes(&c) as u64;
         s.store_sync(1, &c).unwrap();
         s.load(1).unwrap();
         s.load(1).unwrap();
         assert_eq!(s.stats.reads.load(Ordering::Relaxed), 2);
         assert_eq!(s.stats.writes.load(Ordering::Relaxed), 1);
-        assert_eq!(s.stats.bytes_read.load(Ordering::Relaxed), 2 * c.total_bytes() as u64);
+        assert_eq!(s.stats.bytes_read.load(Ordering::Relaxed), 2 * file);
         assert_eq!(s.len().unwrap(), 1);
-        assert_eq!(s.bytes_on_disk().unwrap(), c.total_bytes() as u64);
+        assert_eq!(s.bytes_on_disk().unwrap(), file);
     }
 
     #[test]
@@ -417,10 +709,10 @@ mod tests {
             usd_per_byte: 0.0,
         };
         let s = KvStore::open(dir.path(), slow).unwrap();
-        let c = chunk(1, 256); // 2*2*256*4 *2 planes *4B = 64KB
+        let c = chunk(1, 256);
         s.store_sync(1, &c).unwrap();
         let loaded = s.load(1).unwrap();
-        let expect = c.total_bytes() as f64 / 50e6;
+        let expect = s.encoded_bytes(&c) as f64 / 50e6;
         assert!((loaded.device_secs - expect).abs() / expect < 0.3);
     }
 
@@ -430,5 +722,101 @@ mod tests {
         c.k.pop();
         let (_d, s) = store();
         assert!(s.store_sync(1, &c).is_err());
+    }
+
+    // --- hot tier -------------------------------------------------------
+
+    fn tiered_store(budget: usize) -> (crate::util::tempdir::TempDir, KvStore) {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-tier").unwrap();
+        let mut s = KvStore::open(dir.path(), StorageProfile::ssd_9100pro()).unwrap();
+        s.disable_throttle(); // device_secs still computed, just no sleep
+        s.set_hot_tier(budget);
+        (dir, s)
+    }
+
+    #[test]
+    fn hot_tier_hit_skips_device() {
+        let (_d, s) = tiered_store(64 << 20);
+        let c = chunk(2, 16);
+        s.store_sync(5, &c).unwrap();
+        let cold = s.load(5).unwrap();
+        assert!(!cold.from_cache);
+        assert!(cold.device_secs > 0.0);
+        let warm = s.load(5).unwrap();
+        assert!(warm.from_cache);
+        assert_eq!(warm.device_secs, 0.0);
+        assert_eq!(*warm.chunk, *cold.chunk);
+        // only the miss touched the device
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 1);
+        let tier = s.hot_tier().unwrap();
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(tier.stats.bytes_saved.load(Ordering::Relaxed), cold.file_bytes as u64);
+    }
+
+    #[test]
+    fn load_many_mixes_hits_and_misses_in_order() {
+        let (_d, s) = tiered_store(64 << 20);
+        for i in 0..4u64 {
+            s.store_sync(i, &chunk(i as u32, 8)).unwrap();
+        }
+        s.load(1).unwrap(); // warm id 1
+        let loaded = s.load_many(&[0, 1, 2]).unwrap();
+        assert!(!loaded[0].from_cache);
+        assert!(loaded[1].from_cache);
+        assert!(!loaded[2].from_cache);
+        for (l, want) in loaded.iter().zip([0u32, 1, 2]) {
+            assert_eq!(l.chunk.k[0], chunk(want, 8).k[0]);
+        }
+        // a second pass is all hits
+        assert!(s.load_many(&[0, 1, 2]).unwrap().iter().all(|l| l.from_cache));
+    }
+
+    #[test]
+    fn writes_and_deletes_invalidate_hot_tier() {
+        let (_d, s) = tiered_store(64 << 20);
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        s.load(1).unwrap();
+        assert!(s.load(1).unwrap().from_cache);
+        // re-materialize: the next load must see the new payload
+        s.store_sync(1, &chunk(50, 8)).unwrap();
+        let l = s.load(1).unwrap();
+        assert!(!l.from_cache);
+        assert_eq!(l.chunk.k[0], 50.0);
+        // delete: no stale hit either
+        s.delete(1).unwrap();
+        assert!(s.load(1).is_err());
+    }
+
+    #[test]
+    fn top_decile_tier_absorbs_zipf_mass() {
+        // Acceptance shape: a hot tier holding ~10% of the corpus under
+        // Zipf(1.0) access serves a large fraction of loads from DRAM
+        // and strictly beats the cold store on simulated device time.
+        let n = 100u64;
+        let per_chunk = chunk(0, 8).dram_bytes();
+        let (_d, hot) = tiered_store(10 * per_chunk);
+        let (_d2, cold) = {
+            let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-cold").unwrap();
+            let mut s = KvStore::open(dir.path(), StorageProfile::ssd_9100pro()).unwrap();
+            s.disable_throttle();
+            (dir, s)
+        };
+        for i in 0..n {
+            hot.store_sync(i, &chunk(i as u32, 8)).unwrap();
+            cold.store_sync(i, &chunk(i as u32, 8)).unwrap();
+        }
+        let zipf = Zipf::new(n as usize, 1.0);
+        let mut rng = Rng::new(42);
+        let ids: Vec<u64> = (0..2000).map(|_| zipf.sample(&mut rng) as u64).collect();
+        let (mut hot_secs, mut cold_secs, mut hits) = (0.0, 0.0, 0u64);
+        for &id in &ids {
+            let l = hot.load(id).unwrap();
+            hot_secs += l.device_secs;
+            hits += l.from_cache as u64;
+            cold_secs += cold.load(id).unwrap().device_secs;
+        }
+        let ratio = hits as f64 / ids.len() as f64;
+        assert!(ratio > 0.3, "hit ratio {ratio}");
+        assert!(hot_secs < cold_secs, "{hot_secs} vs {cold_secs}");
     }
 }

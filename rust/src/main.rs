@@ -12,7 +12,7 @@ use matkv::coordinator::baselines::cacheblend_mode;
 use matkv::coordinator::{serve_overlapped, Engine, EngineOptions, ServeMode};
 use matkv::hwsim::economics::fig1_trend;
 use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
-use matkv::kvstore::KvStore;
+use matkv::kvstore::{KvFormat, KvStore};
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
 use matkv::workload::{Corpus, RequestGen, TurboRagProfile};
@@ -21,7 +21,9 @@ use matkv::Manifest;
 const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
   serve flags: --config tiny|small|base --requests N --batch B --docs N
                --doc-tokens N --mode matkv|vanilla|cacheblend --overlap
-               --storage 9100pro|raid0|pm9a3|dram --kv-dir PATH";
+               --storage 9100pro|raid0|pm9a3|dram --kv-dir PATH
+               --hot-tier-bytes N (DRAM hot tier in front of flash, 0=off)
+               --kv-format v1|v2 (on-disk KV planes: f32|f16, default v2)";
 
 fn storage_profile(name: &str) -> Result<StorageProfile> {
     Ok(match name {
@@ -86,7 +88,13 @@ fn serve(args: &Args) -> Result<()> {
             p
         }
     };
-    let kv = KvStore::open(&dir, storage_profile(&args.str("storage", "9100pro"))?)?;
+    let mut kv = KvStore::open(&dir, storage_profile(&args.str("storage", "9100pro"))?)?;
+    kv.set_hot_tier(args.usize("hot-tier-bytes", 0));
+    match args.str("kv-format", "v2").as_str() {
+        "v1" => kv.set_format(KvFormat::V1),
+        "v2" => kv.set_format(KvFormat::V2),
+        other => anyhow::bail!("unknown kv format {other}"),
+    }
     let opts = EngineOptions::for_config(&m, &config)?;
     let engine = Engine::new(&m, opts, kv, corpus.texts())?;
 
@@ -132,6 +140,18 @@ fn serve(args: &Args) -> Result<()> {
         metrics.decode_wall_secs,
         metrics.throughput()
     );
+    if let Some(tier) = engine.kv.hot_tier() {
+        const MIB: f64 = (1 << 20) as f64;
+        println!(
+            "hot tier ({:.0} MiB budget): {} hits / {} misses ({:.0}% hit), {:.1} MiB resident, {:.1} MiB device reads saved",
+            tier.budget() as f64 / MIB,
+            tier.stats.hits.load(std::sync::atomic::Ordering::Relaxed),
+            tier.stats.misses.load(std::sync::atomic::Ordering::Relaxed),
+            100.0 * tier.stats.hit_ratio(),
+            tier.bytes() as f64 / MIB,
+            tier.stats.bytes_saved.load(std::sync::atomic::Ordering::Relaxed) as f64 / MIB,
+        );
+    }
     println!(
         "simulated H100 @ {} scale: load {:.4}s | prefill {:.4}s | decode {:.4}s | total {:.4}s",
         arch.name,

@@ -1,0 +1,146 @@
+//! Software f32 ⇄ f16 (IEEE 754 binary16) conversion.
+//!
+//! The v2 materialized-KV format stores K/V planes as f16 — half the
+//! flash bytes and half the simulated device-read time of the v1 f32
+//! planes (real deployments store KV caches in fp16 anyway; f32 was the
+//! testbed's convenience). The build runs fully offline, so instead of
+//! the `half` crate this is a small, exhaustively-tested bit-level
+//! implementation: round-to-nearest-even, subnormals preserved, NaNs
+//! canonicalized.
+
+/// Convert an `f32` to f16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (NaN payload is not preserved, only NaN-ness).
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    let e = exp - 127 + 15; // re-bias f32 → f16
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // too small for a subnormal → ±0
+        }
+        // Subnormal: shift the implicit-1 mantissa into place.
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half_man = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round = (rem > halfway || (rem == halfway && half_man & 1 == 1)) as u32;
+        return sign | (half_man + round) as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let round = (rem > 0x1000 || (rem == 0x1000 && half & 1 == 1)) as u32;
+    // A mantissa carry correctly bumps the exponent (and rounds to inf
+    // at the top of the range).
+    sign | (half + round) as u16
+}
+
+/// Convert f16 bits to an `f32`.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, _) => {
+            // Subnormal: renormalize into an f32 normal.
+            let mut exp32 = 113u32; // would be f16 exp 1 re-biased
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                exp32 -= 1;
+            }
+            sign | (exp32 << 23) | ((m & 0x03ff) << 13)
+        }
+        (31, 0) => sign | 0x7f80_0000,
+        (31, _) => sign | 0x7fc0_0000,
+        _ => sign | ((exp + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhaustive_f16_roundtrip() {
+        // Every non-NaN f16 bit pattern survives f16 → f32 → f16 exactly.
+        for h in 0..=u16::MAX {
+            let is_nan = h & 0x7c00 == 0x7c00 && h & 0x03ff != 0;
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            if is_nan {
+                assert_eq!(back & 0x7c00, 0x7c00);
+                assert_ne!(back & 0x03ff, 0, "NaN collapsed to inf: {h:#06x}");
+            } else {
+                assert_eq!(back, h, "pattern {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_values() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),        // f16 max normal
+            (6.103_515_6e-5, 0x0400), // f16 min normal
+            (5.960_464_5e-8, 0x0001), // f16 min subnormal
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "{x}");
+            assert_eq!(f16_bits_to_f32(bits).to_bits(), x.to_bits(), "{bits:#06x}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn overflow_and_underflow_saturate() {
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00); // → +inf
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000); // → +0
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn integers_up_to_2048_are_exact() {
+        // The 11-bit significand holds integers |x| <= 2048 exactly —
+        // the property the kvstore roundtrip tests rely on.
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{i}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // Round-to-nearest over the normal range: |err| <= 2^-11 * |x|.
+        let mut x = 1.000_123f32;
+        while x < 60_000.0 {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(((y - x) / x).abs() <= 1.0 / 2048.0, "{x} -> {y}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // even mantissa (1.0) wins.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.0 / 2048.0), 0x3c00);
+        // 1 + 3*2^-11 is halfway between 0x3c01 and 0x3c02; even wins.
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 / 2048.0), 0x3c02);
+    }
+}

@@ -10,9 +10,11 @@
 //! * [`bench`] — measurement harness (warmup + timed iterations +
 //!   mean/p50/p99) used by every `benches/` target.
 //! * [`tempdir`] — self-cleaning temporary directories for tests/benches.
+//! * [`half`] — bit-level f32 ⇄ f16 conversion (the v2 KV file format).
 
 pub mod aio;
 pub mod bench;
 pub mod cli;
+pub mod half;
 pub mod json;
 pub mod tempdir;

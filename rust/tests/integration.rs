@@ -9,24 +9,32 @@ use matkv::coordinator::baselines::{mean_f1, token_f1};
 use matkv::coordinator::{serve_overlapped, Engine, EngineOptions, ServeMode};
 use matkv::vectordb::VectorIndex;
 use matkv::hwsim::StorageProfile;
-use matkv::kvstore::KvStore;
+use matkv::kvstore::{KvFormat, KvStore};
 use matkv::util::tempdir::TempDir;
 use matkv::workload::{Corpus, RagRequest, RequestGen, TurboRagProfile};
 use matkv::Manifest;
 
 const DOC_TOKENS: usize = 512;
 
-fn build_engine(n_docs: usize) -> (TempDir, Corpus, Engine) {
+fn build_engine_with(
+    n_docs: usize,
+    tune: impl FnOnce(&mut KvStore),
+) -> (TempDir, Corpus, Engine) {
     let m = Manifest::load(matkv::artifacts_dir()).expect("make artifacts first");
     let corpus = Corpus::generate(n_docs, DOC_TOKENS, n_docs.min(8), 11);
     let dir = TempDir::new("matkv-itest").unwrap();
-    let kv = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+    let mut kv = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+    tune(&mut kv);
     let opts = EngineOptions::for_config(&m, "tiny").unwrap();
     let engine = Engine::new(&m, opts, kv, corpus.texts()).unwrap();
     let stats = engine.ingest_corpus(&corpus, DOC_TOKENS).unwrap();
     assert_eq!(stats.docs, n_docs);
     assert_eq!(stats.tokens, n_docs * DOC_TOKENS);
     (dir, corpus, engine)
+}
+
+fn build_engine(n_docs: usize) -> (TempDir, Corpus, Engine) {
+    build_engine_with(n_docs, |_| {})
 }
 
 fn requests(corpus: &Corpus, n: usize, top_k: usize, out: usize) -> Vec<RagRequest> {
@@ -68,7 +76,10 @@ fn matkv_serves_batches_deterministically() {
 fn single_doc_matkv_equals_vanilla_exactly() {
     // With one retrieved document there is no cross-document attention to
     // drop: MatKV must generate the *identical* token sequence as Vanilla.
-    let (_d, corpus, engine) = build_engine(6);
+    // Lossless (v1/f32) storage isolates the position-alignment claim
+    // from f16 quantization; the default v2 format's fidelity is covered
+    // statistically by `two_doc_modes_are_close_but_not_identical`.
+    let (_d, corpus, engine) = build_engine_with(6, |kv| kv.set_format(KvFormat::V1));
     let reqs = requests(&corpus, 3, 1, 8);
     let (rv, _) = engine.serve_all(&reqs, 1, ServeMode::Vanilla).unwrap();
     let (rm, _) = engine.serve_all(&reqs, 1, ServeMode::MatKv).unwrap();
@@ -230,6 +241,60 @@ fn context_overflow_is_clean_error() {
     let reqs = requests(&corpus, 1, 5, 2);
     let err = engine.serve_all(&reqs, 1, ServeMode::MatKv).unwrap_err();
     assert!(err.to_string().contains("does not fit"), "{err}");
+}
+
+#[test]
+fn hot_tier_serves_repeat_traffic_from_dram() {
+    // Acceptance: with a hot tier big enough for the popular chunks,
+    // repeated stage_matkv of the same requests reports cache hits and
+    // strictly lower simulated device time than the cold pass.
+    let (_d, corpus, engine) = build_engine_with(6, |kv| kv.set_hot_tier(256 << 20));
+    let reqs = requests(&corpus, 4, 2, 4);
+    let (r_cold, cold) = engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+    let (r_warm, warm) = engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+    assert!(cold.load_reads > 0, "first pass must miss to the device");
+    assert!(warm.cache_hits > 0, "repeat pass must hit the hot tier");
+    assert_eq!(warm.cache_hits + warm.load_reads, cold.cache_hits + cold.load_reads);
+    assert!(warm.load_device_secs < cold.load_device_secs);
+    assert!(warm.cache_bytes_saved > 0);
+    assert_eq!(warm.loaded_tokens, cold.loaded_tokens, "hits still splice tokens");
+    // the tier must not change what gets generated
+    for (a, b) in r_cold.iter().zip(&r_warm) {
+        assert_eq!(a.tokens, b.tokens, "hot tier changed results");
+    }
+    // and the overlap pipeline sees the same tier through the shared Arc
+    let (r_ov, agg, _report) = serve_overlapped(&engine, &reqs, 2, ServeMode::MatKv).unwrap();
+    assert!(agg.cache_hits > 0);
+    for (a, b) in r_cold.iter().zip(&r_ov) {
+        assert_eq!(a.tokens, b.tokens, "overlap + hot tier changed results");
+    }
+}
+
+#[test]
+fn vanilla_context_budget_guard() {
+    let (_d, corpus, engine) = build_engine(6);
+    // 5 x 512 doc tokens alone exceed C=2304: prefill must bail before
+    // stepping past the cache.
+    let reqs = requests(&corpus, 1, 5, 2);
+    let err = engine.serve_all(&reqs, 1, ServeMode::Vanilla).unwrap_err();
+    assert!(err.to_string().contains("exceeds serve context"), "{err}");
+    // 4 x 512 docs fit, but the decode budget pushes past C.
+    let reqs = requests(&corpus, 1, 4, 400);
+    let err = engine.serve_all(&reqs, 1, ServeMode::Vanilla).unwrap_err();
+    assert!(err.to_string().contains("exceeds serve context"), "{err}");
+}
+
+#[test]
+fn early_decode_break_counts_actual_tokens() {
+    // MatKV with 4 x 512 spliced docs leaves < 400 decode slots in
+    // C=2304: decode breaks early and tokens_out must report what was
+    // generated, not the requested budget.
+    let (_d, corpus, engine) = build_engine(6);
+    let reqs = requests(&corpus, 1, 4, 400);
+    let (r, m) = engine.serve_all(&reqs, 1, ServeMode::MatKv).unwrap();
+    assert!(!r[0].tokens.is_empty());
+    assert!(r[0].tokens.len() < 400, "decode did not break early: {}", r[0].tokens.len());
+    assert_eq!(m.tokens_out, r[0].tokens.len(), "tokens_out overstates generation");
 }
 
 #[test]
