@@ -10,8 +10,10 @@
 //! share), and a hit ratio far above the capacity share at s>=1, where
 //! a top-decile tier absorbs roughly half the accesses.
 
+use std::fmt::Write as _;
+
 use matkv::hwsim::StorageProfile;
-use matkv::kvstore::{KvChunk, KvStore};
+use matkv::kvstore::{series_to_json, KvChunk, KvStore};
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
@@ -56,7 +58,11 @@ fn main() -> anyhow::Result<()> {
         &format!("Hot-tier hit ratio — tier size vs Zipf skew ({accesses} accesses)"),
         &["skew s", "tier (% corpus)", "hits", "hit ratio", "device read (s)", "saved (MB)"],
     );
+    // Serve-time telemetry: sample the tier every `window` accesses so
+    // the hit/miss/eviction series can be plotted against offered load.
+    let window = (accesses / 32).max(1);
     let mut top_decile_s1 = 0.0;
+    let mut json_cells = String::new();
     for &skew in &[0.0, 0.5, 1.0, 1.5] {
         for &pct in &[0usize, 5, 10, 25, 50] {
             let mut store = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
@@ -65,10 +71,15 @@ fn main() -> anyhow::Result<()> {
             let zipf = Zipf::new(n_chunks, skew);
             let mut rng = Rng::new(1234);
             let (mut hits, mut device_secs) = (0u64, 0.0f64);
-            for _ in 0..accesses {
+            for i in 0..accesses {
                 let l = store.load(zipf.sample(&mut rng) as u64)?;
                 hits += l.from_cache as u64;
                 device_secs += l.device_secs;
+                if (i + 1) % window == 0 {
+                    if let Some(tier) = store.hot_tier() {
+                        tier.sample();
+                    }
+                }
             }
             let ratio = hits as f64 / accesses as f64;
             if skew == 1.0 && pct == 10 {
@@ -86,6 +97,15 @@ fn main() -> anyhow::Result<()> {
                 format!("{device_secs:.4}"),
                 format!("{:.1}", saved as f64 / 1e6),
             ]);
+            let series = store.hot_tier().map(|t| t.stats.series()).unwrap_or_default();
+            let _ = write!(
+                json_cells,
+                "{}{{\"skew\":{skew},\"tier_pct\":{pct},\"hits\":{hits},\
+                 \"hit_ratio\":{ratio:.6},\"device_secs\":{device_secs:.6},\
+                 \"bytes_saved\":{saved},\"window\":{window},\"series\":{}}}",
+                if json_cells.is_empty() { "" } else { "," },
+                series_to_json(&series),
+            );
         }
     }
     table.print();
@@ -94,5 +114,14 @@ fn main() -> anyhow::Result<()> {
          (vs 10% for a uniform stream) — the popular mass the ten-day rule banks on.",
         100.0 * top_decile_s1
     );
+    if let Some(path) = args.opt("json") {
+        let doc = format!(
+            "{{\"bench\":\"fig_tier_hit\",\"chunks\":{n_chunks},\"accesses\":{accesses},\
+             \"chunk_tokens\":{seq},\"cells\":[{json_cells}]}}"
+        );
+        std::fs::write(path, doc)?;
+        eprintln!("[fig_tier_hit] wrote {path}");
+    }
     Ok(())
 }
+

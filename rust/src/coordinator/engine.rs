@@ -175,8 +175,10 @@ impl LoaderCtx {
                 staged.metrics.load_device_secs += l.device_secs;
                 staged.metrics.loaded_bytes += l.file_bytes;
                 staged.metrics.load_reads += 1;
+                staged.metrics.record_shard_read(l.shard, l.file_bytes, l.device_secs);
             }
         }
+        staged.metrics.shard_peak_queue = self.kv.shard_peak_queues();
         staged.metrics.load_wall_secs = t0.elapsed().as_secs_f64();
         Ok(staged)
     }
@@ -497,6 +499,11 @@ impl Engine {
         // the *requested* budget.
         m.tokens_out = responses.iter().map(|r| r.tokens.len()).sum();
         m.total_wall_secs = total_t0.elapsed().as_secs_f64();
+        // One telemetry sample per executed batch: the hit/miss/eviction
+        // time series the serve-time telemetry benches plot.
+        if let Some(tier) = self.kv.hot_tier() {
+            tier.sample();
+        }
         Ok((responses, m))
     }
 

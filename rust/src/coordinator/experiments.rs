@@ -20,6 +20,8 @@ pub struct Scenario {
     pub doc_tokens: usize,
     /// Hot-tier budget to re-apply when the storage device is swapped.
     hot_tier_bytes: usize,
+    /// Shard count to re-apply on reopen (the on-disk layout pins it).
+    shards: usize,
     /// Keep the KV directory alive for the scenario's lifetime.
     _kv_dir: TempDir,
 }
@@ -34,6 +36,9 @@ pub struct ScenarioSpec {
     pub seed: u64,
     /// DRAM hot-tier budget in bytes (0 = flash only).
     pub hot_tier_bytes: usize,
+    /// Simulated independent storage devices (1 = the classic single
+    /// bus; >1 = a JBOD, `profile` describing each member device).
+    pub shards: usize,
 }
 
 impl Default for ScenarioSpec {
@@ -45,6 +50,7 @@ impl Default for ScenarioSpec {
             doc_tokens: 1024,
             seed: 42,
             hot_tier_bytes: 0,
+            shards: 1,
         }
     }
 }
@@ -56,7 +62,7 @@ impl Scenario {
         let corpus =
             Corpus::generate(spec.n_docs, spec.doc_tokens, spec.n_docs.min(16), spec.seed);
         let kv_dir = TempDir::new("matkv-scenario")?;
-        let mut kv = KvStore::open(kv_dir.path(), spec.storage)?;
+        let mut kv = KvStore::open_sharded(kv_dir.path(), spec.storage, spec.shards.max(1))?;
         kv.set_hot_tier(spec.hot_tier_bytes);
         let opts = EngineOptions::for_config(&manifest, &spec.config)?;
         let engine = Engine::new(&manifest, opts, kv, corpus.texts())?;
@@ -66,6 +72,7 @@ impl Scenario {
             corpus,
             doc_tokens: spec.doc_tokens,
             hot_tier_bytes: spec.hot_tier_bytes,
+            shards: spec.shards.max(1),
             _kv_dir: kv_dir,
         })
     }
@@ -87,9 +94,11 @@ impl Scenario {
         // Arc<KvStore> is shared with loader contexts; re-opening is the
         // clean way to swap the throttle everywhere at once. The hot
         // tier restarts cold, exactly like a real node after a device
-        // swap.
+        // swap. The shard count must match the on-disk layout (the
+        // marker file rejects anything else).
         let dir = self._kv_dir.path().to_path_buf();
-        let mut store = KvStore::open(dir, profile).expect("reopen kvstore");
+        let mut store =
+            KvStore::open_sharded(dir, profile, self.shards).expect("reopen kvstore");
         store.set_hot_tier(self.hot_tier_bytes);
         self.engine.kv = std::sync::Arc::new(store);
     }
@@ -98,10 +107,15 @@ impl Scenario {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::ServeMode;
+    use crate::coordinator::{serve_overlapped_with, OverlapOptions, ServeMode};
+
+    // These suites execute models through PJRT: golden metadata is not
+    // enough, they need the real AOT artifacts.
+    use crate::require_artifacts;
 
     #[test]
     fn scenario_builds_and_serves() {
+        require_artifacts!();
         let mut spec = ScenarioSpec::default();
         spec.n_docs = 4;
         spec.doc_tokens = 256;
@@ -115,6 +129,7 @@ mod tests {
 
     #[test]
     fn scenario_hot_tier_hits_on_repeat_traffic() {
+        require_artifacts!();
         let mut spec = ScenarioSpec::default();
         spec.n_docs = 4;
         spec.doc_tokens = 256;
@@ -130,6 +145,7 @@ mod tests {
 
     #[test]
     fn storage_swap_changes_profile() {
+        require_artifacts!();
         let mut spec = ScenarioSpec::default();
         spec.n_docs = 2;
         spec.doc_tokens = 256;
@@ -140,5 +156,73 @@ mod tests {
         assert_eq!(sc.engine.kv.profile().name, "9100Pro");
         // materialized files survive the swap
         assert_eq!(sc.engine.kv.len().unwrap(), 2);
+    }
+
+    #[test]
+    fn sharded_scenario_serves_and_rolls_up_per_shard_reads() {
+        require_artifacts!();
+        let mut spec = ScenarioSpec::default();
+        spec.n_docs = 8;
+        spec.doc_tokens = 256;
+        spec.storage = StorageProfile::dram();
+        spec.shards = 4;
+        let mut sc = Scenario::build(spec).unwrap();
+        assert_eq!(sc.engine.kv.n_shards(), 4);
+        let reqs = sc.requests(4, 2, 2);
+        let (r, m) = sc.engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(m.shard_reads.len(), 4);
+        assert_eq!(m.shard_reads.iter().sum::<u64>() as usize, m.load_reads);
+        assert_eq!(m.shard_bytes.iter().sum::<u64>() as usize, m.loaded_bytes);
+        // the storage swap preserves the sharded layout
+        sc.set_storage(StorageProfile::dram());
+        assert_eq!(sc.engine.kv.n_shards(), 4);
+        assert_eq!(sc.engine.kv.len().unwrap(), 8);
+    }
+
+    #[test]
+    fn prefetch_overlap_converts_misses_to_tier_hits() {
+        require_artifacts!();
+        let mut spec = ScenarioSpec::default();
+        spec.n_docs = 8;
+        spec.doc_tokens = 256;
+        spec.storage = StorageProfile::dram();
+        spec.hot_tier_bytes = 256 << 20;
+        spec.shards = 2;
+        let sc = Scenario::build(spec).unwrap();
+        let reqs = sc.requests(8, 2, 2);
+        let opts = OverlapOptions { prefetch: true, lookahead: 3 };
+        let (r, m, rep) =
+            serve_overlapped_with(&sc.engine, &reqs, 2, ServeMode::MatKv, &opts).unwrap();
+        assert_eq!(r.len(), 8);
+        // The prefetcher processed upcoming batches: every id it saw was
+        // either warmed, already warm, or (rarely, under admission
+        // pressure) rejected — never an error, never absent.
+        assert!(
+            rep.prefetch_warmed + rep.prefetch_already_resident + rep.prefetch_rejected > 0,
+            "{rep:?}"
+        );
+        assert_eq!(rep.prefetch_absent, 0);
+        assert!(m.cache_hits > 0);
+        // the serve answers match a plain overlapped run
+        let sc2 = {
+            let mut spec = ScenarioSpec::default();
+            spec.n_docs = 8;
+            spec.doc_tokens = 256;
+            spec.storage = StorageProfile::dram();
+            spec.hot_tier_bytes = 256 << 20;
+            spec.shards = 2;
+            Scenario::build(spec).unwrap()
+        };
+        let (r2, _, _) = crate::coordinator::serve_overlapped(
+            &sc2.engine,
+            &sc2.requests(8, 2, 2),
+            2,
+            ServeMode::MatKv,
+        )
+        .unwrap();
+        for (a, b) in r.iter().zip(&r2) {
+            assert_eq!(a.tokens, b.tokens, "prefetch changed generated tokens");
+        }
     }
 }

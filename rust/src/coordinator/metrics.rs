@@ -68,6 +68,18 @@ pub struct PhaseBreakdown {
     pub loaded_tokens: usize,
     /// Number of chunk reads issued to the storage device.
     pub load_reads: usize,
+    /// Device reads per shard (index = shard; empty when no loads ran).
+    /// The JBOD rollup: `shard_reads.len()` is the shard count, and the
+    /// spread across entries shows routing balance.
+    pub shard_reads: Vec<u64>,
+    /// Bytes read from the device, per shard.
+    pub shard_bytes: Vec<u64>,
+    /// Simulated device seconds, per shard. Aggregate device *time*
+    /// stays the sum, but the JBOD's wall cost is the max entry — the
+    /// slowest device — which is what shrinks with more shards.
+    pub shard_device_secs: Vec<f64>,
+    /// Peak in-flight reads per shard (high-water mark; merged by max).
+    pub shard_peak_queue: Vec<u64>,
     /// Chunk loads served by the DRAM hot tier (no device read).
     pub cache_hits: usize,
     /// Tokens of KV served by the hot tier (subset of `loaded_tokens`).
@@ -92,7 +104,45 @@ pub struct PhaseBreakdown {
     pub tokens_out: usize,
 }
 
+/// Element-wise `a[i] += b[i]`, growing `a` as needed.
+fn merge_add<T: Copy + Default + std::ops::AddAssign>(a: &mut Vec<T>, b: &[T]) {
+    if a.len() < b.len() {
+        a.resize(b.len(), T::default());
+    }
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Element-wise `a[i] = max(a[i], b[i])`, growing `a` as needed (gauges
+/// like peak queue depth merge by high-water mark, not by sum).
+fn merge_max(a: &mut Vec<u64>, b: &[u64]) {
+    if a.len() < b.len() {
+        a.resize(b.len(), 0);
+    }
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = (*x).max(y);
+    }
+}
+
 impl PhaseBreakdown {
+    /// Record one device read against `shard` (engine rollup while
+    /// walking `load_many` results).
+    pub fn record_shard_read(&mut self, shard: usize, bytes: usize, device_secs: f64) {
+        if self.shard_reads.len() <= shard {
+            self.shard_reads.resize(shard + 1, 0);
+        }
+        if self.shard_bytes.len() <= shard {
+            self.shard_bytes.resize(shard + 1, 0);
+        }
+        if self.shard_device_secs.len() <= shard {
+            self.shard_device_secs.resize(shard + 1, 0.0);
+        }
+        self.shard_reads[shard] += 1;
+        self.shard_bytes[shard] += bytes as u64;
+        self.shard_device_secs[shard] += device_secs;
+    }
+
     /// Merge another breakdown (sequential aggregation).
     pub fn add(&mut self, other: &PhaseBreakdown) {
         self.retrieve_secs += other.retrieve_secs;
@@ -101,6 +151,10 @@ impl PhaseBreakdown {
         self.loaded_bytes += other.loaded_bytes;
         self.loaded_tokens += other.loaded_tokens;
         self.load_reads += other.load_reads;
+        merge_add(&mut self.shard_reads, &other.shard_reads);
+        merge_add(&mut self.shard_bytes, &other.shard_bytes);
+        merge_add(&mut self.shard_device_secs, &other.shard_device_secs);
+        merge_max(&mut self.shard_peak_queue, &other.shard_peak_queue);
         self.cache_hits += other.cache_hits;
         self.cache_tokens += other.cache_tokens;
         self.cache_bytes_saved += other.cache_bytes_saved;
@@ -241,6 +295,34 @@ mod tests {
         assert_eq!(a.cache_hits, 2);
         assert_eq!(a.cache_tokens, 4);
         assert_eq!(a.cache_bytes_saved, 99);
+    }
+
+    #[test]
+    fn shard_rollup_merges_sums_and_peaks() {
+        let mut a = PhaseBreakdown::default();
+        a.record_shard_read(0, 100, 0.5);
+        a.record_shard_read(2, 300, 1.5); // sparse shard index grows vecs
+        a.shard_peak_queue = vec![2, 0, 1];
+        assert_eq!(a.shard_reads, vec![1, 0, 1]);
+        assert_eq!(a.shard_bytes, vec![100, 0, 300]);
+
+        let mut b = PhaseBreakdown::default();
+        b.record_shard_read(0, 50, 0.25);
+        b.record_shard_read(1, 60, 0.25);
+        b.shard_peak_queue = vec![1, 4];
+
+        a.add(&b);
+        assert_eq!(a.shard_reads, vec![2, 1, 1]);
+        assert_eq!(a.shard_bytes, vec![150, 60, 300]);
+        assert!((a.shard_device_secs[0] - 0.75).abs() < 1e-12);
+        // gauges merge by max, counters by sum
+        assert_eq!(a.shard_peak_queue, vec![2, 4, 1]);
+
+        // merging into an empty breakdown grows the vectors
+        let mut empty = PhaseBreakdown::default();
+        empty.add(&a);
+        assert_eq!(empty.shard_reads, a.shard_reads);
+        assert_eq!(empty.shard_peak_queue, a.shard_peak_queue);
     }
 
     #[test]

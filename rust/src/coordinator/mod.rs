@@ -26,4 +26,4 @@ pub use engine::{Engine, EngineOptions, Response, ServeMode};
 pub use ingest::{IngestStats, Ingestor};
 pub use metrics::{PhaseBreakdown, Percentiles};
 pub use experiments::{Scenario, ScenarioSpec};
-pub use overlap::serve_overlapped;
+pub use overlap::{serve_overlapped, serve_overlapped_with, OverlapOptions, OverlapReport};

@@ -14,15 +14,53 @@
 //! device read), which shrinks `loader_busy_secs` and with it the only
 //! stage that can stall the executor. Per-batch hit counts surface in
 //! the aggregated [`PhaseBreakdown`] (`cache_hits`/`cache_bytes_saved`).
+//!
+//! **Retrieval-aware prefetch** ([`OverlapOptions::prefetch`]) adds a
+//! third thread: the vector-DB top-K for upcoming batches is knowable
+//! *before* the loader stages them, so the prefetcher re-runs retrieval
+//! a bounded lookahead ahead of the executor and warms the hot tier via
+//! [`KvStore::prefetch_many`]'s protected admission path. Chunks the
+//! prefetcher lands become tier hits when the loader reaches that batch
+//! — device reads move off the loader's critical path onto a thread
+//! whose time was previously spent blocked on the staging channel. The
+//! lookahead is paced by executor progress so prefetched chunks aren't
+//! evicted (by later prefetches) before their batch needs them.
+//!
+//! [`LoaderCtx`]: super::engine::LoaderCtx
+//! [`KvStore::prefetch_many`]: crate::kvstore::KvStore::prefetch_many
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::engine::{Engine, Response, ServeMode, StagedBatch};
 use super::metrics::PhaseBreakdown;
+use crate::vectordb::ChunkId;
 use crate::workload::RagRequest;
+
+/// Knobs for [`serve_overlapped_with`].
+#[derive(Debug, Clone)]
+pub struct OverlapOptions {
+    /// Warm the DRAM hot tier for upcoming batches from their retrieval
+    /// top-K (requires the store to have a hot tier; a no-op otherwise).
+    pub prefetch: bool,
+    /// How many batches past the last *executed* one the prefetcher may
+    /// run ahead (≥ 1). The loader itself pipelines up to 2 batches
+    /// ahead of the executor (one staged in the channel, one staging),
+    /// and the prefetcher never touches a batch the loader has claimed,
+    /// so the default of 2 targets exactly the next batch the loader
+    /// will stage. Larger values warm further ahead at the risk of
+    /// later prefetches displacing earlier ones before use.
+    pub lookahead: usize,
+}
+
+impl Default for OverlapOptions {
+    fn default() -> Self {
+        OverlapOptions { prefetch: false, lookahead: 2 }
+    }
+}
 
 /// Timing summary of an overlapped run.
 #[derive(Debug, Clone, Default)]
@@ -37,22 +75,48 @@ pub struct OverlapReport {
     /// bubble — ~0 when SSD bandwidth keeps up, the paper's claim).
     pub exec_stall_secs: f64,
     pub batches: usize,
+    /// Prefetcher busy time (retrieval re-runs + throttled tier warming);
+    /// overlaps the executor, so it is not on the critical path.
+    pub prefetch_busy_secs: f64,
+    /// Chunks the prefetcher admitted to the hot tier.
+    pub prefetch_warmed: usize,
+    /// Prefetch requests that were already resident.
+    pub prefetch_already_resident: usize,
+    /// Prefetch requests missing/unreadable on flash (left to demand).
+    pub prefetch_absent: usize,
+    /// Prefetch admissions refused to protect demand-resident chunks.
+    pub prefetch_rejected: usize,
+    /// Simulated device seconds consumed by prefetch reads.
+    pub prefetch_device_secs: f64,
 }
 
-/// Serve requests in fixed-size batches with load/decode overlap.
-///
-/// MatKV only (Vanilla has no load phase to hide; the engine rejects it).
+/// Serve requests in fixed-size batches with load/decode overlap
+/// (defaults: no prefetch). See [`serve_overlapped_with`].
 pub fn serve_overlapped(
     engine: &Engine,
     reqs: &[RagRequest],
     batch_size: usize,
     mode: ServeMode,
 ) -> Result<(Vec<Response>, PhaseBreakdown, OverlapReport)> {
+    serve_overlapped_with(engine, reqs, batch_size, mode, &OverlapOptions::default())
+}
+
+/// Serve requests in fixed-size batches with load/decode overlap and,
+/// optionally, retrieval-aware hot-tier prefetch.
+///
+/// MatKV only (Vanilla has no load phase to hide; the engine rejects it).
+pub fn serve_overlapped_with(
+    engine: &Engine,
+    reqs: &[RagRequest],
+    batch_size: usize,
+    mode: ServeMode,
+    opts: &OverlapOptions,
+) -> Result<(Vec<Response>, PhaseBreakdown, OverlapReport)> {
     anyhow::ensure!(
         !matches!(mode, ServeMode::Vanilla),
         "overlap requires a load phase (MatKv or CacheBlend)"
     );
-    let ctx = engine.loader_ctx();
+    let loader_ctx = engine.loader_ctx();
     let batches: Vec<Vec<RagRequest>> = reqs.chunks(batch_size).map(|c| c.to_vec()).collect();
     let n_batches = batches.len();
     let (tx, rx) = mpsc::sync_channel::<Result<(StagedBatch, f64)>>(1);
@@ -62,31 +126,108 @@ pub fn serve_overlapped(
     let mut responses = Vec::with_capacity(reqs.len());
     let mut agg = PhaseBreakdown::default();
 
+    // Prefetcher pacing: `executed` counts batches the executor has
+    // finished, `claimed` counts batches the loader has *started*
+    // staging (the prefetcher must never double-read a batch the loader
+    // is already demand-loading — the tier would miss for both and the
+    // same chunks would charge the shard throttles twice). A stop latch
+    // set on executor exit (success or error) bounds the prefetcher.
+    let executed = AtomicUsize::new(0);
+    let claimed = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+
     std::thread::scope(|scope| -> Result<()> {
-        scope.spawn(move || {
-            for batch in batches {
-                let t0 = Instant::now();
-                let staged = ctx.stage_matkv(&batch);
-                let busy = t0.elapsed().as_secs_f64();
-                if tx.send(staged.map(|s| (s, busy))).is_err() {
-                    return; // executor hung up (error path)
+        let prefetch_handle = if opts.prefetch {
+            let pctx = engine.loader_ctx();
+            let batches = &batches;
+            let executed = &executed;
+            let claimed = &claimed;
+            let stop = &stop;
+            let lookahead = opts.lookahead.max(1);
+            Some(scope.spawn(move || {
+                let mut totals = OverlapReport::default();
+                // Batch 0 is claimed by the loader immediately.
+                for (i, batch) in batches.iter().enumerate().skip(1) {
+                    while i > executed.load(Ordering::Acquire).saturating_add(lookahead) {
+                        if stop.load(Ordering::Acquire) {
+                            return totals;
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    if stop.load(Ordering::Acquire) {
+                        return totals;
+                    }
+                    if i < claimed.load(Ordering::Acquire) {
+                        continue; // loader already staging/staged it
+                    }
+                    let t0 = Instant::now();
+                    let ids: Vec<ChunkId> = batch
+                        .iter()
+                        .flat_map(|r| pctx.retrieval.retrieve(&r.query, r.top_k))
+                        .collect();
+                    let rep = pctx.kv.prefetch_many(&ids);
+                    totals.prefetch_busy_secs += t0.elapsed().as_secs_f64();
+                    totals.prefetch_warmed += rep.warmed;
+                    totals.prefetch_already_resident += rep.already_resident;
+                    totals.prefetch_absent += rep.absent;
+                    totals.prefetch_rejected += rep.rejected;
+                    totals.prefetch_device_secs += rep.device_secs;
                 }
-            }
-        });
+                totals
+            }))
+        } else {
+            None
+        };
 
-        for _ in 0..n_batches {
-            let t0 = Instant::now();
-            let (staged, loader_busy) = rx.recv().context("loader thread died")??;
-            report.exec_stall_secs += t0.elapsed().as_secs_f64();
-            report.loader_busy_secs += loader_busy;
-
-            let t0 = Instant::now();
-            let (r, m) = engine.exec_staged(staged, mode)?;
-            report.exec_busy_secs += t0.elapsed().as_secs_f64();
-            responses.extend(r);
-            agg.add(&m);
+        {
+            let batches = &batches;
+            let claimed = &claimed;
+            scope.spawn(move || {
+                for (i, batch) in batches.iter().enumerate() {
+                    claimed.store(i + 1, Ordering::Release);
+                    let t0 = Instant::now();
+                    let staged = loader_ctx.stage_matkv(batch);
+                    let busy = t0.elapsed().as_secs_f64();
+                    if tx.send(staged.map(|s| (s, busy))).is_err() {
+                        return; // executor hung up (error path)
+                    }
+                }
+            });
         }
-        Ok(())
+
+        let mut run = || -> Result<()> {
+            for i in 0..n_batches {
+                let t0 = Instant::now();
+                let (staged, loader_busy) = rx.recv().context("loader thread died")??;
+                report.exec_stall_secs += t0.elapsed().as_secs_f64();
+                report.loader_busy_secs += loader_busy;
+
+                let t0 = Instant::now();
+                let (r, m) = engine.exec_staged(staged, mode)?;
+                report.exec_busy_secs += t0.elapsed().as_secs_f64();
+                responses.extend(r);
+                agg.add(&m);
+                executed.store(i + 1, Ordering::Release);
+            }
+            Ok(())
+        };
+        let result = run();
+        stop.store(true, Ordering::Release);
+        // Unblock the loader before the scope joins it: on an executor
+        // error it may be parked in `send` with a staged batch nobody
+        // will receive — dropping the receiver turns that into a send
+        // error and a clean loader exit (instead of a deadlocked join).
+        drop(rx);
+        if let Some(handle) = prefetch_handle {
+            let totals = handle.join().map_err(|_| anyhow::anyhow!("prefetch thread panicked"))?;
+            report.prefetch_busy_secs = totals.prefetch_busy_secs;
+            report.prefetch_warmed = totals.prefetch_warmed;
+            report.prefetch_already_resident = totals.prefetch_already_resident;
+            report.prefetch_absent = totals.prefetch_absent;
+            report.prefetch_rejected = totals.prefetch_rejected;
+            report.prefetch_device_secs = totals.prefetch_device_secs;
+        }
+        result
     })?;
 
     report.wall_secs = wall_t0.elapsed().as_secs_f64();

@@ -68,7 +68,9 @@ mod tests {
     use crate::manifest::Manifest;
 
     fn base() -> ModelConfig {
-        Manifest::load(crate::artifacts_dir()).unwrap().config("base").unwrap().clone()
+        // Roofline math only needs config dims — golden metadata
+        // suffices when the real artifacts aren't built.
+        Manifest::load_or_golden().unwrap().config("base").unwrap().clone()
     }
 
     #[test]

@@ -24,6 +24,56 @@ use std::sync::{Arc, Mutex};
 use super::store::KvChunk;
 use crate::vectordb::ChunkId;
 
+/// One point of the serve-time telemetry series: a *cumulative* snapshot
+/// of the counters plus the tier's residency at sample time. Emitters
+/// (benches, the overlap pipeline) call [`HotTier::sample`] once per
+/// batch / access window; consumers diff consecutive samples to get the
+/// per-batch rates the hit-ratio-vs-offered-load curves need.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheSample {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub prefetch_inserts: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_rejected: u64,
+    pub resident_bytes: u64,
+    pub resident_chunks: u64,
+}
+
+impl CacheSample {
+    /// Compact JSON object — the one serializer for the telemetry
+    /// series, so benches embedding it in `--json` output can't drift
+    /// from the struct's fields.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
+             \"prefetch_inserts\":{},\"prefetch_hits\":{},\"prefetch_rejected\":{},\
+             \"resident_bytes\":{},\"resident_chunks\":{}}}",
+            self.hits,
+            self.misses,
+            self.insertions,
+            self.evictions,
+            self.prefetch_inserts,
+            self.prefetch_hits,
+            self.prefetch_rejected,
+            self.resident_bytes,
+            self.resident_chunks
+        )
+    }
+}
+
+/// JSON array of [`CacheSample::to_json`] objects.
+pub fn series_to_json(series: &[CacheSample]) -> String {
+    let body: Vec<String> = series.iter().map(CacheSample::to_json).collect();
+    format!("[{}]", body.join(","))
+}
+
+/// Series entries kept before sampling quietly stops (a run that never
+/// drains would otherwise grow the series without bound).
+const SAMPLE_CAP: usize = 16_384;
+
 /// Cumulative hit/miss/eviction counters (relaxed atomics, like
 /// [`super::StoreStats`]).
 #[derive(Debug, Default)]
@@ -34,6 +84,15 @@ pub struct CacheStats {
     pub evictions: AtomicU64,
     /// On-disk bytes that hits avoided reading from the device.
     pub bytes_saved: AtomicU64,
+    /// Chunks admitted through the prefetch path ([`HotTier::insert_prefetch`]).
+    pub prefetch_inserts: AtomicU64,
+    /// Demand hits served by a still-unread prefetched entry — the reads
+    /// the prefetcher converted from device time into tier hits.
+    pub prefetch_hits: AtomicU64,
+    /// Prefetch admissions dropped to protect demand-resident chunks.
+    pub prefetch_rejected: AtomicU64,
+    /// Sampled cumulative snapshots ([`CacheStats::record_sample`]).
+    series: Mutex<Vec<CacheSample>>,
 }
 
 impl CacheStats {
@@ -46,6 +105,35 @@ impl CacheStats {
         } else {
             0.0
         }
+    }
+
+    /// Cumulative snapshot of the counters (residency supplied by the
+    /// caller, which owns the LRU lock discipline).
+    pub fn snapshot(&self, resident_bytes: usize, resident_chunks: usize) -> CacheSample {
+        CacheSample {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            prefetch_inserts: self.prefetch_inserts.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_rejected: self.prefetch_rejected.load(Ordering::Relaxed),
+            resident_bytes: resident_bytes as u64,
+            resident_chunks: resident_chunks as u64,
+        }
+    }
+
+    /// Append a snapshot to the telemetry series (no-op past [`SAMPLE_CAP`]).
+    pub fn record_sample(&self, resident_bytes: usize, resident_chunks: usize) {
+        let mut series = self.series.lock().unwrap();
+        if series.len() < SAMPLE_CAP {
+            series.push(self.snapshot(resident_bytes, resident_chunks));
+        }
+    }
+
+    /// The sampled telemetry series recorded so far.
+    pub fn series(&self) -> Vec<CacheSample> {
+        self.series.lock().unwrap().clone()
     }
 }
 
@@ -66,6 +154,11 @@ struct Entry {
     cost: usize,
     /// Recency stamp; key into `Lru::order`.
     tick: u64,
+    /// Admitted by the prefetch path and not yet demand-hit. Prefetch
+    /// evictions may only reclaim these — never a chunk some in-flight
+    /// batch demand-loaded — and the first demand hit promotes the entry
+    /// to demand status.
+    prefetched: bool,
 }
 
 #[derive(Default)]
@@ -144,11 +237,30 @@ impl HotTier {
         let old_tick = std::mem::replace(&mut e.tick, tick);
         let chunk = e.chunk.clone();
         let file_bytes = e.file_bytes;
+        if std::mem::take(&mut e.prefetched) {
+            self.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+        }
         lru.order.remove(&old_tick);
         lru.order.insert(tick, id);
         self.stats.hits.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_saved.fetch_add(file_bytes as u64, Ordering::Relaxed);
         Probe::Hit(chunk, file_bytes)
+    }
+
+    /// Residency check with no side effects: no stat bump, no LRU
+    /// promotion. The prefetcher uses this to skip chunks that are
+    /// already warm without distorting the demand hit/miss counters.
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.lru.lock().unwrap().map.contains_key(&id)
+    }
+
+    /// Record one telemetry sample (see [`CacheSample`]).
+    pub fn sample(&self) {
+        let (bytes, chunks) = {
+            let lru = self.lru.lock().unwrap();
+            (lru.bytes, lru.map.len())
+        };
+        self.stats.record_sample(bytes, chunks);
     }
 
     /// Current invalidation generation of `id`. Loaders capture it
@@ -205,7 +317,7 @@ impl HotTier {
             lru.bytes -= old.cost;
         }
         lru.bytes += cost;
-        lru.map.insert(id, Entry { chunk, file_bytes, cost, tick });
+        lru.map.insert(id, Entry { chunk, file_bytes, cost, tick, prefetched: false });
         lru.order.insert(tick, id);
         self.stats.insertions.fetch_add(1, Ordering::Relaxed);
         while lru.bytes > self.budget {
@@ -218,6 +330,75 @@ impl HotTier {
         }
     }
 
+    /// Dedicated prefetch admission, generation-guarded like
+    /// [`HotTier::insert_at`]. The crucial difference from the demand
+    /// path: making room for a prefetched chunk may evict only *other
+    /// not-yet-used prefetched* entries — never a chunk a demand load
+    /// admitted (those may belong to an in-flight batch, and trading a
+    /// certain hit for a speculative one is strictly worse). When the
+    /// protected mass leaves no room, the prefetch is dropped instead.
+    ///
+    /// Returns `true` when `id` is resident after the call (admitted now,
+    /// or already resident from an earlier load).
+    pub fn insert_prefetch(
+        &self,
+        id: ChunkId,
+        chunk: Arc<KvChunk>,
+        file_bytes: usize,
+        seen_gen: u64,
+    ) -> bool {
+        let cost = chunk.dram_bytes();
+        if cost > self.budget {
+            self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
+            self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
+            return false; // superseded while the prefetch read was in flight
+        }
+        if lru.map.contains_key(&id) {
+            return true; // already warm (demand or earlier prefetch); keep as-is
+        }
+        // Admit only if the budget can be met by reclaiming prefetched
+        // entries: walk victims oldest-first, counting reclaimable bytes.
+        let need = (lru.bytes + cost).saturating_sub(self.budget);
+        if need > 0 {
+            let mut reclaimable = 0usize;
+            let mut victims: Vec<(u64, ChunkId)> = Vec::new();
+            for (&tick, &vid) in lru.order.iter() {
+                if reclaimable >= need {
+                    break;
+                }
+                if let Some(e) = lru.map.get(&vid) {
+                    if e.prefetched {
+                        reclaimable += e.cost;
+                        victims.push((tick, vid));
+                    }
+                }
+            }
+            if reclaimable < need {
+                self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
+                return false; // would have to evict demand-resident chunks
+            }
+            for (tick, vid) in victims {
+                lru.order.remove(&tick);
+                if let Some(e) = lru.map.remove(&vid) {
+                    lru.bytes -= e.cost;
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        lru.clock += 1;
+        let tick = lru.clock;
+        lru.bytes += cost;
+        lru.map.insert(id, Entry { chunk, file_bytes, cost, tick, prefetched: true });
+        lru.order.insert(tick, id);
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+        self.stats.prefetch_inserts.fetch_add(1, Ordering::Relaxed);
+        true
+    }
 }
 
 #[cfg(test)]
@@ -318,6 +499,108 @@ mod tests {
         tier.invalidate(9);
         tier.insert_at(8, chunk(8), 100, other);
         assert!(tier.get(8).is_some(), "unrelated invalidation blocked admission");
+    }
+
+    #[test]
+    fn prefetch_cannot_evict_demand_entries() {
+        let tier = HotTier::new(2 * cost());
+        tier.insert(1, chunk(1), 100);
+        tier.insert(2, chunk(2), 100); // budget full of demand entries
+        let admitted = tier.insert_prefetch(3, chunk(3), 100, tier.generation(3));
+        assert!(!admitted, "prefetch displaced a demand-resident chunk");
+        assert!(tier.contains(1) && tier.contains(2));
+        assert!(!tier.contains(3));
+        assert_eq!(tier.stats.prefetch_rejected.load(Ordering::Relaxed), 1);
+        // demand inserts still evict normally
+        tier.insert(4, chunk(4), 100);
+        assert!(tier.contains(4));
+    }
+
+    #[test]
+    fn prefetch_evicts_only_other_prefetched_entries() {
+        let tier = HotTier::new(2 * cost());
+        tier.insert(1, chunk(1), 100); // demand
+        assert!(tier.insert_prefetch(2, chunk(2), 100, tier.generation(2)));
+        // tier full: one demand + one prefetched. A new prefetch must
+        // reclaim the prefetched entry and leave the demand one alone.
+        assert!(tier.insert_prefetch(3, chunk(3), 100, tier.generation(3)));
+        assert!(tier.contains(1), "demand entry evicted by prefetch");
+        assert!(!tier.contains(2));
+        assert!(tier.contains(3));
+        assert_eq!(tier.stats.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn demand_hit_promotes_prefetched_entry() {
+        let tier = HotTier::new(2 * cost());
+        assert!(tier.insert_prefetch(1, chunk(1), 100, tier.generation(1)));
+        assert!(tier.get(1).is_some()); // demand hit: promote to demand status
+        assert_eq!(tier.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+        // promoted entries are now protected from prefetch eviction: a
+        // full tier reclaims the unread prefetched entry, never id 1.
+        assert!(tier.insert_prefetch(2, chunk(2), 100, tier.generation(2)));
+        assert!(tier.insert_prefetch(3, chunk(3), 100, tier.generation(3)));
+        assert!(tier.contains(1), "promoted entry evicted by prefetch");
+        assert!(!tier.contains(2));
+        assert!(tier.contains(3));
+        // a second hit is a plain hit, not another prefetch hit
+        tier.get(1).unwrap();
+        assert_eq!(tier.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn prefetch_generation_guard_rejects_stale() {
+        let tier = HotTier::new(4 * cost());
+        let seen = tier.generation(9);
+        tier.invalidate(9); // a delete/write superseded the prefetch read
+        assert!(!tier.insert_prefetch(9, chunk(9), 100, seen));
+        assert!(!tier.contains(9));
+        assert!(tier.insert_prefetch(9, chunk(9), 100, tier.generation(9)));
+        assert!(tier.contains(9));
+    }
+
+    #[test]
+    fn prefetch_already_resident_is_noop_success() {
+        let tier = HotTier::new(4 * cost());
+        tier.insert(1, chunk(1), 100);
+        assert!(tier.insert_prefetch(1, chunk(2), 100, tier.generation(1)));
+        // the demand copy survives untouched (no downgrade to prefetched)
+        assert_eq!(tier.get(1).unwrap().0.k, chunk(1).k);
+        assert_eq!(tier.stats.prefetch_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(tier.stats.prefetch_inserts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn contains_has_no_side_effects() {
+        let tier = HotTier::new(4 * cost());
+        assert!(!tier.contains(5));
+        tier.insert(5, chunk(5), 100);
+        assert!(tier.contains(5));
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(tier.stats.misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn telemetry_series_samples_cumulative_counters() {
+        let tier = HotTier::new(4 * cost());
+        tier.sample(); // empty tier
+        tier.insert(1, chunk(1), 100);
+        tier.get(1).unwrap();
+        tier.sample();
+        tier.get(1).unwrap();
+        assert!(tier.get(2).is_none()); // miss
+        tier.sample();
+        let series = tier.stats.series();
+        assert_eq!(series.len(), 3);
+        assert_eq!(series[0], CacheSample::default());
+        assert_eq!(series[1].hits, 1);
+        assert_eq!(series[1].insertions, 1);
+        assert_eq!(series[1].resident_chunks, 1);
+        assert_eq!(series[1].resident_bytes, cost() as u64);
+        assert_eq!(series[2].hits, 2);
+        assert_eq!(series[2].misses, 1);
+        // per-window rates fall out of diffing consecutive samples
+        assert_eq!(series[2].hits - series[1].hits, 1);
     }
 
     #[test]

@@ -25,12 +25,25 @@
 //! SSD vs RAID-0 vs DRAM) falls out of swapping profiles; hot-tier hits
 //! bypass the throttle entirely.
 //!
+//! Below the store sits the **shard layer** ([`Shard`],
+//! [`KvStore::open_sharded`]): chunk ids hash across N shard
+//! directories, each with its own throttle, modeling a JBOD of
+//! independent devices — `load_many` misses to different shards overlap
+//! in simulated device time, so aggregate load bandwidth scales with the
+//! shard count. [`KvStore::prefetch_many`] warms the hot tier ahead of
+//! demand time through a protected admission path (prefetches can never
+//! evict demand-resident chunks).
+//!
 //! [`StorageProfile`]: crate::hwsim::StorageProfile
 
 pub mod cache;
+pub mod shard;
 pub mod store;
 pub mod throttle;
 
-pub use cache::{CacheStats, HotTier, Probe};
-pub use store::{KvChunk, KvFormat, KvStore, Loaded, StoreStats};
+pub use cache::{series_to_json, CacheSample, CacheStats, HotTier, Probe};
+pub use shard::{route, Shard, ShardStats};
+pub use store::{
+    KvChunk, KvFormat, KvStore, Loaded, PrefetchReport, ShardedKvStore, StoreStats,
+};
 pub use throttle::DeviceThrottle;

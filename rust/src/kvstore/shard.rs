@@ -1,0 +1,306 @@
+//! Shard layer of the materialized-KV store: one directory + one
+//! [`DeviceThrottle`] per simulated storage device.
+//!
+//! A [`super::KvStore`] is a *set* of shards (a JBOD of independent
+//! SSDs): chunk ids hash to shards with [`route`], every shard charges
+//! its own throttle, and misses to different shards genuinely overlap in
+//! simulated device time — this is how `load_many` bandwidth scales past
+//! a single bus. Routing is a pure function of (id, shard count), so the
+//! same id lands in the same shard directory across process restarts and
+//! store reopens; the shard count itself is pinned by a marker file the
+//! store writes next to the shards (see [`super::KvStore::open_sharded`]).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::throttle::DeviceThrottle;
+use crate::hwsim::StorageProfile;
+use crate::vectordb::ChunkId;
+
+/// Per-device cumulative counters plus live/peak queue-depth gauges
+/// (relaxed atomics, mirroring [`super::StoreStats`] at device scope).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    pub reads: AtomicU64,
+    pub writes: AtomicU64,
+    pub deletes: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    /// Simulated device seconds spent in reads, stored as microseconds
+    /// (atomics have no f64).
+    pub read_device_us: AtomicU64,
+    /// Simulated device seconds spent in writes, as microseconds.
+    pub write_device_us: AtomicU64,
+    /// Reads in flight against this device right now (queued on the
+    /// throttle or mid-filesystem-read).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub peak_queue_depth: AtomicU64,
+}
+
+impl ShardStats {
+    pub fn read_device_secs(&self) -> f64 {
+        self.read_device_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn write_device_secs(&self) -> f64 {
+        self.write_device_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    fn enter_queue(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    fn exit_queue(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn count_read(&self, bytes: usize, device_secs: f64) {
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        if device_secs.is_finite() && device_secs > 0.0 {
+            self.read_device_us.fetch_add((device_secs * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn count_write(&self, bytes: usize, device_secs: f64) {
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        self.bytes_written.fetch_add(bytes as u64, Ordering::Relaxed);
+        if device_secs.is_finite() && device_secs > 0.0 {
+            self.write_device_us.fetch_add((device_secs * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Stable shard routing: a splitmix64 finalizer over the chunk id,
+/// reduced mod the shard count. Purely deterministic — same (id, count)
+/// always maps to the same shard, across reopens and processes — and
+/// well-mixed even for the sequential ids the ingest pipeline assigns.
+pub fn route(id: ChunkId, n_shards: usize) -> usize {
+    debug_assert!(n_shards > 0);
+    let mut z = id.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % n_shards as u64) as usize
+}
+
+/// One simulated storage device: a directory of `.kv` files behind its
+/// own [`DeviceThrottle`], with per-device [`ShardStats`].
+///
+/// Shards hold only raw file bytes — encode/decode and the hot tier
+/// live in [`super::KvStore`], which owns the shard set.
+#[derive(Debug)]
+pub struct Shard {
+    index: usize,
+    dir: PathBuf,
+    throttle: Arc<DeviceThrottle>,
+    pub stats: Arc<ShardStats>,
+}
+
+impl Shard {
+    pub(crate) fn open(index: usize, dir: impl AsRef<Path>, profile: StorageProfile) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating shard dir {dir:?}"))?;
+        Ok(Shard {
+            index,
+            dir,
+            throttle: Arc::new(DeviceThrottle::new(profile)),
+            stats: Arc::new(ShardStats::default()),
+        })
+    }
+
+    /// A copy of this shard driving a different (or disabled) simulated
+    /// device; cumulative [`ShardStats`] carry over. In-flight I/O keeps
+    /// the old throttle, exactly like the pre-shard store's profile swap.
+    pub(crate) fn with_profile(&self, profile: StorageProfile, enabled: bool) -> Shard {
+        Shard {
+            index: self.index,
+            dir: self.dir.clone(),
+            throttle: Arc::new(DeviceThrottle::with_enabled(profile, enabled)),
+            stats: self.stats.clone(),
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn profile(&self) -> &StorageProfile {
+        self.throttle.profile()
+    }
+
+    /// Seconds until this shard's simulated device would be idle (0 when
+    /// idle now) — the backlog gauge the per-shard serve report prints.
+    pub fn backlog_secs(&self) -> f64 {
+        self.throttle.backlog_secs()
+    }
+
+    pub(crate) fn path_of(&self, id: ChunkId) -> PathBuf {
+        self.dir.join(format!("{id:016x}.kv"))
+    }
+
+    pub(crate) fn contains(&self, id: ChunkId) -> bool {
+        self.path_of(id).exists()
+    }
+
+    /// Read a chunk's raw file bytes, throttled to this shard's device.
+    /// Returns the bytes plus the simulated device seconds charged.
+    pub(crate) fn read(&self, id: ChunkId) -> Result<(Vec<u8>, f64)> {
+        let path = self.path_of(id);
+        self.stats.enter_queue();
+        let result = (|| {
+            let start = Instant::now();
+            let data = std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
+            let device_secs = self.throttle.charge_read(data.len(), start.elapsed());
+            Ok((data, device_secs))
+        })();
+        self.stats.exit_queue();
+        if let Ok((data, device_secs)) = &result {
+            self.stats.count_read(data.len(), *device_secs);
+        }
+        result
+    }
+
+    /// Write a chunk's encoded bytes, throttled; returns simulated
+    /// device seconds. Stats count only successful writes.
+    pub(crate) fn write(&self, id: ChunkId, buf: &[u8]) -> Result<f64> {
+        let path = self.path_of(id);
+        let start = Instant::now();
+        std::fs::write(&path, buf).with_context(|| format!("writing KV {path:?}"))?;
+        let device_secs = self.throttle.charge_write(buf.len(), start.elapsed());
+        self.stats.count_write(buf.len(), device_secs);
+        Ok(device_secs)
+    }
+
+    /// Unlink a chunk's file; `Ok(false)` when it was not present.
+    pub(crate) fn delete(&self, id: ChunkId) -> Result<bool> {
+        match std::fs::remove_file(self.path_of(id)) {
+            Ok(()) => {
+                self.stats.deletes.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Number of `.kv` files resident in this shard.
+    pub(crate) fn len(&self) -> Result<usize> {
+        Ok(std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "kv"))
+            .count())
+    }
+
+    /// Total bytes of `.kv` files in this shard.
+    pub(crate) fn bytes_on_disk(&self) -> Result<u64> {
+        let mut total = 0;
+        for e in std::fs::read_dir(&self.dir)? {
+            let e = e?;
+            if e.path().extension().is_some_and(|x| x == "kv") {
+                total += e.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        for n in [1usize, 2, 3, 4, 8, 16] {
+            for id in 0..1000u64 {
+                let s = route(id, n);
+                assert!(s < n);
+                assert_eq!(s, route(id, n), "routing must be a pure function");
+            }
+        }
+    }
+
+    #[test]
+    fn routing_spreads_sequential_ids() {
+        // Ingest assigns sequential doc ids; the mix must still spread
+        // them: no shard may take more than twice its fair share.
+        let n = 4usize;
+        let mut counts = [0usize; 4];
+        for id in 0..1024u64 {
+            counts[route(id, n)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 1024 / n / 2 && c < 1024 / n * 2, "shard {i}: {c}/1024");
+        }
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        for id in [0u64, 1, u64::MAX, 0xdead_beef] {
+            assert_eq!(route(id, 1), 0);
+        }
+    }
+
+    #[test]
+    fn shard_read_write_roundtrip_counts_stats() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-shard-test").unwrap();
+        let shard = Shard::open(0, dir.path(), StorageProfile::dram()).unwrap();
+        let payload = vec![7u8; 1024];
+        shard.write(42, &payload).unwrap();
+        let (back, _secs) = shard.read(42).unwrap();
+        assert_eq!(back, payload);
+        assert_eq!(shard.stats.reads.load(Ordering::Relaxed), 1);
+        assert_eq!(shard.stats.writes.load(Ordering::Relaxed), 1);
+        assert_eq!(shard.stats.bytes_read.load(Ordering::Relaxed), 1024);
+        assert_eq!(shard.stats.bytes_written.load(Ordering::Relaxed), 1024);
+        assert_eq!(shard.stats.queue_depth.load(Ordering::Relaxed), 0);
+        assert!(shard.stats.peak_queue_depth.load(Ordering::Relaxed) >= 1);
+        assert!(shard.delete(42).unwrap());
+        assert!(!shard.delete(42).unwrap());
+        assert!(shard.read(42).is_err());
+        assert_eq!(shard.stats.reads.load(Ordering::Relaxed), 1, "failed read not counted");
+    }
+
+    #[test]
+    fn with_profile_keeps_stats_and_dir() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-shard-prof").unwrap();
+        let shard = Shard::open(3, dir.path(), StorageProfile::dram()).unwrap();
+        shard.write(1, &[0u8; 64]).unwrap();
+        let swapped = shard.with_profile(StorageProfile::ssd_9100pro(), false);
+        assert_eq!(swapped.index(), 3);
+        assert_eq!(swapped.profile().name, "9100Pro");
+        assert_eq!(swapped.stats.writes.load(Ordering::Relaxed), 1, "stats must carry over");
+        assert_eq!(swapped.len().unwrap(), 1);
+    }
+
+    #[test]
+    fn concurrent_reads_track_peak_queue_depth() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-shard-queue").unwrap();
+        let shard = Arc::new(Shard::open(0, dir.path(), StorageProfile::dram()).unwrap());
+        for id in 0..8u64 {
+            shard.write(id, &vec![id as u8; 4096]).unwrap();
+        }
+        let handles: Vec<_> = (0..8u64)
+            .map(|id| {
+                let s = shard.clone();
+                std::thread::spawn(move || s.read(id).unwrap())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(shard.stats.reads.load(Ordering::Relaxed), 8);
+        assert_eq!(shard.stats.queue_depth.load(Ordering::Relaxed), 0, "gauge must drain");
+        assert!(shard.stats.peak_queue_depth.load(Ordering::Relaxed) >= 1);
+    }
+}

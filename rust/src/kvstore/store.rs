@@ -1,5 +1,6 @@
 //! File-backed materialized-KV store with write-behind, throttled loads,
-//! and an optional DRAM hot tier ([`HotTier`]).
+//! an optional DRAM hot tier ([`HotTier`]), and a sharded flash layer
+//! ([`super::Shard`]) so aggregate load bandwidth scales past one bus.
 //!
 //! Two on-disk formats share one header layout (8 little-endian u32
 //! words: magic, version, config id, layers, kv-heads, seq, head dim,
@@ -14,12 +15,11 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::cache::{HotTier, Probe};
-use super::throttle::DeviceThrottle;
+use super::shard::{route, Shard};
 use crate::hwsim::StorageProfile;
 use crate::manifest::ModelConfig;
 use crate::util::aio::{IoPool, Pending};
@@ -131,16 +131,29 @@ pub struct StoreStats {
     pub deletes: AtomicU64,
 }
 
-/// The store: one directory per (deployment, model config), fronted by
-/// an optional byte-budgeted DRAM hot tier.
+/// The store: a set of shard directories under one root (one per
+/// simulated device), fronted by an optional byte-budgeted DRAM hot
+/// tier. [`KvStore::open`] gives the classic single-device store; with
+/// [`KvStore::open_sharded`] it models a JBOD of independent SSDs.
 pub struct KvStore {
-    dir: PathBuf,
-    throttle: Arc<DeviceThrottle>,
+    root: PathBuf,
+    /// One per simulated device; chunk ids hash across them with
+    /// [`route`]. Always non-empty.
+    shards: Vec<Arc<Shard>>,
     pool: IoPool,
     format: KvFormat,
     hot: Option<Arc<HotTier>>,
     pub stats: Arc<StoreStats>,
 }
+
+/// Alias naming the JBOD-configured form of [`KvStore`]: since the shard
+/// refactor every store *is* a shard set (a 1-shard set behaves exactly
+/// like the original single-device store, down to the directory layout).
+pub type ShardedKvStore = KvStore;
+
+/// Shard-count pin, written into the store root so a directory laid out
+/// as N shards is never reopened (and silently mis-routed) as M.
+const SHARD_MARKER: &str = "SHARDS";
 
 /// Result of a load: the chunk plus where it came from and what it cost.
 #[derive(Debug)]
@@ -152,39 +165,170 @@ pub struct Loaded {
     pub file_bytes: usize,
     /// Served from the DRAM hot tier, no device read issued.
     pub from_cache: bool,
+    /// Index of the shard this chunk routes to (for a hit: the device
+    /// read the hit avoided).
+    pub shard: usize,
+}
+
+/// Outcome of a [`KvStore::prefetch_many`] pass. Prefetch is strictly
+/// best-effort: unreadable chunks degrade to a later demand miss and
+/// admission can be refused to protect demand-resident chunks, so the
+/// report carries counts, never errors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefetchReport {
+    /// Ids requested (after in-call dedup).
+    pub requested: usize,
+    /// Already resident in the hot tier — nothing to do.
+    pub already_resident: usize,
+    /// Read from flash and admitted to the hot tier.
+    pub warmed: usize,
+    /// Missing/unreadable on flash — left for the demand path to surface.
+    pub absent: usize,
+    /// Read but not admitted (admission guard or superseded mid-flight).
+    pub rejected: usize,
+    /// Simulated device seconds the prefetch reads consumed.
+    pub device_secs: f64,
 }
 
 impl KvStore {
-    /// Open (creating if needed) a store under `dir`, timed as `profile`.
-    /// Writes default to the v2 (f16) format; no hot tier.
+    /// Open (creating if needed) a single-device store under `dir`,
+    /// timed as `profile`. Writes default to the v2 (f16) format; no
+    /// hot tier. Layout-compatible with pre-shard stores: chunk files
+    /// live directly under `dir`.
     pub fn open(dir: impl AsRef<Path>, profile: StorageProfile) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        Self::open_sharded(dir, profile, 1)
+    }
+
+    /// Open a store of `n_shards` independent simulated devices (a
+    /// JBOD): chunk ids hash across shard directories, each shard
+    /// charges its own [`super::DeviceThrottle`], and `load_many`
+    /// misses to different shards overlap in simulated device time.
+    ///
+    /// `n_shards == 1` keeps files directly under `dir` (the original
+    /// layout); more shards use `dir/shard-NN/`. The count is pinned by
+    /// a marker file: reopening with a different count fails loudly
+    /// instead of silently routing ids to the wrong directories.
+    pub fn open_sharded(
+        dir: impl AsRef<Path>,
+        profile: StorageProfile,
+        n_shards: usize,
+    ) -> Result<Self> {
+        if n_shards == 0 {
+            bail!("a KvStore needs at least one shard");
+        }
+        let root = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root).with_context(|| format!("creating {root:?}"))?;
+        let marker = root.join(SHARD_MARKER);
+        match std::fs::read_to_string(&marker) {
+            Ok(text) => {
+                let pinned: usize = text
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("corrupt shard marker {marker:?}: {text:?}"))?;
+                if pinned != n_shards {
+                    bail!(
+                        "store at {root:?} is laid out as {pinned} shard(s); reopening with \
+                         {n_shards} would mis-route chunk ids"
+                    );
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                if n_shards > 1 && Self::has_loose_chunks(&root)? {
+                    bail!(
+                        "store at {root:?} holds a single-shard layout (chunk files in the \
+                         root); cannot reopen it with {n_shards} shards"
+                    );
+                }
+                std::fs::write(&marker, format!("{n_shards}\n"))
+                    .with_context(|| format!("writing shard marker {marker:?}"))?;
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading shard marker {marker:?}")),
+        }
+        let shards = (0..n_shards)
+            .map(|i| {
+                let sdir = if n_shards == 1 {
+                    root.clone()
+                } else {
+                    root.join(format!("shard-{i:02}"))
+                };
+                Shard::open(i, sdir, profile.clone()).map(Arc::new)
+            })
+            .collect::<Result<Vec<_>>>()?;
         Ok(KvStore {
-            dir,
-            throttle: Arc::new(DeviceThrottle::new(profile)),
-            pool: IoPool::new(4),
+            root,
+            shards,
+            // Enough workers that every simulated device can have I/O in
+            // flight at once, bounded so huge JBODs don't spawn armies.
+            pool: IoPool::new((2 * n_shards).clamp(4, 16)),
             format: KvFormat::V2,
             hot: None,
             stats: Arc::new(StoreStats::default()),
         })
     }
 
-    /// Swap the simulated storage device (Table III sweeps this).
+    fn has_loose_chunks(root: &Path) -> Result<bool> {
+        Ok(std::fs::read_dir(root)?
+            .filter_map(|e| e.ok())
+            .any(|e| e.path().extension().is_some_and(|x| x == "kv")))
+    }
+
+    /// Swap the simulated storage device on every shard (Table III
+    /// sweeps this). Cumulative per-shard stats carry over.
     pub fn set_profile(&mut self, profile: StorageProfile) {
-        self.throttle = Arc::new(DeviceThrottle::new(profile));
+        self.shards =
+            self.shards.iter().map(|s| Arc::new(s.with_profile(profile.clone(), true))).collect();
     }
 
-    /// Disable wall-clock throttling (pure-functional tests).
+    /// Disable wall-clock throttling on every shard (pure-functional
+    /// tests; simulated device seconds are still computed).
     pub fn disable_throttle(&mut self) {
-        let profile = self.throttle.profile().clone();
-        let mut t = DeviceThrottle::new(profile);
-        t.enabled = false;
-        self.throttle = Arc::new(t);
+        self.shards = self
+            .shards
+            .iter()
+            .map(|s| Arc::new(s.with_profile(s.profile().clone(), false)))
+            .collect();
     }
 
+    /// Profile of the simulated devices (uniform across shards).
     pub fn profile(&self) -> &StorageProfile {
-        self.throttle.profile()
+        self.shards[0].profile()
+    }
+
+    /// Root directory of the store (shard dirs live under it).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Width of the store's I/O pool (scales with the shard count so
+    /// every simulated device can have reads in flight at once).
+    pub fn io_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The shard set (telemetry: per-device stats, dirs).
+    pub fn shards(&self) -> &[Arc<Shard>] {
+        &self.shards
+    }
+
+    /// Which shard `id` routes to (stable across reopens).
+    pub fn shard_index_of(&self, id: ChunkId) -> usize {
+        route(id, self.shards.len())
+    }
+
+    fn shard_of(&self, id: ChunkId) -> &Arc<Shard> {
+        &self.shards[self.shard_index_of(id)]
+    }
+
+    /// Per-shard peak read queue depth (cumulative high-water marks).
+    pub fn shard_peak_queues(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .map(|s| s.stats.peak_queue_depth.load(Ordering::Relaxed))
+            .collect()
     }
 
     /// Select the on-disk format for subsequent writes (loads always
@@ -214,11 +358,11 @@ impl KvStore {
     }
 
     fn path_of(&self, id: ChunkId) -> PathBuf {
-        self.dir.join(format!("{id:016x}.kv"))
+        self.shard_of(id).path_of(id)
     }
 
     pub fn contains(&self, id: ChunkId) -> bool {
-        self.path_of(id).exists()
+        self.shard_of(id).contains(id)
     }
 
     fn encode(chunk: &KvChunk, format: KvFormat) -> Vec<u8> {
@@ -319,9 +463,7 @@ impl KvStore {
             hot.invalidate(id);
         }
         let buf = Self::encode(chunk, self.format);
-        let start = Instant::now();
-        std::fs::write(self.path_of(id), &buf)?;
-        let secs = self.throttle.charge_write(buf.len(), start.elapsed());
+        let secs = self.shard_of(id).write(id, &buf)?;
         if let Some(hot) = &self.hot {
             hot.invalidate(id);
         }
@@ -343,15 +485,12 @@ impl KvStore {
         if let Some(hot) = &self.hot {
             hot.invalidate(id);
         }
-        let path = self.path_of(id);
-        let throttle = self.throttle.clone();
+        let shard = self.shard_of(id).clone();
         let stats = self.stats.clone();
         let hot = self.hot.clone();
         let buf = Self::encode(&chunk, self.format);
         self.pool.submit(move || {
-            let start = Instant::now();
-            std::fs::write(&path, &buf)?;
-            let secs = throttle.charge_write(buf.len(), start.elapsed());
+            let secs = shard.write(id, &buf)?;
             // Second invalidation once the write landed: a load that
             // raced the write and read the old bytes can no longer keep
             // or re-admit them (see store_sync).
@@ -382,20 +521,24 @@ impl KvStore {
     }
 
     /// Load many chunks concurrently. Hot-tier hits are answered inline;
-    /// misses go through the I/O pool (and still serialize on the
-    /// simulated device, like real parallel reads of one SSD). Output
-    /// order matches `ids`.
+    /// misses fan out across the shard set through the I/O pool — reads
+    /// against the *same* shard still serialize on that device's
+    /// throttle (like real parallel reads of one SSD), but misses routed
+    /// to different shards overlap in simulated device time, which is
+    /// where the JBOD's aggregate bandwidth comes from. Output order
+    /// matches `ids`.
     pub fn load_many(&self, ids: &[ChunkId]) -> Result<Vec<Loaded>> {
         enum Slot {
             Hit(Loaded),
             /// A device read plus the id's invalidation generation,
             /// captured before the read could start: if a write/delete
             /// races this load, the stale bytes are not cached.
-            Miss(u64, Pending<Result<(Vec<u8>, f64)>>),
+            Miss(u64, usize, Pending<Result<(Vec<u8>, f64)>>),
         }
         let slots: Vec<Slot> = ids
             .iter()
             .map(|&id| {
+                let shard_idx = self.shard_index_of(id);
                 let mut gen = 0;
                 if let Some(hot) = &self.hot {
                     match hot.probe(id) {
@@ -405,30 +548,21 @@ impl KvStore {
                                 device_secs: 0.0,
                                 file_bytes,
                                 from_cache: true,
+                                shard: shard_idx,
                             });
                         }
                         Probe::Miss(g) => gen = g,
                     }
                 }
-                let path = self.path_of(id);
-                let throttle = self.throttle.clone();
-                Slot::Miss(
-                    gen,
-                    self.pool.submit(move || {
-                        let start = Instant::now();
-                        let data =
-                            std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
-                        let device_secs = throttle.charge_read(data.len(), start.elapsed());
-                        Ok((data, device_secs))
-                    }),
-                )
+                let shard = self.shards[shard_idx].clone();
+                Slot::Miss(gen, shard_idx, self.pool.submit(move || shard.read(id)))
             })
             .collect();
         let mut out = Vec::with_capacity(ids.len());
         for (slot, &id) in slots.into_iter().zip(ids) {
             match slot {
                 Slot::Hit(l) => out.push(l),
-                Slot::Miss(gen, h) => {
+                Slot::Miss(gen, shard_idx, h) => {
                     let (data, device_secs) = h.wait()?;
                     self.stats.reads.fetch_add(1, Ordering::Relaxed);
                     self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
@@ -441,11 +575,69 @@ impl KvStore {
                         device_secs,
                         file_bytes: data.len(),
                         from_cache: false,
+                        shard: shard_idx,
                     });
                 }
             }
         }
         Ok(out)
+    }
+
+    /// Warm the DRAM hot tier for `ids` ahead of demand time (the
+    /// overlap pipeline calls this with batch *n+1*'s retrieval top-K
+    /// while batch *n* decodes). Reads fan out across shards like
+    /// `load_many` misses, but admission goes through the *protected*
+    /// prefetch path ([`HotTier::insert_prefetch`]): a prefetch can
+    /// never evict a chunk a demand load admitted, and a chunk that is
+    /// missing or superseded mid-flight degrades to a later demand miss
+    /// instead of an error. No hot tier → no-op.
+    pub fn prefetch_many(&self, ids: &[ChunkId]) -> PrefetchReport {
+        let Some(hot) = self.hot.clone() else {
+            return PrefetchReport::default();
+        };
+        let mut report = PrefetchReport::default();
+        let mut seen = std::collections::HashSet::new();
+        let mut pending: Vec<(ChunkId, u64, Pending<Result<(Vec<u8>, f64)>>)> = Vec::new();
+        for &id in ids {
+            if !seen.insert(id) {
+                continue;
+            }
+            report.requested += 1;
+            if hot.contains(id) {
+                report.already_resident += 1;
+                continue;
+            }
+            let gen = hot.generation(id);
+            let shard = self.shard_of(id).clone();
+            pending.push((id, gen, self.pool.submit(move || shard.read(id))));
+        }
+        for (id, gen, h) in pending {
+            let (data, device_secs) = match h.wait() {
+                Ok(r) => r,
+                Err(_) => {
+                    // Missing (or unreadable) on flash: the demand path
+                    // owns surfacing that, a prefetch just skips it.
+                    report.absent += 1;
+                    continue;
+                }
+            };
+            report.device_secs += device_secs;
+            self.stats.reads.fetch_add(1, Ordering::Relaxed);
+            self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+            let chunk = match Self::decode(&data) {
+                Ok(c) => Arc::new(c),
+                Err(_) => {
+                    report.absent += 1;
+                    continue;
+                }
+            };
+            if hot.insert_prefetch(id, chunk, data.len(), gen) {
+                report.warmed += 1;
+            } else {
+                report.rejected += 1;
+            }
+        }
+        report
     }
 
     /// Delete a chunk's materialized KV (vector-DB delete path). Like
@@ -455,39 +647,35 @@ impl KvStore {
         if let Some(hot) = &self.hot {
             hot.invalidate(id);
         }
-        match std::fs::remove_file(self.path_of(id)) {
-            Ok(()) => {
-                if let Some(hot) = &self.hot {
-                    hot.invalidate(id);
-                }
-                self.stats.deletes.fetch_add(1, Ordering::Relaxed);
-                Ok(true)
+        let deleted = self.shard_of(id).delete(id)?;
+        if deleted {
+            if let Some(hot) = &self.hot {
+                hot.invalidate(id);
             }
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
-            Err(e) => Err(e.into()),
+            self.stats.deletes.fetch_add(1, Ordering::Relaxed);
         }
+        Ok(deleted)
     }
 
-    /// Number of materialized chunks on disk.
+    /// Number of materialized chunks on disk (all shards).
     pub fn len(&self) -> Result<usize> {
-        Ok(std::fs::read_dir(&self.dir)?
-            .filter_map(|e| e.ok())
-            .filter(|e| e.path().extension().is_some_and(|x| x == "kv"))
-            .count())
+        let mut total = 0;
+        for shard in &self.shards {
+            total += shard.len()?;
+        }
+        Ok(total)
     }
 
     pub fn is_empty(&self) -> Result<bool> {
         Ok(self.len()? == 0)
     }
 
-    /// Total bytes of materialized KV on disk (TCO accounting).
+    /// Total bytes of materialized KV on disk, all shards (TCO
+    /// accounting).
     pub fn bytes_on_disk(&self) -> Result<u64> {
         let mut total = 0;
-        for e in std::fs::read_dir(&self.dir)? {
-            let e = e?;
-            if e.path().extension().is_some_and(|x| x == "kv") {
-                total += e.metadata()?.len();
-            }
+        for shard in &self.shards {
+            total += shard.bytes_on_disk()?;
         }
         Ok(total)
     }
@@ -785,6 +973,213 @@ mod tests {
         // delete: no stale hit either
         s.delete(1).unwrap();
         assert!(s.load(1).is_err());
+    }
+
+    // --- sharding -------------------------------------------------------
+
+    fn sharded_store(n: usize) -> (crate::util::tempdir::TempDir, KvStore) {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-shard").unwrap();
+        let mut s = KvStore::open_sharded(dir.path(), StorageProfile::dram(), n).unwrap();
+        s.disable_throttle();
+        (dir, s)
+    }
+
+    #[test]
+    fn sharded_roundtrip_spreads_files() {
+        let (_d, s) = sharded_store(4);
+        assert_eq!(s.n_shards(), 4);
+        for i in 0..32u64 {
+            s.store_sync(i, &chunk(i as u32, 8)).unwrap();
+        }
+        assert_eq!(s.len().unwrap(), 32);
+        // every shard got some of the corpus
+        for shard in s.shards() {
+            assert!(shard.len().unwrap() > 0, "shard {} empty", shard.index());
+        }
+        let loaded = s.load_many(&(0..32u64).collect::<Vec<_>>()).unwrap();
+        for (i, l) in loaded.iter().enumerate() {
+            assert_eq!(l.chunk.k[0], chunk(i as u32, 8).k[0]);
+            assert_eq!(l.shard, s.shard_index_of(i as u64));
+        }
+        // per-shard read counters sum to the store aggregate
+        let shard_reads: u64 =
+            s.shards().iter().map(|sh| sh.stats.reads.load(Ordering::Relaxed)).sum();
+        assert_eq!(shard_reads, s.stats.reads.load(Ordering::Relaxed));
+        assert_eq!(shard_reads, 32);
+    }
+
+    #[test]
+    fn shard_routing_stable_across_reopen() {
+        // Satellite regression: same id → same shard directory, before
+        // and after reopen — and the single-id `load` goes through the
+        // same routing path as `load_many`.
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-reopen").unwrap();
+        let placed: Vec<(u64, usize, PathBuf)> = {
+            let mut s =
+                KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+            s.disable_throttle();
+            (0..16u64)
+                .map(|i| {
+                    s.store_sync(i, &chunk(i as u32, 8)).unwrap();
+                    let idx = s.shard_index_of(i);
+                    let path = s.shards()[idx].dir().join(format!("{i:016x}.kv"));
+                    assert!(path.exists(), "chunk {i} not in its routed shard dir");
+                    (i, idx, path)
+                })
+                .collect()
+        };
+        let mut s = KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+        s.disable_throttle();
+        for (id, idx, path) in placed {
+            assert_eq!(s.shard_index_of(id), idx, "routing moved for id {id} across reopen");
+            assert!(path.exists());
+            assert!(s.contains(id));
+            // single-id load: same shard-routing path as load_many
+            let l = s.load(id).unwrap();
+            assert_eq!(l.shard, idx);
+            assert_eq!(l.chunk.k[0], chunk(id as u32, 8).k[0]);
+        }
+    }
+
+    #[test]
+    fn shard_count_mismatch_rejected() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-marker").unwrap();
+        {
+            KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+        }
+        let err = KvStore::open_sharded(dir.path(), StorageProfile::dram(), 2).unwrap_err();
+        assert!(err.to_string().contains("4 shard"), "{err}");
+        // the pinned count still opens
+        KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+    }
+
+    #[test]
+    fn single_shard_layout_not_reopenable_sharded() {
+        // A PR-1-era store (chunk files directly in the root, no marker)
+        // must not be silently re-sharded.
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-loose").unwrap();
+        {
+            let s = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+            s.store_sync(1, &chunk(1, 8)).unwrap();
+        }
+        std::fs::remove_file(dir.path().join(SHARD_MARKER)).unwrap(); // simulate pre-marker store
+        let err = KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap_err();
+        assert!(err.to_string().contains("single-shard"), "{err}");
+        // ...but keeps opening fine as the single device it is
+        let s = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+        assert_eq!(*s.load(1).unwrap().chunk, chunk(1, 8));
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-zero").unwrap();
+        assert!(KvStore::open_sharded(dir.path(), StorageProfile::dram(), 0).is_err());
+    }
+
+    #[test]
+    fn sharded_misses_overlap_in_wall_time() {
+        // The tentpole's point: equal total bytes, 4 devices ≫ 1 device.
+        // 16 chunks × ~10ms each: serial ≈ 160ms, 4-way JBOD ≈ 40ms+imbalance.
+        let chunk_secs = 0.010;
+        let c = chunk(1, 64);
+        let file_bytes = c.file_bytes(KvFormat::V2) as f64;
+        let profile = StorageProfile {
+            name: "sim-slow".into(),
+            read_bw: file_bytes / chunk_secs,
+            write_bw: 1e12,
+            latency_s: 0.0,
+            power_active: 1.0,
+            power_idle: 0.0,
+            usd_per_byte: 0.0,
+        };
+        let ids: Vec<ChunkId> = (0..16u64).collect();
+        let mut elapsed = Vec::new();
+        for n in [1usize, 4] {
+            let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-jbod").unwrap();
+            let mut s = KvStore::open_sharded(dir.path(), profile.clone(), n).unwrap();
+            s.disable_throttle();
+            for &i in &ids {
+                s.store_sync(i, &chunk(i as u32, 64)).unwrap();
+            }
+            s.set_profile(profile.clone()); // re-enable throttling for the reads
+            let t0 = std::time::Instant::now();
+            let loaded = s.load_many(&ids).unwrap();
+            elapsed.push(t0.elapsed().as_secs_f64());
+            // simulated per-read device seconds are the same either way —
+            // sharding buys *overlap*, not faster single reads
+            for l in &loaded {
+                assert!((l.device_secs - chunk_secs).abs() / chunk_secs < 0.5, "{}", l.device_secs);
+            }
+        }
+        // Smell-test bound only: ideal is ~2.7x (16 ids route 6/4/4/2),
+        // but CI schedulers add noise to sleep-based overlap, so the
+        // rigorous scaling sweep lives in benches/fig_shard_scale.rs.
+        let speedup = elapsed[0] / elapsed[1];
+        assert!(speedup > 1.5, "4-shard JBOD only {speedup:.2}x over 1 shard ({elapsed:?})");
+    }
+
+    // --- prefetch -------------------------------------------------------
+
+    #[test]
+    fn prefetch_warms_tier_then_demand_hits() {
+        let (_d, s) = tiered_store(64 << 20);
+        for i in 0..4u64 {
+            s.store_sync(i, &chunk(i as u32, 8)).unwrap();
+        }
+        let report = s.prefetch_many(&[0, 1, 2, 2]); // dup collapses
+        assert_eq!(report.requested, 3);
+        assert_eq!(report.warmed, 3);
+        assert_eq!(report.absent, 0);
+        assert!(report.device_secs > 0.0, "prefetch reads must charge the device");
+        // demand loads of the warmed ids are pure tier hits
+        let loaded = s.load_many(&[0, 1, 2]).unwrap();
+        assert!(loaded.iter().all(|l| l.from_cache));
+        let tier = s.hot_tier().unwrap();
+        assert_eq!(tier.stats.prefetch_hits.load(Ordering::Relaxed), 3);
+        // id 3 was never prefetched: still a device miss
+        assert!(!s.load(3).unwrap().from_cache);
+        // second prefetch of the same ids is a no-op
+        let again = s.prefetch_many(&[0, 1, 2]);
+        assert_eq!(again.already_resident, 3);
+        assert_eq!(again.warmed, 0);
+    }
+
+    #[test]
+    fn prefetch_missing_chunk_degrades_to_miss() {
+        let (_d, s) = tiered_store(64 << 20);
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        let report = s.prefetch_many(&[1, 99]); // 99 was never materialized
+        assert_eq!(report.warmed, 1);
+        assert_eq!(report.absent, 1);
+        // the demand path still owns the error for the missing chunk
+        assert!(s.load(99).is_err());
+        assert!(s.load(1).unwrap().from_cache);
+    }
+
+    #[test]
+    fn prefetched_then_deleted_not_served_stale() {
+        let (_d, s) = tiered_store(64 << 20);
+        s.store_sync(7, &chunk(7, 8)).unwrap();
+        assert_eq!(s.prefetch_many(&[7]).warmed, 1);
+        s.delete(7).unwrap();
+        // neither the tier nor the store may serve the deleted chunk
+        assert!(!s.hot_tier().unwrap().contains(7));
+        assert!(s.load(7).is_err());
+        // and a re-materialization serves the *new* payload
+        s.store_sync(7, &chunk(70, 8)).unwrap();
+        assert_eq!(s.prefetch_many(&[7]).warmed, 1);
+        let l = s.load(7).unwrap();
+        assert!(l.from_cache);
+        assert_eq!(l.chunk.k[0], chunk(70, 8).k[0]);
+    }
+
+    #[test]
+    fn prefetch_without_tier_is_noop() {
+        let (_d, s) = store();
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        let report = s.prefetch_many(&[1]);
+        assert_eq!(report, PrefetchReport::default());
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -26,8 +26,25 @@ impl DeviceThrottle {
         DeviceThrottle { profile, busy_until: Mutex::new(None), enabled: true }
     }
 
+    /// A throttle with sleeping pre-configured (sharded stores rebuild
+    /// one throttle per shard when swapping profiles; see
+    /// [`crate::kvstore::Shard`]).
+    pub fn with_enabled(profile: StorageProfile, enabled: bool) -> Self {
+        DeviceThrottle { profile, busy_until: Mutex::new(None), enabled }
+    }
+
     pub fn profile(&self) -> &StorageProfile {
         &self.profile
+    }
+
+    /// Seconds until this device would be idle (0 when idle now) — a
+    /// cheap backlog gauge for shard telemetry.
+    pub fn backlog_secs(&self) -> f64 {
+        let now = Instant::now();
+        match *self.busy_until.lock().unwrap() {
+            Some(b) if b > now => (b - now).as_secs_f64(),
+            _ => 0.0,
+        }
     }
 
     fn reserve(&self, device_secs: f64) -> Instant {
@@ -115,6 +132,21 @@ mod tests {
         let start = Instant::now();
         t.charge_read(1 << 30, Duration::ZERO);
         assert!(start.elapsed().as_millis() < 50);
+        let t2 = DeviceThrottle::with_enabled(slow_profile(1.0), false);
+        assert!(!t2.enabled);
+        t2.charge_read(1 << 30, Duration::ZERO);
+        assert!(start.elapsed().as_millis() < 100);
+    }
+
+    #[test]
+    fn backlog_reflects_reserved_time() {
+        let t = DeviceThrottle::new(slow_profile(100e6));
+        assert_eq!(t.backlog_secs(), 0.0);
+        // claim the time was already spent: reserves the slot, no sleep
+        t.charge_read(10 << 20, Duration::from_secs(10));
+        // the reservation window has already passed (already_spent >
+        // device time), so backlog is back to ~0
+        assert!(t.backlog_secs() < 0.2, "{}", t.backlog_secs());
     }
 
     #[test]

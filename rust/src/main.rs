@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use matkv::coordinator::baselines::cacheblend_mode;
-use matkv::coordinator::{serve_overlapped, Engine, EngineOptions, ServeMode};
+use matkv::coordinator::{serve_overlapped_with, Engine, EngineOptions, OverlapOptions, ServeMode};
 use matkv::hwsim::economics::fig1_trend;
 use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
 use matkv::kvstore::{KvFormat, KvStore};
@@ -23,7 +23,10 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --doc-tokens N --mode matkv|vanilla|cacheblend --overlap
                --storage 9100pro|raid0|pm9a3|dram --kv-dir PATH
                --hot-tier-bytes N (DRAM hot tier in front of flash, 0=off)
-               --kv-format v1|v2 (on-disk KV planes: f32|f16, default v2)";
+               --kv-format v1|v2 (on-disk KV planes: f32|f16, default v2)
+               --shards N (JBOD of N independent simulated devices, default 1)
+               --prefetch (with --overlap: warm the hot tier from upcoming
+                           batches' retrieval top-K)";
 
 fn storage_profile(name: &str) -> Result<StorageProfile> {
     Ok(match name {
@@ -75,6 +78,14 @@ fn serve(args: &Args) -> Result<()> {
     let doc_tokens = args.usize("doc-tokens", 512);
     let mode_name = args.str("mode", "matkv");
     let overlap = args.flag("overlap");
+    let shards = args.usize("shards", 1);
+    let prefetch = args.flag("prefetch");
+    if prefetch && !overlap {
+        anyhow::bail!("--prefetch warms ahead of the overlap pipeline; it requires --overlap");
+    }
+    if prefetch && args.usize("hot-tier-bytes", 0) == 0 {
+        anyhow::bail!("--prefetch warms the DRAM hot tier; set --hot-tier-bytes > 0");
+    }
 
     let m = Manifest::load(matkv::artifacts_dir())?;
     let corpus = Corpus::generate(docs, doc_tokens, docs.min(16), 42);
@@ -88,7 +99,8 @@ fn serve(args: &Args) -> Result<()> {
             p
         }
     };
-    let mut kv = KvStore::open(&dir, storage_profile(&args.str("storage", "9100pro"))?)?;
+    let mut kv =
+        KvStore::open_sharded(&dir, storage_profile(&args.str("storage", "9100pro"))?, shards)?;
     kv.set_hot_tier(args.usize("hot-tier-bytes", 0));
     match args.str("kv-format", "v2").as_str() {
         "v1" => kv.set_format(KvFormat::V1),
@@ -117,11 +129,24 @@ fn serve(args: &Args) -> Result<()> {
     };
 
     let (responses, metrics) = if overlap {
-        let (r, m2, rep) = serve_overlapped(&engine, &reqs, batch, serve_mode)?;
+        let opts = OverlapOptions { prefetch, ..OverlapOptions::default() };
+        let (r, m2, rep) = serve_overlapped_with(&engine, &reqs, batch, serve_mode, &opts)?;
         eprintln!(
             "[overlap] loader busy {:.2}s, exec busy {:.2}s, stalls {:.3}s",
             rep.loader_busy_secs, rep.exec_busy_secs, rep.exec_stall_secs
         );
+        if prefetch {
+            eprintln!(
+                "[prefetch] busy {:.2}s, warmed {} (resident {}, absent {}, rejected {}), \
+                 device {:.3}s off the loader path",
+                rep.prefetch_busy_secs,
+                rep.prefetch_warmed,
+                rep.prefetch_already_resident,
+                rep.prefetch_absent,
+                rep.prefetch_rejected,
+                rep.prefetch_device_secs,
+            );
+        }
         (r, m2)
     } else {
         engine.serve_all(&reqs, batch, serve_mode)?
@@ -151,6 +176,24 @@ fn serve(args: &Args) -> Result<()> {
             tier.bytes() as f64 / MIB,
             tier.stats.bytes_saved.load(std::sync::atomic::Ordering::Relaxed) as f64 / MIB,
         );
+    }
+    if engine.kv.n_shards() > 1 {
+        use std::sync::atomic::Ordering::Relaxed;
+        println!("shards ({} devices, {} io threads):", engine.kv.n_shards(), engine.kv.io_threads());
+        for shard in engine.kv.shards() {
+            let st = &shard.stats;
+            println!(
+                "  shard {:02}: {} reads / {:.1} MB read / {:.3}s device / peak queue {} / \
+                 backlog {:.3}s | {} writes",
+                shard.index(),
+                st.reads.load(Relaxed),
+                st.bytes_read.load(Relaxed) as f64 / 1e6,
+                st.read_device_secs(),
+                st.peak_queue_depth.load(Relaxed),
+                shard.backlog_secs(),
+                st.writes.load(Relaxed),
+            );
+        }
     }
     println!(
         "simulated H100 @ {} scale: load {:.4}s | prefill {:.4}s | decode {:.4}s | total {:.4}s",

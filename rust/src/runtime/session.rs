@@ -170,6 +170,10 @@ mod tests {
     use super::*;
     use crate::runtime::state::argmax;
 
+    // These tests execute HLO through PJRT: golden metadata is not
+    // enough, they need the real AOT artifacts.
+    use crate::require_artifacts;
+
     fn session() -> ModelSession {
         let m = Manifest::load(crate::artifacts_dir()).unwrap();
         ModelSession::new(&m, "tiny").unwrap()
@@ -177,6 +181,7 @@ mod tests {
 
     #[test]
     fn golden_numerics_match_python() {
+        require_artifacts!();
         // Cross-language handshake: replay artifacts/<cfg>/golden.json.
         use crate::util::json::Json;
         let m = Manifest::load(crate::artifacts_dir()).unwrap();
@@ -223,6 +228,7 @@ mod tests {
 
     #[test]
     fn state_feedback_roundtrip() {
+        require_artifacts!();
         // two chunked steps == python invariant (indirectly): just check
         // the state can be fed back and logits change deterministically
         let sess = session();
@@ -242,6 +248,7 @@ mod tests {
 
     #[test]
     fn decode_bucket_s1() {
+        require_artifacts!();
         let sess = session();
         let c = sess.config().max_ctx;
         let state = sess.zero_state(1, c).unwrap();
@@ -253,6 +260,7 @@ mod tests {
 
     #[test]
     fn batch4_independent_elements() {
+        require_artifacts!();
         let sess = session();
         let c = sess.config().max_ctx;
         let state = sess.zero_state(4, c).unwrap();
@@ -273,6 +281,7 @@ mod tests {
 
     #[test]
     fn stats_accumulate() {
+        require_artifacts!();
         let sess = session();
         let c = sess.config().max_ctx;
         let state = sess.zero_state(1, c).unwrap();

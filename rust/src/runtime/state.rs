@@ -148,7 +148,9 @@ mod tests {
     use crate::manifest::Manifest;
 
     fn cfg() -> ModelConfig {
-        Manifest::load(crate::artifacts_dir()).unwrap().config("tiny").unwrap().clone()
+        // Host-state splicing only needs config dims — golden metadata
+        // suffices when the real artifacts aren't built.
+        Manifest::load_or_golden().unwrap().config("tiny").unwrap().clone()
     }
 
     fn test_chunk(cfg: &ModelConfig, seq: usize, seed: f32) -> KvChunk {

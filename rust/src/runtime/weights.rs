@@ -46,6 +46,7 @@ mod tests {
 
     #[test]
     fn loads_all_configs() {
+        crate::require_artifacts!();
         let m = Manifest::load(crate::artifacts_dir()).unwrap();
         let dev = Device::cpu().unwrap();
         for name in ["tiny", "small"] {

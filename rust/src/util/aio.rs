@@ -76,6 +76,12 @@ impl IoPool {
         IoPool { tx: Some(tx), workers }
     }
 
+    /// Number of worker threads (the pool's maximum I/O concurrency —
+    /// sharded stores size this off the shard count).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a task; returns a waitable handle.
     pub fn submit<T: Send + 'static>(
         &self,
@@ -114,8 +120,16 @@ mod tests {
     #[test]
     fn submit_and_wait() {
         let pool = IoPool::new(2);
+        assert_eq!(pool.threads(), 2);
         let h = pool.submit(|| 21 * 2);
         assert_eq!(h.wait(), 42);
+    }
+
+    #[test]
+    fn zero_threads_clamped_to_one() {
+        let pool = IoPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.submit(|| 5).wait(), 5);
     }
 
     #[test]

@@ -16,6 +16,11 @@ use matkv::Manifest;
 
 const DOC_TOKENS: usize = 512;
 
+// Every test here executes models through PJRT over the real AOT
+// artifacts; without them (python toolchain not run) the shared macro
+// skips the test with a notice, so the pure-rust suites stay green.
+use matkv::require_artifacts;
+
 fn build_engine_with(
     n_docs: usize,
     tune: impl FnOnce(&mut KvStore),
@@ -49,6 +54,7 @@ fn requests(corpus: &Corpus, n: usize, top_k: usize, out: usize) -> Vec<RagReque
 
 #[test]
 fn ingest_materializes_every_doc() {
+    require_artifacts!();
     let (_d, _c, engine) = build_engine(6);
     assert_eq!(engine.kv.len().unwrap(), 6);
     assert!(engine.kv.bytes_on_disk().unwrap() > 0);
@@ -57,6 +63,7 @@ fn ingest_materializes_every_doc() {
 
 #[test]
 fn matkv_serves_batches_deterministically() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(6);
     let reqs = requests(&corpus, 4, 2, 6);
     let (r1, m1) = engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
@@ -74,6 +81,7 @@ fn matkv_serves_batches_deterministically() {
 
 #[test]
 fn single_doc_matkv_equals_vanilla_exactly() {
+    require_artifacts!();
     // With one retrieved document there is no cross-document attention to
     // drop: MatKV must generate the *identical* token sequence as Vanilla.
     // Lossless (v1/f32) storage isolates the position-alignment claim
@@ -91,6 +99,7 @@ fn single_doc_matkv_equals_vanilla_exactly() {
 
 #[test]
 fn two_doc_modes_are_close_but_not_identical() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(8);
     let reqs = requests(&corpus, 6, 2, 8);
     let (rv, _) = engine.serve_all(&reqs, 2, ServeMode::Vanilla).unwrap();
@@ -110,6 +119,7 @@ fn two_doc_modes_are_close_but_not_identical() {
 
 #[test]
 fn overlap_produces_identical_outputs() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(8);
     let reqs = requests(&corpus, 6, 2, 5);
     let (plain, _) = engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
@@ -125,6 +135,7 @@ fn overlap_produces_identical_outputs() {
 
 #[test]
 fn overlap_rejects_vanilla() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(4);
     let reqs = requests(&corpus, 2, 1, 2);
     assert!(serve_overlapped(&engine, &reqs, 2, ServeMode::Vanilla).is_err());
@@ -132,6 +143,7 @@ fn overlap_rejects_vanilla() {
 
 #[test]
 fn batch_padding_does_not_change_results() {
+    require_artifacts!();
     // 3 requests in a batch of 4-bucket must match serving them 1-by-1.
     let (_d, corpus, engine) = build_engine(6);
     let reqs = requests(&corpus, 3, 2, 4);
@@ -148,6 +160,7 @@ fn batch_padding_does_not_change_results() {
 
 #[test]
 fn delete_doc_removes_everywhere() {
+    require_artifacts!();
     let (_d, _corpus, engine) = build_engine(4);
     assert!(engine.delete_doc(1).unwrap());
     assert_eq!(engine.kv.len().unwrap(), 3);
@@ -163,6 +176,7 @@ fn delete_doc_removes_everywhere() {
 
 #[test]
 fn retrieval_is_topical() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(8);
     // a query for topic t should retrieve the docs of topic t first
     let mut rng = matkv::workload::Rng::new(3);
@@ -179,6 +193,7 @@ fn retrieval_is_topical() {
 
 #[test]
 fn fidelity_metric_sane_on_engine_outputs() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(4);
     let reqs = requests(&corpus, 2, 1, 6);
     let (r, _) = engine.serve_all(&reqs, 1, ServeMode::MatKv).unwrap();
@@ -191,6 +206,7 @@ fn fidelity_metric_sane_on_engine_outputs() {
 
 #[test]
 fn mismatched_config_kv_rejected() {
+    require_artifacts!();
     // Materialize with tiny, then point a small-config engine at the same
     // KV store: the load path must refuse to splice foreign KVs.
     let m = Manifest::load(matkv::artifacts_dir()).unwrap();
@@ -220,6 +236,7 @@ fn mismatched_config_kv_rejected() {
 
 #[test]
 fn missing_kv_file_is_clean_error() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(4);
     // delete the file behind the vector DB's back
     engine.kv.delete(0).unwrap();
@@ -236,6 +253,7 @@ fn missing_kv_file_is_clean_error() {
 
 #[test]
 fn context_overflow_is_clean_error() {
+    require_artifacts!();
     // 5 x 512-token docs = 2560 > C=2304: splice must fail, not corrupt
     let (_d, corpus, engine) = build_engine(8);
     let reqs = requests(&corpus, 1, 5, 2);
@@ -245,6 +263,7 @@ fn context_overflow_is_clean_error() {
 
 #[test]
 fn hot_tier_serves_repeat_traffic_from_dram() {
+    require_artifacts!();
     // Acceptance: with a hot tier big enough for the popular chunks,
     // repeated stage_matkv of the same requests reports cache hits and
     // strictly lower simulated device time than the cold pass.
@@ -272,6 +291,7 @@ fn hot_tier_serves_repeat_traffic_from_dram() {
 
 #[test]
 fn vanilla_context_budget_guard() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(6);
     // 5 x 512 doc tokens alone exceed C=2304: prefill must bail before
     // stepping past the cache.
@@ -286,6 +306,7 @@ fn vanilla_context_budget_guard() {
 
 #[test]
 fn early_decode_break_counts_actual_tokens() {
+    require_artifacts!();
     // MatKV with 4 x 512 spliced docs leaves < 400 decode slots in
     // C=2304: decode breaks early and tokens_out must report what was
     // generated, not the requested budget.
@@ -299,6 +320,7 @@ fn early_decode_break_counts_actual_tokens() {
 
 #[test]
 fn batcher_integrates_with_engine() {
+    require_artifacts!();
     use matkv::coordinator::{BatchPolicy, Batcher};
     let (_d, corpus, engine) = build_engine(6);
     let mut batcher = Batcher::new(BatchPolicy {
@@ -315,7 +337,42 @@ fn batcher_integrates_with_engine() {
 }
 
 #[test]
+fn sharded_store_end_to_end_with_prefetch() {
+    require_artifacts!();
+    // Full serve path over a 4-shard JBOD with a hot tier: ingest lands
+    // chunks across shard dirs, overlapped+prefetched serving produces
+    // the same tokens as the plain path, and the per-shard rollup in
+    // PhaseBreakdown accounts for every device read.
+    use matkv::coordinator::{serve_overlapped_with, OverlapOptions};
+    let m = Manifest::load(matkv::artifacts_dir()).unwrap();
+    let corpus = Corpus::generate(8, DOC_TOKENS, 8, 11);
+    let dir = TempDir::new("matkv-itest-shard").unwrap();
+    let mut kv = KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+    kv.set_hot_tier(256 << 20);
+    let opts = EngineOptions::for_config(&m, "tiny").unwrap();
+    let engine = Engine::new(&m, opts, kv, corpus.texts()).unwrap();
+    engine.ingest_corpus(&corpus, DOC_TOKENS).unwrap();
+    assert_eq!(engine.kv.len().unwrap(), 8);
+    assert!(engine.kv.shards().iter().filter(|s| s.stats.writes.load(
+        std::sync::atomic::Ordering::Relaxed) > 0).count() > 1,
+        "ingest should spread materialized chunks across shards");
+
+    let reqs = requests(&corpus, 6, 2, 4);
+    let (plain, pm) = engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+    assert_eq!(pm.shard_reads.iter().sum::<u64>() as usize, pm.load_reads);
+    let ov_opts = OverlapOptions { prefetch: true, lookahead: 2 };
+    let (ov, om, rep) =
+        serve_overlapped_with(&engine, &reqs, 2, ServeMode::MatKv, &ov_opts).unwrap();
+    assert_eq!(rep.prefetch_absent, 0);
+    assert!(om.cache_hits > 0, "repeat traffic should hit the warm tier");
+    for (a, b) in plain.iter().zip(&ov) {
+        assert_eq!(a.tokens, b.tokens, "sharding/prefetch changed results");
+    }
+}
+
+#[test]
 fn work_traces_accumulate_sanely() {
+    require_artifacts!();
     let (_d, corpus, engine) = build_engine(6);
     let reqs = requests(&corpus, 2, 2, 5);
     let (_, v) = engine.serve_all(&reqs, 2, ServeMode::Vanilla).unwrap();
