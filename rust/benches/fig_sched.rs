@@ -1,0 +1,343 @@
+//! Scheduler-policy bench — FIFO vs tier-affinity continuous batching at
+//! equal batch size over a Zipf-skewed Poisson arrival trace.
+//!
+//! The co-design claim: *which requests share a batch* determines how
+//! many device reads the storage tier absorbs. Two phases:
+//!
+//! 1. **Load-path replay** (no artifacts needed): the same arrival trace
+//!    is planned under each policy and every planned batch's retrieval
+//!    top-K is demand-loaded through an identical tiered, sharded store.
+//!    Tier-affinity batches group chunk-sharers (one `load_many` read
+//!    per repeated id — splice reuse) and requests whose chunks are
+//!    already resident, so at equal batch size it must show
+//!    `cache_hits` ≥ FIFO with strictly fewer shard device reads.
+//!    Emits the hot tier's telemetry series per policy.
+//! 2. **Full engine** (needs `make artifacts`; skipped otherwise):
+//!    `Scheduler::run` through the overlap pipeline with prefetch on,
+//!    both policies, reporting serve-side `cache_hits`, per-shard reads
+//!    and queue waits.
+//!
+//! `--smoke` shrinks everything for CI; `--json PATH` writes rows +
+//! telemetry as JSON. Acceptance shape: in the JSON, the affinity row
+//! has `cache_hits >= fifo` and `device_reads < fifo`.
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use matkv::coordinator::engine::{EngineOptions, LoaderCtx, Retrieval};
+use matkv::coordinator::{
+    BatchPolicy, ExecOptions, OverlapOptions, SchedOptions, SchedPolicy, Scenario, ScenarioSpec,
+    Scheduler, ServeMode,
+};
+use matkv::hwsim::StorageProfile;
+use matkv::kvstore::store::config_id;
+use matkv::kvstore::{series_to_json, KvChunk, KvStore};
+use matkv::manifest::Manifest;
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::vectordb::VectorIndex;
+use matkv::workload::{ArrivalGen, Corpus, TimedRequest, TurboRagProfile};
+
+/// A chunk whose dims match the config (so the store's accounting sees
+/// realistic sizes); payload content is irrelevant to scheduling.
+fn cfg_chunk(cfg: &matkv::ModelConfig, seq: usize) -> KvChunk {
+    let plane = cfg.n_layers * cfg.n_kv_heads * seq * cfg.head_dim;
+    KvChunk {
+        config_id: config_id(cfg),
+        n_layers: cfg.n_layers as u32,
+        n_kv_heads: cfg.n_kv_heads as u32,
+        seq_len: seq as u32,
+        head_dim: cfg.head_dim as u32,
+        k: vec![1.0; plane],
+        v: vec![-1.0; plane],
+    }
+}
+
+struct PolicyRow {
+    name: &'static str,
+    loads: usize,
+    cache_hits: u64,
+    device_reads: u64,
+    device_secs: f64,
+    shard_reads: Vec<u64>,
+    batches: usize,
+    mean_wait_ms: f64,
+    max_wait_ms: f64,
+    forced: usize,
+    series_json: String,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let smoke = args.flag("smoke");
+    let n_docs = args.usize("docs", if smoke { 24 } else { 64 });
+    let doc_tokens = 256usize;
+    let requests = args.usize("requests", if smoke { 64 } else { 256 });
+    let batch = args.usize("batch", 8);
+    let shards = args.usize("shards", if smoke { 2 } else { 4 });
+    let skew = args.f64("skew", 1.1);
+    // Slightly overloaded by default (capacity = batch/service = 320/s
+    // vs 400/s offered): a persistent backlog is what gives the policy a
+    // pool to choose from, exactly like continuous batching under load.
+    let rate = args.f64("arrival-rate", 400.0);
+    let service_ms = args.f64("service-ms", 25.0);
+    let max_age = args.usize("max-age-batches", if smoke { 8 } else { 16 });
+    let top_k = 2usize;
+
+    let m = Manifest::load_or_golden()?;
+    let cfg = m.config("tiny")?.clone();
+    let opts = EngineOptions::for_config(&m, "tiny")?;
+    let corpus = Corpus::generate(n_docs, 64, n_docs, 42);
+
+    // Retrieval stack without a PJRT session — the shared constructor
+    // Engine::new uses, so the bench models the engine's exact
+    // retrieval distribution.
+    let retrieval =
+        Arc::new(Retrieval::for_corpus(corpus.texts(), cfg.vocab as u32, opts.embed_dim));
+    {
+        let mut ix = retrieval.index.write().unwrap();
+        for d in &corpus.docs {
+            let (ids, _) = retrieval.tokenizer.encode_block(&d.text, doc_tokens);
+            ix.insert(d.id, retrieval.embedder.embed(&ids));
+        }
+    }
+
+    // Same trace for every policy: Zipf-skewed topics, Poisson arrivals.
+    let trace: Vec<TimedRequest> = ArrivalGen::new(
+        TurboRagProfile { top_k, query_tokens: 20.0, output_tokens: 8 },
+        corpus.n_topics,
+        skew,
+        rate,
+        7,
+    )
+    .take(&corpus, requests);
+
+    let tier_budget = cfg_chunk(&cfg, doc_tokens).dram_bytes() * n_docs / 4; // 25% of corpus
+    eprintln!(
+        "[fig_sched] {requests} reqs @ {rate}/s Zipf({skew}) over {n_docs} docs, batch {batch}, \
+         {shards} shards, 25% tier, service {service_ms}ms"
+    );
+
+    // ---- phase 1: load-path replay of the planned schedules ------------
+    let mut rows: Vec<PolicyRow> = Vec::new();
+    for (name, policy) in [
+        ("fifo", SchedPolicy::Fifo),
+        ("affinity", SchedPolicy::TierAffinity { max_age_batches: max_age }),
+    ] {
+        let dir = TempDir::new("matkv-fig-sched")?;
+        let mut kv =
+            KvStore::open_sharded(dir.path(), StorageProfile::ssd_9100pro(), shards)?;
+        kv.disable_throttle(); // simulated device seconds still computed
+        for d in &corpus.docs {
+            kv.store_sync(d.id, &cfg_chunk(&cfg, doc_tokens))?;
+        }
+        kv.set_hot_tier(tier_budget);
+        let ctx = LoaderCtx {
+            retrieval: retrieval.clone(),
+            kv: Arc::new(kv),
+            cfg: cfg.clone(),
+            opts: opts.clone(),
+        };
+        let mut sched = Scheduler::new(
+            ctx.clone(),
+            SchedOptions {
+                batch: BatchPolicy { max_batch: batch, max_wait_secs: 0.05 },
+                policy,
+                service_estimate_secs: service_ms / 1e3,
+            },
+        );
+        sched.enqueue_timed(trace.clone());
+        let plan = sched.plan_with_retrieval();
+
+        let mut loads = 0usize;
+        let mut cache_hits = 0u64;
+        let mut device_secs = 0.0;
+        for b in &plan.batches {
+            let ids = b.chunk_ids();
+            loads += ids.len();
+            for l in ctx.kv.load_many(&ids)? {
+                cache_hits += l.from_cache as u64;
+                device_secs += l.device_secs;
+            }
+            if let Some(tier) = ctx.kv.hot_tier() {
+                tier.sample();
+            }
+        }
+        let shard_reads: Vec<u64> = ctx
+            .kv
+            .shards()
+            .iter()
+            .map(|s| s.stats.reads.load(Ordering::Relaxed))
+            .collect();
+        rows.push(PolicyRow {
+            name,
+            loads,
+            cache_hits,
+            device_reads: ctx.kv.stats.reads.load(Ordering::Relaxed),
+            device_secs,
+            shard_reads,
+            batches: plan.report.batches,
+            mean_wait_ms: plan.report.mean_wait_secs * 1e3,
+            max_wait_ms: plan.report.max_wait_secs * 1e3,
+            forced: plan.report.forced_includes,
+            series_json: ctx
+                .kv
+                .hot_tier()
+                .map(|t| series_to_json(&t.stats.series()))
+                .unwrap_or_else(|| "[]".into()),
+        });
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "batch formation vs storage tier ({requests} reqs, batch {batch}, {shards} shards)"
+        ),
+        &[
+            "policy",
+            "batches",
+            "loads",
+            "cache hits",
+            "device reads",
+            "device secs",
+            "wait mean/max (ms)",
+            "forced",
+        ],
+    );
+    for r in &rows {
+        table.row(&[
+            r.name.to_string(),
+            r.batches.to_string(),
+            r.loads.to_string(),
+            r.cache_hits.to_string(),
+            r.device_reads.to_string(),
+            format!("{:.3}", r.device_secs),
+            format!("{:.1}/{:.1}", r.mean_wait_ms, r.max_wait_ms),
+            r.forced.to_string(),
+        ]);
+    }
+    table.print();
+    let (fifo, aff) = (&rows[0], &rows[1]);
+    println!(
+        "\naffinity vs fifo at equal batch size: cache hits {} -> {} ({:+}), device reads \
+         {} -> {} ({:+})",
+        fifo.cache_hits,
+        aff.cache_hits,
+        aff.cache_hits as i64 - fifo.cache_hits as i64,
+        fifo.device_reads,
+        aff.device_reads,
+        aff.device_reads as i64 - fifo.device_reads as i64,
+    );
+    if aff.device_reads >= fifo.device_reads {
+        eprintln!(
+            "[fig_sched] WARNING: affinity did not reduce device reads \
+             (affinity {} vs fifo {})",
+            aff.device_reads, fifo.device_reads
+        );
+    }
+
+    // ---- phase 2: full engine through the overlap pipeline -------------
+    let mut engine_json = String::from("null");
+    if matkv::manifest::artifacts_present() {
+        let mut parts = Vec::new();
+        for (name, policy) in [
+            ("fifo", SchedPolicy::Fifo),
+            ("affinity", SchedPolicy::TierAffinity { max_age_batches: max_age }),
+        ] {
+            let sc = Scenario::build(ScenarioSpec {
+                n_docs: if smoke { 8 } else { 16 },
+                doc_tokens: 256,
+                storage: StorageProfile::ssd_9100pro(),
+                hot_tier_bytes: tier_budget,
+                shards: shards.min(4),
+                seed: 21,
+                ..ScenarioSpec::default()
+            })?;
+            let trace = ArrivalGen::new(
+                TurboRagProfile { top_k: 2, query_tokens: 20.0, output_tokens: 4 },
+                sc.corpus.n_topics,
+                skew,
+                rate,
+                7,
+            )
+            .take(&sc.corpus, if smoke { 16 } else { 48 });
+            let mut sched = Scheduler::new(
+                sc.engine.loader_ctx(),
+                SchedOptions {
+                    batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.05 },
+                    policy,
+                    service_estimate_secs: service_ms / 1e3,
+                },
+            );
+            sched.enqueue_timed(trace);
+            let out = sched.run(
+                &sc.engine,
+                ServeMode::MatKv,
+                &ExecOptions::overlapped(OverlapOptions { prefetch: true, lookahead: 2 }),
+            )?;
+            println!(
+                "engine ({name:8}): {} responses, cache_hits {}, device reads {}, \
+                 stalls {:.4}s, prefetch warmed {}",
+                out.responses.len(),
+                out.metrics.cache_hits,
+                out.metrics.load_reads,
+                out.overlap.exec_stall_secs,
+                out.overlap.prefetch_warmed,
+            );
+            parts.push(format!(
+                "{{\"policy\":\"{name}\",\"cache_hits\":{},\"device_reads\":{},\
+                 \"exec_stall_secs\":{:.6},\"prefetch_warmed\":{},\"batches\":{}}}",
+                out.metrics.cache_hits,
+                out.metrics.load_reads,
+                out.overlap.exec_stall_secs,
+                out.overlap.prefetch_warmed,
+                out.sched.batches,
+            ));
+        }
+        engine_json = format!("[{}]", parts.join(","));
+    } else {
+        println!(
+            "\n[fig_sched] engine phase skipped: AOT artifacts not built (run `make artifacts`)"
+        );
+    }
+
+    if let Some(path) = args.opt("json") {
+        let mut policy_rows = String::new();
+        for r in &rows {
+            let shard_reads: Vec<String> =
+                r.shard_reads.iter().map(u64::to_string).collect();
+            let _ = write!(
+                policy_rows,
+                "{}{{\"policy\":\"{}\",\"batches\":{},\"loads\":{},\"cache_hits\":{},\
+                 \"device_reads\":{},\"device_secs\":{:.6},\"shard_reads\":[{}],\
+                 \"mean_wait_ms\":{:.3},\"max_wait_ms\":{:.3},\"forced_includes\":{},\
+                 \"series\":{}}}",
+                if policy_rows.is_empty() { "" } else { "," },
+                r.name,
+                r.batches,
+                r.loads,
+                r.cache_hits,
+                r.device_reads,
+                r.device_secs,
+                shard_reads.join(","),
+                r.mean_wait_ms,
+                r.max_wait_ms,
+                r.forced,
+                r.series_json,
+            );
+        }
+        let doc = format!(
+            "{{\"bench\":\"fig_sched\",\"smoke\":{smoke},\"requests\":{requests},\
+             \"batch\":{batch},\"docs\":{n_docs},\"shards\":{shards},\"skew\":{skew},\
+             \"arrival_rate\":{rate},\"service_ms\":{service_ms},\
+             \"policies\":[{policy_rows}],\
+             \"affinity_hit_gain\":{},\"affinity_read_saving\":{},\"engine\":{engine_json}}}",
+            aff.cache_hits as i64 - fifo.cache_hits as i64,
+            fifo.device_reads as i64 - aff.device_reads as i64,
+        );
+        std::fs::write(path, doc)?;
+        eprintln!("[fig_sched] wrote {path}");
+    }
+    Ok(())
+}

@@ -51,6 +51,24 @@ impl Retrieval {
         let q = self.embedder.embed(&self.tokenizer.encode(query));
         self.index.read().unwrap().search(&q, k).into_iter().map(|r| r.chunk_id).collect()
     }
+
+    /// The retrieval stack [`Engine::new`] builds (corpus-seeded
+    /// tokenizer, hash embedder, empty flat index + chunk meta) — the
+    /// one constructor, shared with PJRT-free harnesses (scheduler
+    /// tests, `fig_sched`) so they model the exact retrieval
+    /// distribution the engine serves.
+    pub fn for_corpus<'a>(
+        texts: impl IntoIterator<Item = &'a str>,
+        vocab: u32,
+        embed_dim: usize,
+    ) -> Retrieval {
+        Retrieval {
+            tokenizer: Tokenizer::from_corpus(texts, vocab),
+            embedder: HashEmbedder::new(embed_dim, 0x9a7_f00d),
+            index: RwLock::new(FlatIndex::new(embed_dim)),
+            meta: RwLock::new(HashMap::new()),
+        }
+    }
 }
 
 /// Serving strategy.
@@ -140,8 +158,20 @@ impl LoaderCtx {
     /// (DRAM hot tier first, then flash), splice into a host state
     /// (Fig 3b steps 1-2). No device work.
     pub fn stage_matkv(&self, reqs: &[RagRequest]) -> Result<StagedBatch> {
+        self.stage_matkv_with(reqs, None)
+    }
+
+    /// [`LoaderCtx::stage_matkv`] with the retrieval top-K already known
+    /// (`retrieved[i]` pairs with `reqs[i]`): the scheduler pays for
+    /// retrieval once at plan time, so staging a planned batch must not
+    /// run the vector-DB search a second time.
+    pub fn stage_matkv_with(
+        &self,
+        reqs: &[RagRequest],
+        retrieved: Option<&[Vec<ChunkId>]>,
+    ) -> Result<StagedBatch> {
         let bucket = self.batch_bucket(reqs.len())?;
-        let mut staged = self.stage_common(reqs, bucket)?;
+        let mut staged = self.stage_common(reqs, bucket, retrieved)?;
 
         let t0 = Instant::now();
         // flatten (element, doc) pairs and load them all concurrently
@@ -157,7 +187,8 @@ impl LoaderCtx {
         for ((b, _), l) in flat.iter().zip(&loaded) {
             if l.chunk.config_id != expect_cfg {
                 bail!(
-                    "materialized KV was produced by a different model config                      ({:#x} != {:#x}) — re-ingest after changing configs",
+                    "materialized KV was produced by a different model config \
+                     ({:#x} != {:#x}) — re-ingest after changing configs",
                     l.chunk.config_id,
                     expect_cfg
                 );
@@ -186,8 +217,18 @@ impl LoaderCtx {
     /// Stage a Vanilla batch: retrieval only (chunks will be recomputed
     /// on-device from their tokens).
     pub fn stage_vanilla(&self, reqs: &[RagRequest]) -> Result<StagedBatch> {
+        self.stage_vanilla_with(reqs, None)
+    }
+
+    /// [`LoaderCtx::stage_vanilla`] with precomputed retrieval (see
+    /// [`LoaderCtx::stage_matkv_with`]).
+    pub fn stage_vanilla_with(
+        &self,
+        reqs: &[RagRequest],
+        retrieved: Option<&[Vec<ChunkId>]>,
+    ) -> Result<StagedBatch> {
         let bucket = self.batch_bucket(reqs.len())?;
-        let mut staged = self.stage_common(reqs, bucket)?;
+        let mut staged = self.stage_common(reqs, bucket, retrieved)?;
         // record doc layout (slots assigned sequentially at prefill time)
         let meta = self.retrieval.meta.read().unwrap();
         for b in 0..staged.retrieved.len() {
@@ -201,8 +242,14 @@ impl LoaderCtx {
         Ok(staged)
     }
 
-    /// Shared staging: retrieval, query tokenization, zero host state.
-    fn stage_common(&self, reqs: &[RagRequest], bucket: usize) -> Result<StagedBatch> {
+    /// Shared staging: retrieval (or reuse of the scheduler's planned
+    /// top-K), query tokenization, zero host state.
+    fn stage_common(
+        &self,
+        reqs: &[RagRequest],
+        bucket: usize,
+        precomputed: Option<&[Vec<ChunkId>]>,
+    ) -> Result<StagedBatch> {
         if reqs.is_empty() || reqs.len() > bucket {
             bail!("batch of {} vs bucket {bucket}", reqs.len());
         }
@@ -210,8 +257,18 @@ impl LoaderCtx {
         let mut metrics = PhaseBreakdown { requests: reqs.len(), ..Default::default() };
 
         let t0 = Instant::now();
-        let retrieved: Vec<Vec<ChunkId>> =
-            reqs.iter().map(|r| self.retrieval.retrieve(&r.query, r.top_k)).collect();
+        let retrieved: Vec<Vec<ChunkId>> = match precomputed {
+            Some(r) => {
+                anyhow::ensure!(
+                    r.len() == reqs.len(),
+                    "precomputed retrieval for {} requests but batch has {}",
+                    r.len(),
+                    reqs.len()
+                );
+                r.to_vec()
+            }
+            None => reqs.iter().map(|r| self.retrieval.retrieve(&r.query, r.top_k)).collect(),
+        };
         metrics.retrieve_secs = t0.elapsed().as_secs_f64();
 
         let mut query_tokens = vec![PAD as i32; bucket * qb];
@@ -259,13 +316,8 @@ impl Engine {
     ) -> Result<Self> {
         let session = ModelSession::new(manifest, &opts.config)?;
         let cfg = session.config().clone();
-        let tokenizer = Tokenizer::from_corpus(corpus_texts, cfg.vocab as u32);
-        let retrieval = Arc::new(Retrieval {
-            tokenizer,
-            embedder: HashEmbedder::new(opts.embed_dim, 0x9a7_f00d),
-            index: RwLock::new(FlatIndex::new(opts.embed_dim)),
-            meta: RwLock::new(HashMap::new()),
-        });
+        let retrieval =
+            Arc::new(Retrieval::for_corpus(corpus_texts, cfg.vocab as u32, opts.embed_dim));
         Ok(Engine { session, retrieval, kv: Arc::new(kv), opts, cfg })
     }
 
@@ -507,20 +559,21 @@ impl Engine {
         Ok((responses, m))
     }
 
-    /// Serve a request list in fixed-size batches (no overlap).
+    /// Serve a request list in fixed-size batches (no overlap). A thin
+    /// wrapper over [`Scheduler::run`]: the offline FIFO schedule
+    /// reproduces the historical `reqs.chunks(batch_size)` slicing
+    /// exactly, so batch formation lives in one place.
+    ///
+    /// [`Scheduler::run`]: super::scheduler::Scheduler::run
     pub fn serve_all(
         &self,
         reqs: &[RagRequest],
         batch_size: usize,
         mode: ServeMode,
     ) -> Result<(Vec<Response>, PhaseBreakdown)> {
-        let mut responses = Vec::with_capacity(reqs.len());
-        let mut agg = PhaseBreakdown::default();
-        for chunk in reqs.chunks(batch_size) {
-            let (r, m) = self.serve_batch(chunk, mode)?;
-            responses.extend(r);
-            agg.add(&m);
-        }
-        Ok((responses, agg))
+        let mut sched = super::scheduler::Scheduler::offline(self.loader_ctx(), batch_size);
+        sched.enqueue_now(reqs.iter().cloned());
+        let out = sched.run(self, mode, &super::scheduler::ExecOptions::sequential())?;
+        Ok((out.responses, out.metrics))
     }
 }

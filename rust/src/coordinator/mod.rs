@@ -6,24 +6,33 @@
 //! * [`engine`] — the serve path, Fig 3b: retrieve top-K → **load**
 //!   materialized KVs (MatKV) *or* recompute them (Vanilla baseline) →
 //!   query sub-prefill → batched greedy decode.
-//! * [`batcher`] — dynamic batching queue with size/timeout policy over
-//!   the AOT batch buckets.
+//! * [`scheduler`] — the online serving scheduler: one request queue
+//!   with simulated arrival times, the size-or-timeout release condition
+//!   (absorbed from the old `Batcher`) on a deterministic virtual clock,
+//!   and pluggable batch-formation policies (FIFO, tier affinity with a
+//!   starvation bound). `serve_all` and `serve_overlapped_with` are thin
+//!   wrappers over it.
 //! * [`overlap`] — the §III-C optimization: a loader thread stages batch
-//!   n+1's KVs from flash while the device decodes batch n.
+//!   n+1's KVs from flash while the device decodes batch n; the
+//!   prefetcher warms upcoming batches straight from the scheduler's
+//!   plan.
 //! * [`baselines`] — the CacheBlend-style partial-recompute comparator.
 //! * [`metrics`] — per-phase latency breakdown + simulated device costs.
 
-pub mod batcher;
 pub mod baselines;
 pub mod engine;
 pub mod experiments;
 pub mod ingest;
 pub mod metrics;
 pub mod overlap;
+pub mod scheduler;
 
-pub use batcher::{Batcher, BatchPolicy};
 pub use engine::{Engine, EngineOptions, Response, ServeMode};
 pub use ingest::{IngestStats, Ingestor};
 pub use metrics::{PhaseBreakdown, Percentiles};
 pub use experiments::{Scenario, ScenarioSpec};
 pub use overlap::{serve_overlapped, serve_overlapped_with, OverlapOptions, OverlapReport};
+pub use scheduler::{
+    BatchPolicy, ExecOptions, PlannedBatch, SchedOptions, SchedPolicy, SchedReport, Schedule,
+    Scheduler, ServeOutcome,
+};

@@ -9,6 +9,13 @@
 //! at steady state the storage device and the compute device are both
 //! busy, which is exactly the paper's Fig 4.
 //!
+//! Since the scheduler refactor the pipeline consumes a **planned
+//! schedule** ([`PlannedBatch`]) rather than slicing the request list
+//! itself: batch formation — including tier-affinity grouping and the
+//! size-or-timeout release condition — happens once, in
+//! [`super::scheduler::Scheduler`], and [`serve_overlapped_with`] is a
+//! thin wrapper that plans a FIFO offline schedule and runs it here.
+//!
 //! The loader goes through the tiered store: DRAM hot-tier hits shave
 //! their chunks off the loader's critical path entirely (no throttled
 //! device read), which shrinks `loader_busy_secs` and with it the only
@@ -16,17 +23,20 @@
 //! the aggregated [`PhaseBreakdown`] (`cache_hits`/`cache_bytes_saved`).
 //!
 //! **Retrieval-aware prefetch** ([`OverlapOptions::prefetch`]) adds a
-//! third thread: the vector-DB top-K for upcoming batches is knowable
-//! *before* the loader stages them, so the prefetcher re-runs retrieval
-//! a bounded lookahead ahead of the executor and warms the hot tier via
-//! [`KvStore::prefetch_many`]'s protected admission path. Chunks the
-//! prefetcher lands become tier hits when the loader reaches that batch
-//! — device reads move off the loader's critical path onto a thread
-//! whose time was previously spent blocked on the staging channel. The
-//! lookahead is paced by executor progress so prefetched chunks aren't
-//! evicted (by later prefetches) before their batch needs them.
+//! third thread: the scheduler already knows every upcoming batch's
+//! retrieval top-K (it scored them to form the schedule), so the
+//! prefetcher reads those chunk sets straight from the plan — no
+//! retrieval re-runs — a bounded lookahead ahead of the executor and
+//! warms the hot tier via [`KvStore::prefetch_many`]'s protected
+//! admission path. Chunks the prefetcher lands become tier hits when the
+//! loader reaches that batch — device reads move off the loader's
+//! critical path onto a thread whose time was previously spent blocked
+//! on the staging channel. The lookahead is paced by executor progress
+//! so prefetched chunks aren't evicted (by later prefetches) before
+//! their batch needs them.
 //!
 //! [`LoaderCtx`]: super::engine::LoaderCtx
+//! [`PlannedBatch`]: super::scheduler::PlannedBatch
 //! [`KvStore::prefetch_many`]: crate::kvstore::KvStore::prefetch_many
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -37,7 +47,7 @@ use anyhow::{Context, Result};
 
 use super::engine::{Engine, Response, ServeMode, StagedBatch};
 use super::metrics::PhaseBreakdown;
-use crate::vectordb::ChunkId;
+use super::scheduler::{ExecOptions, PlannedBatch, Scheduler};
 use crate::workload::RagRequest;
 
 /// Knobs for [`serve_overlapped_with`].
@@ -75,8 +85,8 @@ pub struct OverlapReport {
     /// bubble — ~0 when SSD bandwidth keeps up, the paper's claim).
     pub exec_stall_secs: f64,
     pub batches: usize,
-    /// Prefetcher busy time (retrieval re-runs + throttled tier warming);
-    /// overlaps the executor, so it is not on the critical path.
+    /// Prefetcher busy time (throttled tier warming); overlaps the
+    /// executor, so it is not on the critical path.
     pub prefetch_busy_secs: f64,
     /// Chunks the prefetcher admitted to the hot tier.
     pub prefetch_warmed: usize,
@@ -88,6 +98,20 @@ pub struct OverlapReport {
     pub prefetch_rejected: usize,
     /// Simulated device seconds consumed by prefetch reads.
     pub prefetch_device_secs: f64,
+}
+
+impl OverlapReport {
+    /// Fold another report's prefetch counters into this one. The
+    /// single merge point for every `prefetch_*` field, so adding a
+    /// counter to the struct can't silently drop it from the rollup.
+    pub fn merge_prefetch(&mut self, totals: &OverlapReport) {
+        self.prefetch_busy_secs += totals.prefetch_busy_secs;
+        self.prefetch_warmed += totals.prefetch_warmed;
+        self.prefetch_already_resident += totals.prefetch_already_resident;
+        self.prefetch_absent += totals.prefetch_absent;
+        self.prefetch_rejected += totals.prefetch_rejected;
+        self.prefetch_device_secs += totals.prefetch_device_secs;
+    }
 }
 
 /// Serve requests in fixed-size batches with load/decode overlap
@@ -102,7 +126,9 @@ pub fn serve_overlapped(
 }
 
 /// Serve requests in fixed-size batches with load/decode overlap and,
-/// optionally, retrieval-aware hot-tier prefetch.
+/// optionally, retrieval-aware hot-tier prefetch. A thin wrapper over
+/// [`Scheduler::run`]: FIFO policy with offline arrivals reproduces the
+/// historical `reqs.chunks(batch_size)` batching exactly.
 ///
 /// MatKV only (Vanilla has no load phase to hide; the engine rejects it).
 pub fn serve_overlapped_with(
@@ -112,18 +138,32 @@ pub fn serve_overlapped_with(
     mode: ServeMode,
     opts: &OverlapOptions,
 ) -> Result<(Vec<Response>, PhaseBreakdown, OverlapReport)> {
+    let mut sched = Scheduler::offline(engine.loader_ctx(), batch_size);
+    sched.enqueue_now(reqs.iter().cloned());
+    let out = sched.run(engine, mode, &ExecOptions::overlapped(opts.clone()))?;
+    Ok((out.responses, out.metrics, out.overlap))
+}
+
+/// Drive a planned schedule through the loader/executor (and optional
+/// prefetcher) threads. The scheduler calls this; everything below is
+/// the §III-C machinery.
+pub(crate) fn run_pipeline(
+    engine: &Engine,
+    batches: &[PlannedBatch],
+    mode: ServeMode,
+    opts: &OverlapOptions,
+) -> Result<(Vec<Response>, PhaseBreakdown, OverlapReport)> {
     anyhow::ensure!(
         !matches!(mode, ServeMode::Vanilla),
         "overlap requires a load phase (MatKv or CacheBlend)"
     );
     let loader_ctx = engine.loader_ctx();
-    let batches: Vec<Vec<RagRequest>> = reqs.chunks(batch_size).map(|c| c.to_vec()).collect();
     let n_batches = batches.len();
     let (tx, rx) = mpsc::sync_channel::<Result<(StagedBatch, f64)>>(1);
 
     let wall_t0 = Instant::now();
     let mut report = OverlapReport { batches: n_batches, ..Default::default() };
-    let mut responses = Vec::with_capacity(reqs.len());
+    let mut responses = Vec::with_capacity(batches.iter().map(|b| b.reqs.len()).sum());
     let mut agg = PhaseBreakdown::default();
 
     // Prefetcher pacing: `executed` counts batches the executor has
@@ -138,8 +178,7 @@ pub fn serve_overlapped_with(
 
     std::thread::scope(|scope| -> Result<()> {
         let prefetch_handle = if opts.prefetch {
-            let pctx = engine.loader_ctx();
-            let batches = &batches;
+            let kv = engine.kv.clone();
             let executed = &executed;
             let claimed = &claimed;
             let stop = &stop;
@@ -160,12 +199,14 @@ pub fn serve_overlapped_with(
                     if i < claimed.load(Ordering::Acquire) {
                         continue; // loader already staging/staged it
                     }
+                    // The scheduler planned this batch, so its top-K is
+                    // already known — warm straight from the plan.
+                    let ids = batch.chunk_ids();
+                    if ids.is_empty() {
+                        continue;
+                    }
                     let t0 = Instant::now();
-                    let ids: Vec<ChunkId> = batch
-                        .iter()
-                        .flat_map(|r| pctx.retrieval.retrieve(&r.query, r.top_k))
-                        .collect();
-                    let rep = pctx.kv.prefetch_many(&ids);
+                    let rep = kv.prefetch_many(&ids);
                     totals.prefetch_busy_secs += t0.elapsed().as_secs_f64();
                     totals.prefetch_warmed += rep.warmed;
                     totals.prefetch_already_resident += rep.already_resident;
@@ -180,13 +221,15 @@ pub fn serve_overlapped_with(
         };
 
         {
-            let batches = &batches;
             let claimed = &claimed;
             scope.spawn(move || {
                 for (i, batch) in batches.iter().enumerate() {
                     claimed.store(i + 1, Ordering::Release);
                     let t0 = Instant::now();
-                    let staged = loader_ctx.stage_matkv(batch);
+                    // The plan's retrieval (when computed) is reused so
+                    // the vector-DB search runs once per request.
+                    let staged =
+                        loader_ctx.stage_matkv_with(&batch.reqs, batch.planned_retrieval());
                     let busy = t0.elapsed().as_secs_f64();
                     if tx.send(staged.map(|s| (s, busy))).is_err() {
                         return; // executor hung up (error path)
@@ -220,12 +263,7 @@ pub fn serve_overlapped_with(
         drop(rx);
         if let Some(handle) = prefetch_handle {
             let totals = handle.join().map_err(|_| anyhow::anyhow!("prefetch thread panicked"))?;
-            report.prefetch_busy_secs = totals.prefetch_busy_secs;
-            report.prefetch_warmed = totals.prefetch_warmed;
-            report.prefetch_already_resident = totals.prefetch_already_resident;
-            report.prefetch_absent = totals.prefetch_absent;
-            report.prefetch_rejected = totals.prefetch_rejected;
-            report.prefetch_device_secs = totals.prefetch_device_secs;
+            report.merge_prefetch(&totals);
         }
         result
     })?;

@@ -254,6 +254,15 @@ impl HotTier {
         self.lru.lock().unwrap().map.contains_key(&id)
     }
 
+    /// Snapshot of every resident chunk id (demand and prefetched alike),
+    /// with no stat bumps and no LRU promotion. The scheduler's
+    /// tier-affinity policy scores queued requests against this set; it
+    /// is advisory — residency can change the moment the lock drops — so
+    /// consumers treat it as a hint, never a guarantee.
+    pub fn resident_ids(&self) -> Vec<ChunkId> {
+        self.lru.lock().unwrap().map.keys().copied().collect()
+    }
+
     /// Record one telemetry sample (see [`CacheSample`]).
     pub fn sample(&self) {
         let (bytes, chunks) = {
@@ -578,6 +587,21 @@ mod tests {
         assert!(tier.contains(5));
         assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 0);
         assert_eq!(tier.stats.misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn resident_ids_snapshots_without_side_effects() {
+        let tier = HotTier::new(4 * cost());
+        assert!(tier.resident_ids().is_empty());
+        tier.insert(1, chunk(1), 100);
+        tier.insert_prefetch(2, chunk(2), 100, tier.generation(2));
+        let mut ids = tier.resident_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "demand and prefetched entries both resident");
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(tier.stats.misses.load(Ordering::Relaxed), 0);
+        tier.invalidate(1);
+        assert_eq!(tier.resident_ids(), vec![2]);
     }
 
     #[test]

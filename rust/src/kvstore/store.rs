@@ -163,7 +163,8 @@ pub struct Loaded {
     pub device_secs: f64,
     /// Size of the chunk's on-disk file (for a hit: the read it avoided).
     pub file_bytes: usize,
-    /// Served from the DRAM hot tier, no device read issued.
+    /// Served without a device read: a DRAM hot-tier hit, or a reuse of
+    /// an identical id earlier in the same `load_many` call.
     pub from_cache: bool,
     /// Index of the shard this chunk routes to (for a hit: the device
     /// read the hit avoided).
@@ -352,6 +353,15 @@ impl KvStore {
         self.hot.as_deref()
     }
 
+    /// Snapshot of the hot tier's resident chunk ids (empty without a
+    /// tier). The serving scheduler's tier-affinity policy scores queued
+    /// requests by overlap of their retrieval top-K with this set —
+    /// advisory only, residency can change as soon as the snapshot is
+    /// taken (see [`HotTier::resident_ids`]).
+    pub fn resident_ids(&self) -> Vec<ChunkId> {
+        self.hot.as_deref().map(HotTier::resident_ids).unwrap_or_default()
+    }
+
     /// On-disk size of `chunk` in the store's current write format.
     pub fn encoded_bytes(&self, chunk: &KvChunk) -> usize {
         chunk.file_bytes(self.format)
@@ -527,6 +537,13 @@ impl KvStore {
     /// to different shards overlap in simulated device time, which is
     /// where the JBOD's aggregate bandwidth comes from. Output order
     /// matches `ids`.
+    ///
+    /// Repeated ids within one call collapse to a single device read:
+    /// two batch elements splicing the same chunk share one file, so the
+    /// duplicates are answered from the first occurrence (`from_cache`,
+    /// zero device seconds) — the splice-reuse half of batcher/tier
+    /// co-design, which is what makes grouping chunk-sharing requests
+    /// into one batch pay off.
     pub fn load_many(&self, ids: &[ChunkId]) -> Result<Vec<Loaded>> {
         enum Slot {
             Hit(Loaded),
@@ -534,10 +551,19 @@ impl KvStore {
             /// captured before the read could start: if a write/delete
             /// races this load, the stale bytes are not cached.
             Miss(u64, usize, Pending<Result<(Vec<u8>, f64)>>),
+            /// Same id appeared earlier in this call (at the given output
+            /// index): reuse that slot's outcome instead of re-reading.
+            Dup(usize),
         }
+        let mut first_at: std::collections::HashMap<ChunkId, usize> = std::collections::HashMap::new();
         let slots: Vec<Slot> = ids
             .iter()
-            .map(|&id| {
+            .enumerate()
+            .map(|(i, &id)| {
+                if let Some(&j) = first_at.get(&id) {
+                    return Slot::Dup(j);
+                }
+                first_at.insert(id, i);
                 let shard_idx = self.shard_index_of(id);
                 let mut gen = 0;
                 if let Some(hot) = &self.hot {
@@ -558,7 +584,7 @@ impl KvStore {
                 Slot::Miss(gen, shard_idx, self.pool.submit(move || shard.read(id)))
             })
             .collect();
-        let mut out = Vec::with_capacity(ids.len());
+        let mut out: Vec<Loaded> = Vec::with_capacity(ids.len());
         for (slot, &id) in slots.into_iter().zip(ids) {
             match slot {
                 Slot::Hit(l) => out.push(l),
@@ -576,6 +602,21 @@ impl KvStore {
                         file_bytes: data.len(),
                         from_cache: false,
                         shard: shard_idx,
+                    });
+                }
+                Slot::Dup(j) => {
+                    // `j` indexes a strictly earlier slot, so `out[j]` is
+                    // already resolved; no device charge for the reuse.
+                    let (chunk, file_bytes, shard) = {
+                        let first = &out[j];
+                        (first.chunk.clone(), first.file_bytes, first.shard)
+                    };
+                    out.push(Loaded {
+                        chunk,
+                        device_secs: 0.0,
+                        file_bytes,
+                        from_cache: true,
+                        shard,
                     });
                 }
             }
@@ -737,6 +778,56 @@ mod tests {
         assert_eq!(loaded[0].chunk.k[0], chunk(3, 8).k[0]);
         assert_eq!(loaded[1].chunk.k[0], chunk(1, 8).k[0]);
         assert_eq!(loaded[2].chunk.k[0], chunk(4, 8).k[0]);
+    }
+
+    #[test]
+    fn load_many_dedups_repeated_ids_in_one_call() {
+        // No hot tier: the dedup is batch-local, so repeated ids still
+        // cost exactly one device read and the duplicates report
+        // `from_cache` with zero device seconds.
+        let (_d, s) = store();
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        s.store_sync(2, &chunk(2, 8)).unwrap();
+        let loaded = s.load_many(&[1, 2, 1, 1]).unwrap();
+        assert!(!loaded[0].from_cache && !loaded[1].from_cache);
+        assert!(loaded[2].from_cache && loaded[3].from_cache);
+        assert_eq!(loaded[2].device_secs, 0.0);
+        assert_eq!(loaded[2].file_bytes, loaded[0].file_bytes);
+        assert_eq!(loaded[2].shard, loaded[0].shard);
+        assert_eq!(*loaded[2].chunk, *loaded[0].chunk);
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 2, "one read per unique id");
+        // a later, separate call still misses (nothing was cached)
+        assert!(!s.load(1).unwrap().from_cache);
+    }
+
+    #[test]
+    fn load_many_dedup_of_a_tier_hit_stays_a_hit() {
+        let (_d, s) = tiered_store(64 << 20);
+        s.store_sync(3, &chunk(3, 8)).unwrap();
+        s.load(3).unwrap(); // warm it
+        let loaded = s.load_many(&[3, 3]).unwrap();
+        assert!(loaded.iter().all(|l| l.from_cache));
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 1, "only the warming read");
+        // the duplicate must not double-bump the tier's hit counter
+        let tier = s.hot_tier().unwrap();
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn store_resident_ids_tracks_tier() {
+        let (_d, s) = tiered_store(64 << 20);
+        assert!(s.resident_ids().is_empty());
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        s.store_sync(2, &chunk(2, 8)).unwrap();
+        s.load_many(&[1, 2]).unwrap();
+        let mut ids = s.resident_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        // without a tier the snapshot is empty, never an error
+        let (_d2, plain) = store();
+        plain.store_sync(1, &chunk(1, 8)).unwrap();
+        plain.load(1).unwrap();
+        assert!(plain.resident_ids().is_empty());
     }
 
     #[test]

@@ -5,11 +5,12 @@
 //!
 //! * **L3 (this crate)** — the paper's system contribution: the ingest
 //!   pipeline that materializes document KV caches to flash, the serve
-//!   path that loads them instead of recomputing prefill, dynamic
-//!   batching, the decode/IO overlap pipeline, the Vanilla and
-//!   CacheBlend-style baselines, plus every substrate they need (vector
-//!   DB, KV store with storage-device simulation, tokenizer, workload
-//!   generation, hardware/energy/economics models).
+//!   path that loads them instead of recomputing prefill, an online
+//!   serving scheduler with tier-aware continuous batching, the
+//!   decode/IO overlap pipeline, the Vanilla and CacheBlend-style
+//!   baselines, plus every substrate they need (vector DB, KV store with
+//!   storage-device simulation, tokenizer, workload generation,
+//!   hardware/energy/economics models).
 //! * **L2 (python/compile, build-time)** — a LLaMA-architecture model in
 //!   JAX whose single packed-state entry point serves chunked prefill,
 //!   query sub-prefill over loaded KVs, and decode; AOT-lowered to HLO

@@ -9,13 +9,16 @@
 use anyhow::Result;
 
 use matkv::coordinator::baselines::cacheblend_mode;
-use matkv::coordinator::{serve_overlapped_with, Engine, EngineOptions, OverlapOptions, ServeMode};
+use matkv::coordinator::{
+    BatchPolicy, Engine, EngineOptions, ExecOptions, OverlapOptions, SchedOptions, SchedPolicy,
+    Scheduler, ServeMode,
+};
 use matkv::hwsim::economics::fig1_trend;
 use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
 use matkv::kvstore::{KvFormat, KvStore};
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
-use matkv::workload::{Corpus, RequestGen, TurboRagProfile};
+use matkv::workload::{ArrivalGen, Corpus, RequestGen, TurboRagProfile};
 use matkv::Manifest;
 
 const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
@@ -26,7 +29,17 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --kv-format v1|v2 (on-disk KV planes: f32|f16, default v2)
                --shards N (JBOD of N independent simulated devices, default 1)
                --prefetch (with --overlap: warm the hot tier from upcoming
-                           batches' retrieval top-K)";
+                           batches' planned retrieval top-K)
+               --policy fifo|affinity (batch formation: arrival order, or
+                           tier-affinity grouping with a starvation bound)
+               --arrival-rate R (simulated Poisson arrivals/sec; 0 = the
+                           whole workload arrives at t=0)
+               --max-wait-ms N (release a partial batch after the oldest
+                           request waited this long, default 50)
+               --service-ms N (modeled executor seconds per batch; builds
+                           the backlog continuous batching selects from)
+               --max-age-batches N (affinity: force-include a request
+                           passed over N times, default 8)";
 
 fn storage_profile(name: &str) -> Result<StorageProfile> {
     Ok(match name {
@@ -119,8 +132,6 @@ fn serve(args: &Args) -> Result<()> {
         ing.write_device_secs
     );
 
-    let mut gen = RequestGen::new(TurboRagProfile::default(), corpus.n_topics, 1.0, 7);
-    let reqs = gen.take(&corpus, requests);
     let serve_mode = match mode_name.as_str() {
         "matkv" => ServeMode::MatKv,
         "vanilla" => ServeMode::Vanilla,
@@ -128,9 +139,56 @@ fn serve(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown mode {other}"),
     };
 
-    let (responses, metrics) = if overlap {
-        let opts = OverlapOptions { prefetch, ..OverlapOptions::default() };
-        let (r, m2, rep) = serve_overlapped_with(&engine, &reqs, batch, serve_mode, &opts)?;
+    // Every serve path goes through the scheduler: a queue of (possibly
+    // simulated-Poisson) arrivals, a size-or-timeout release condition,
+    // and a batch-formation policy.
+    let policy_name = args.str("policy", "fifo");
+    let policy = match policy_name.as_str() {
+        "fifo" => SchedPolicy::Fifo,
+        "affinity" => {
+            SchedPolicy::TierAffinity { max_age_batches: args.usize("max-age-batches", 8) }
+        }
+        other => anyhow::bail!("unknown scheduling policy {other}"),
+    };
+    let rate = args.f64("arrival-rate", 0.0);
+    let mut sched = Scheduler::new(
+        engine.loader_ctx(),
+        SchedOptions {
+            batch: BatchPolicy {
+                max_batch: batch,
+                max_wait_secs: args.f64("max-wait-ms", 50.0) / 1e3,
+            },
+            policy,
+            service_estimate_secs: args.f64("service-ms", 0.0) / 1e3,
+        },
+    );
+    if rate > 0.0 {
+        let mut gen =
+            ArrivalGen::new(TurboRagProfile::default(), corpus.n_topics, 1.0, rate, 7);
+        sched.enqueue_timed(gen.take(&corpus, requests));
+    } else {
+        let mut gen = RequestGen::new(TurboRagProfile::default(), corpus.n_topics, 1.0, 7);
+        sched.enqueue_now(gen.take(&corpus, requests));
+    }
+    let exec = if overlap {
+        ExecOptions::overlapped(OverlapOptions { prefetch, ..OverlapOptions::default() })
+    } else {
+        ExecOptions::sequential()
+    };
+    let out = sched.run(&engine, serve_mode, &exec)?;
+
+    eprintln!(
+        "[sched] policy={policy_name} {} batches ({} full / {} timeout releases), \
+         queue wait mean {:.1}ms / max {:.1}ms, forced includes {}",
+        out.sched.batches,
+        out.sched.full_releases,
+        out.sched.timeout_releases,
+        out.sched.mean_wait_secs * 1e3,
+        out.sched.max_wait_secs * 1e3,
+        out.sched.forced_includes,
+    );
+    if overlap {
+        let rep = &out.overlap;
         eprintln!(
             "[overlap] loader busy {:.2}s, exec busy {:.2}s, stalls {:.3}s",
             rep.loader_busy_secs, rep.exec_busy_secs, rep.exec_stall_secs
@@ -147,10 +205,8 @@ fn serve(args: &Args) -> Result<()> {
                 rep.prefetch_device_secs,
             );
         }
-        (r, m2)
-    } else {
-        engine.serve_all(&reqs, batch, serve_mode)?
-    };
+    }
+    let (responses, metrics) = (out.responses, out.metrics);
 
     let h100 = DeviceProfile::h100();
     let arch = ArchSpec::standin_for(&config);

@@ -3,12 +3,14 @@
 //! every figure depends only on token counts, chunk sizes and access skew,
 //! all controlled parameters here).
 
+pub mod arrivals;
 pub mod corpus;
 pub mod datasets;
 pub mod requests;
 pub mod rng;
 pub mod zipf;
 
+pub use arrivals::{ArrivalGen, TimedRequest};
 pub use corpus::{Corpus, Document};
 pub use datasets::{DatasetProfile, TABLE1_DATASETS};
 pub use requests::{RagRequest, RequestGen, TurboRagProfile};

@@ -319,21 +319,56 @@ fn early_decode_break_counts_actual_tokens() {
 }
 
 #[test]
-fn batcher_integrates_with_engine() {
+fn scheduler_integrates_with_engine() {
     require_artifacts!();
-    use matkv::coordinator::{BatchPolicy, Batcher};
+    use matkv::coordinator::{BatchPolicy, ExecOptions, SchedOptions, SchedPolicy, Scheduler};
     let (_d, corpus, engine) = build_engine(6);
-    let mut batcher = Batcher::new(BatchPolicy {
-        max_batch: 4,
-        max_wait: std::time::Duration::ZERO,
-    });
-    batcher.push_all(requests(&corpus, 10, 1, 3));
-    let mut served = 0;
-    for batch in batcher.drain_batches() {
-        let (r, _) = engine.serve_batch(&batch, ServeMode::MatKv).unwrap();
-        served += r.len();
+    let mut sched = Scheduler::new(
+        engine.loader_ctx(),
+        SchedOptions {
+            batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.0 },
+            policy: SchedPolicy::Fifo,
+            service_estimate_secs: 0.0,
+        },
+    );
+    sched.enqueue_now(requests(&corpus, 10, 1, 3));
+    let out = sched.run(&engine, ServeMode::MatKv, &ExecOptions::sequential()).unwrap();
+    assert_eq!(out.responses.len(), 10);
+    assert_eq!(out.sched.requests, 10);
+    assert_eq!(out.sched.batches, 3); // 4 + 4 + 2
+    assert_eq!(out.metrics.requests, 10);
+}
+
+#[test]
+fn affinity_scheduling_preserves_per_request_outputs() {
+    require_artifacts!();
+    // Batch composition must not change what a request generates (the
+    // same invariant batch_padding_does_not_change_results pins): an
+    // affinity-reordered schedule yields the same tokens per request id
+    // as the fifo schedule, just possibly in a different order.
+    use matkv::coordinator::{BatchPolicy, ExecOptions, SchedOptions, SchedPolicy, Scheduler};
+    use std::collections::HashMap;
+    let (_d, corpus, engine) = build_engine_with(6, |kv| kv.set_hot_tier(256 << 20));
+    let reqs = requests(&corpus, 8, 2, 4);
+    let (fifo, _) = engine.serve_all(&reqs, 2, ServeMode::MatKv).unwrap();
+    let mut sched = Scheduler::new(
+        engine.loader_ctx(),
+        SchedOptions {
+            batch: BatchPolicy { max_batch: 2, max_wait_secs: 0.0 },
+            policy: SchedPolicy::TierAffinity { max_age_batches: 4 },
+            service_estimate_secs: 0.0,
+        },
+    );
+    sched.enqueue_now(reqs.clone());
+    let out = sched.run(&engine, ServeMode::MatKv, &ExecOptions::sequential()).unwrap();
+    assert_eq!(out.responses.len(), fifo.len());
+    let by_id: HashMap<u64, &matkv::coordinator::Response> =
+        fifo.iter().map(|r| (r.request_id, r)).collect();
+    for r in &out.responses {
+        let want = by_id.get(&r.request_id).expect("every request served once");
+        assert_eq!(r.tokens, want.tokens, "affinity batching changed request {}", r.request_id);
+        assert_eq!(r.retrieved, want.retrieved);
     }
-    assert_eq!(served, 10);
 }
 
 #[test]
