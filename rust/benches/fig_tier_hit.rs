@@ -34,8 +34,9 @@ fn chunk(seed: u32, seq: u32) -> KvChunk {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
-    let n_chunks = args.usize("chunks", 256);
-    let accesses = args.usize("accesses", 4000);
+    let smoke = args.flag("smoke");
+    let n_chunks = args.usize("chunks", if smoke { 64 } else { 256 });
+    let accesses = args.usize("accesses", if smoke { 800 } else { 4000 });
     let seq = args.usize("chunk-tokens", 128) as u32;
 
     // Materialize the corpus once; every (skew, budget) cell reopens the
@@ -116,8 +117,8 @@ fn main() -> anyhow::Result<()> {
     );
     if let Some(path) = args.opt("json") {
         let doc = format!(
-            "{{\"bench\":\"fig_tier_hit\",\"chunks\":{n_chunks},\"accesses\":{accesses},\
-             \"chunk_tokens\":{seq},\"cells\":[{json_cells}]}}"
+            "{{\"bench\":\"fig_tier_hit\",\"smoke\":{smoke},\"chunks\":{n_chunks},\
+             \"accesses\":{accesses},\"chunk_tokens\":{seq},\"cells\":[{json_cells}]}}"
         );
         std::fs::write(path, doc)?;
         eprintln!("[fig_tier_hit] wrote {path}");

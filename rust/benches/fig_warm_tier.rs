@@ -1,0 +1,307 @@
+//! Warm-tier split bench — hot/warm partitions of a **fixed total DRAM
+//! budget**, plus the table-VI fidelity cost of serving q8 chunks.
+//!
+//! MatKV's recompute-vs-storage trade recurs inside DRAM: a q8 plane
+//! costs ~4x fewer resident bytes than the hot tier's f32 copy, so
+//! giving part of the budget to a quantized warm tier holds strictly
+//! more chunks — at the price of a modeled dequant pass per warm hit and
+//! bounded quantization error in the served planes. Two phases:
+//!
+//! 1. **Equal-budget split sweep** (no artifacts needed): the same
+//!    Zipf(1.0) access stream replayed against hot/warm splits of one
+//!    DRAM budget — 100/0, 75/25, 50/50. Shape to reproduce: at equal
+//!    total bytes, every split with a warm share serves **strictly more
+//!    chunks from DRAM** and issues **strictly fewer device reads** than
+//!    hot-only, with the dequant seconds reported as the price. Emits
+//!    both tiers' telemetry series (tier-labeled).
+//! 2. **Fidelity** (needs `make artifacts`; skipped otherwise): the same
+//!    request list served by a pure-f32 deployment and by one whose hot
+//!    tier is small enough that repeat traffic is warm-served; outputs
+//!    compared with the table-VI harness (token-F1 + exact-prefix).
+//!    Target: mean token-F1 ≥ 0.95 vs the pure-f32 baseline.
+//!
+//! `--smoke` shrinks everything for CI; `--json PATH` writes rows,
+//! telemetry and fidelity as JSON.
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use matkv::coordinator::baselines::fidelity;
+use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
+use matkv::hwsim::StorageProfile;
+use matkv::kvstore::{series_to_json, KvChunk, KvStore};
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::workload::{Rng, Zipf};
+
+fn chunk(seed: u32, seq: u32) -> KvChunk {
+    let plane = (2 * 2 * seq * 8) as usize;
+    KvChunk {
+        config_id: 0x9a12,
+        n_layers: 2,
+        n_kv_heads: 2,
+        seq_len: seq,
+        head_dim: 8,
+        // off-grid payload: the q8 round trip is genuinely lossy here,
+        // exercising the real dequant path (bounded by the codec tests)
+        k: (0..plane).map(|i| ((i + seed as usize) as f32 * 0.37).sin() * 3.0).collect(),
+        v: (0..plane).map(|i| ((i + seed as usize) as f32 * 0.53).cos() * 3.0).collect(),
+    }
+}
+
+struct SplitRow {
+    hot_pct: usize,
+    warm_pct: usize,
+    dram_served: u64,
+    hot_hits: u64,
+    warm_hits: u64,
+    device_reads: u64,
+    device_secs: f64,
+    dequant_secs: f64,
+    resident_chunks: usize,
+    hot_series: String,
+    warm_series: String,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let smoke = args.flag("smoke");
+    let n_chunks = args.usize("chunks", if smoke { 64 } else { 192 });
+    let accesses = args.usize("accesses", if smoke { 800 } else { 4000 });
+    let seq = args.usize("chunk-tokens", 128) as u32;
+    let serve_batch = args.usize("serve-batch", 8);
+    let budget_pct = args.usize("budget-pct", 25);
+    let skew = args.f64("skew", 1.0);
+
+    // Materialize once; every split reopens the same files with fresh
+    // tiers so counters start clean.
+    let dir = TempDir::new("matkv-fig-warm")?;
+    {
+        let mut w = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
+        w.disable_throttle();
+        for i in 0..n_chunks {
+            w.store_sync(i as u64, &chunk(i as u32, seq))?;
+        }
+    }
+    let per_chunk = chunk(0, seq).dram_bytes();
+    let total_budget = per_chunk * n_chunks * budget_pct / 100;
+    eprintln!(
+        "[fig_warm_tier] {n_chunks} chunks x {seq} tokens, {accesses} Zipf({skew}) accesses, \
+         total DRAM budget {:.1} MB ({budget_pct}% of corpus) split hot/warm",
+        total_budget as f64 / 1e6
+    );
+
+    // ---- phase 1: equal-budget hot/warm split sweep --------------------
+    let mut rows: Vec<SplitRow> = Vec::new();
+    for &(hot_pct, warm_pct) in &[(100usize, 0usize), (75, 25), (50, 50)] {
+        let mut store = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
+        store.disable_throttle(); // device_secs still computed
+        store.set_hot_tier(total_budget * hot_pct / 100);
+        store.set_warm_tier(total_budget * warm_pct / 100);
+        let zipf = Zipf::new(n_chunks, skew);
+        let mut rng = Rng::new(4242);
+        let stream: Vec<u64> = (0..accesses).map(|_| zipf.sample(&mut rng) as u64).collect();
+        let (mut dram_served, mut warm_hits, mut device_secs) = (0u64, 0u64, 0.0f64);
+        for group in stream.chunks(serve_batch) {
+            for l in store.load_many(group)? {
+                dram_served += l.from_cache as u64;
+                warm_hits += l.from_warm as u64;
+                device_secs += l.device_secs;
+            }
+            if let Some(t) = store.hot_tier() {
+                t.sample();
+            }
+            if let Some(t) = store.warm_tier() {
+                t.sample();
+            }
+        }
+        let hot_hits = store
+            .hot_tier()
+            .map(|t| t.stats.hits.load(Ordering::Relaxed))
+            .unwrap_or(0);
+        let dequant_secs =
+            store.warm_tier().map(|t| t.stats.dequant_secs()).unwrap_or(0.0);
+        let resident_chunks = store.hot_tier().map(|t| t.len()).unwrap_or(0)
+            + store.warm_tier().map(|t| t.len()).unwrap_or(0);
+        rows.push(SplitRow {
+            hot_pct,
+            warm_pct,
+            dram_served,
+            hot_hits,
+            warm_hits,
+            device_reads: store.stats.reads.load(Ordering::Relaxed),
+            device_secs,
+            dequant_secs,
+            resident_chunks,
+            hot_series: store
+                .hot_tier()
+                .map(|t| series_to_json(&t.stats.series()))
+                .unwrap_or_else(|| "[]".into()),
+            warm_series: store
+                .warm_tier()
+                .map(|t| series_to_json(&t.stats.series()))
+                .unwrap_or_else(|| "[]".into()),
+        });
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "hot/warm split of a fixed DRAM budget ({:.1} MB, {accesses} Zipf({skew}) accesses)",
+            total_budget as f64 / 1e6
+        ),
+        &[
+            "split h/w",
+            "resident",
+            "DRAM-served",
+            "hot hits",
+            "warm hits",
+            "device reads",
+            "device (s)",
+            "dequant (s)",
+        ],
+    );
+    for r in &rows {
+        table.row(&[
+            format!("{}/{}", r.hot_pct, r.warm_pct),
+            r.resident_chunks.to_string(),
+            r.dram_served.to_string(),
+            r.hot_hits.to_string(),
+            r.warm_hits.to_string(),
+            r.device_reads.to_string(),
+            format!("{:.4}", r.device_secs),
+            format!("{:.5}", r.dequant_secs),
+        ]);
+    }
+    table.print();
+
+    let base = &rows[0];
+    for r in &rows[1..] {
+        println!(
+            "{}/{} vs hot-only at equal DRAM bytes: DRAM-served {} -> {} ({:+}), device reads \
+             {} -> {} ({:+}), dequant price {:.5}s",
+            r.hot_pct,
+            r.warm_pct,
+            base.dram_served,
+            r.dram_served,
+            r.dram_served as i64 - base.dram_served as i64,
+            base.device_reads,
+            r.device_reads,
+            r.device_reads as i64 - base.device_reads as i64,
+            r.dequant_secs,
+        );
+        if r.dram_served <= base.dram_served || r.device_reads >= base.device_reads {
+            eprintln!(
+                "[fig_warm_tier] WARNING: split {}/{} did not strictly beat hot-only \
+                 (DRAM-served {} vs {}, reads {} vs {})",
+                r.hot_pct, r.warm_pct, r.dram_served, base.dram_served, r.device_reads,
+                base.device_reads
+            );
+        }
+    }
+
+    // ---- phase 2: table-VI fidelity of q8-served chunks ----------------
+    let mut fidelity_json = String::from("null");
+    if matkv::manifest::artifacts_present() {
+        let n_docs = if smoke { 8 } else { 16 };
+        let doc_tokens = 256usize;
+        let n_reqs = if smoke { 12 } else { 32 };
+        // Size the candidate's hot tier to ~2 chunks so repeat traffic is
+        // served from the warm tier, not the hot one.
+        let kv_chunk_bytes = {
+            let m = matkv::Manifest::load(matkv::artifacts_dir())?;
+            let cfg = m.config("tiny")?;
+            let plane = cfg.n_layers * cfg.n_kv_heads * doc_tokens * cfg.head_dim;
+            std::mem::size_of::<KvChunk>() + 8 * plane
+        };
+        fn serve_twice(
+            spec: ScenarioSpec,
+            n_reqs: usize,
+        ) -> anyhow::Result<(
+            Vec<matkv::coordinator::Response>,
+            matkv::coordinator::PhaseBreakdown,
+        )> {
+            let sc = Scenario::build(spec)?;
+            let reqs = sc.requests(n_reqs, 2, 8);
+            sc.engine.serve_all(&reqs, 4, ServeMode::MatKv)?; // warm-up pass
+            sc.engine.serve_all(&reqs, 4, ServeMode::MatKv)
+        }
+        let (reference, _) = serve_twice(ScenarioSpec {
+            n_docs,
+            doc_tokens,
+            storage: StorageProfile::ssd_9100pro(),
+            hot_tier_bytes: 64 << 20, // everything stays f32
+            seed: 33,
+            ..ScenarioSpec::default()
+        }, n_reqs)?;
+        let (candidate, cm) = serve_twice(ScenarioSpec {
+            n_docs,
+            doc_tokens,
+            storage: StorageProfile::ssd_9100pro(),
+            hot_tier_bytes: 2 * kv_chunk_bytes,
+            warm_tier_bytes: 16 << 20,
+            seed: 33,
+            ..ScenarioSpec::default()
+        }, n_reqs)?;
+        let f = fidelity(&reference, &candidate);
+        println!(
+            "\nfidelity of q8-served chunks vs pure f32 ({} pairs, {} warm hits in the \
+             measured pass): token-F1 {:.4}, exact-prefix {:.1} tokens, {} exact matches \
+             (target: mean F1 >= 0.95)",
+            f.pairs, cm.warm_hits, f.mean_f1, f.mean_prefix, f.exact
+        );
+        if cm.warm_hits == 0 {
+            eprintln!(
+                "[fig_warm_tier] WARNING: candidate pass served no warm hits — fidelity \
+                 comparison is vacuous"
+            );
+        }
+        if f.mean_f1 < 0.95 {
+            eprintln!("[fig_warm_tier] WARNING: mean token-F1 {:.4} below the 0.95 target", f.mean_f1);
+        }
+        fidelity_json = format!(
+            "{{\"pairs\":{},\"warm_hits\":{},\"mean_f1\":{:.6},\"mean_prefix\":{:.3},\
+             \"exact\":{},\"dequant_secs\":{:.6}}}",
+            f.pairs, cm.warm_hits, f.mean_f1, f.mean_prefix, f.exact, cm.dequant_secs
+        );
+    } else {
+        println!(
+            "\n[fig_warm_tier] fidelity phase skipped: AOT artifacts not built \
+             (run `make artifacts`)"
+        );
+    }
+
+    if let Some(path) = args.opt("json") {
+        let mut split_rows = String::new();
+        for r in &rows {
+            let _ = write!(
+                split_rows,
+                "{}{{\"hot_pct\":{},\"warm_pct\":{},\"resident_chunks\":{},\
+                 \"dram_served\":{},\"hot_hits\":{},\"warm_hits\":{},\"device_reads\":{},\
+                 \"device_secs\":{:.6},\"dequant_secs\":{:.6},\
+                 \"hot_series\":{},\"warm_series\":{}}}",
+                if split_rows.is_empty() { "" } else { "," },
+                r.hot_pct,
+                r.warm_pct,
+                r.resident_chunks,
+                r.dram_served,
+                r.hot_hits,
+                r.warm_hits,
+                r.device_reads,
+                r.device_secs,
+                r.dequant_secs,
+                r.hot_series,
+                r.warm_series,
+            );
+        }
+        let doc = format!(
+            "{{\"bench\":\"fig_warm_tier\",\"smoke\":{smoke},\"chunks\":{n_chunks},\
+             \"accesses\":{accesses},\"chunk_tokens\":{seq},\"budget_pct\":{budget_pct},\
+             \"total_budget_bytes\":{total_budget},\"skew\":{skew},\
+             \"splits\":[{split_rows}],\"fidelity\":{fidelity_json}}}"
+        );
+        std::fs::write(path, doc)?;
+        eprintln!("[fig_warm_tier] wrote {path}");
+    }
+    Ok(())
+}

@@ -58,20 +58,43 @@ pub fn prefix_agreement(a: &[u32], b: &[u32]) -> usize {
 
 /// Mean token-F1 of paired responses (matched by request id).
 pub fn mean_f1(reference: &[Response], candidate: &[Response]) -> f64 {
+    fidelity(reference, candidate).mean_f1
+}
+
+/// Paired output-fidelity summary (the Table-VI harness in one struct):
+/// responses are matched by request id and compared token-by-token. The
+/// warm-tier bench uses this to price q8-served chunks against the pure
+/// f32 path — same model, same requests, only the storage plane differs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Fidelity {
+    /// Response pairs that matched by request id.
+    pub pairs: usize,
+    /// Mean token-level F1 (multiset overlap).
+    pub mean_f1: f64,
+    /// Mean exact-prefix length in tokens — the stricter greedy-decoding
+    /// signal: one early divergent token ends the prefix.
+    pub mean_prefix: f64,
+    /// Pairs whose outputs matched token-for-token.
+    pub exact: usize,
+}
+
+/// Compute the paired fidelity summary (see [`Fidelity`]).
+pub fn fidelity(reference: &[Response], candidate: &[Response]) -> Fidelity {
     let by_id: HashMap<u64, &Response> = reference.iter().map(|r| (r.request_id, r)).collect();
-    let mut total = 0f64;
-    let mut n = 0usize;
+    let mut out = Fidelity::default();
     for c in candidate {
         if let Some(r) = by_id.get(&c.request_id) {
-            total += token_f1(&r.tokens, &c.tokens);
-            n += 1;
+            out.pairs += 1;
+            out.mean_f1 += token_f1(&r.tokens, &c.tokens);
+            out.mean_prefix += prefix_agreement(&r.tokens, &c.tokens) as f64;
+            out.exact += (r.tokens == c.tokens) as usize;
         }
     }
-    if n == 0 {
-        0.0
-    } else {
-        total / n as f64
+    if out.pairs > 0 {
+        out.mean_f1 /= out.pairs as f64;
+        out.mean_prefix /= out.pairs as f64;
     }
+    out
 }
 
 #[cfg(test)]
@@ -113,6 +136,28 @@ mod tests {
     fn prefix_agreement_counts() {
         assert_eq!(prefix_agreement(&[1, 2, 3], &[1, 2, 9]), 2);
         assert_eq!(prefix_agreement(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn fidelity_pairs_by_request_id() {
+        let resp = |id: u64, tokens: Vec<u32>| Response {
+            request_id: id,
+            text: String::new(),
+            tokens,
+            retrieved: Vec::new(),
+        };
+        let reference = vec![resp(1, vec![1, 2, 3]), resp(2, vec![4, 5])];
+        // candidate arrives reordered; id 9 has no reference pair
+        let candidate = vec![resp(2, vec![4, 5]), resp(1, vec![1, 2, 9]), resp(9, vec![7])];
+        let f = fidelity(&reference, &candidate);
+        assert_eq!(f.pairs, 2);
+        assert_eq!(f.exact, 1);
+        // prefixes: id 2 → 2 tokens, id 1 → 2 tokens
+        assert!((f.mean_prefix - 2.0).abs() < 1e-9);
+        // f1: id 2 → 1.0, id 1 → 2/3
+        assert!((f.mean_f1 - (1.0 + 2.0 / 3.0) / 2.0).abs() < 1e-9);
+        assert_eq!(mean_f1(&reference, &candidate), f.mean_f1);
+        assert_eq!(fidelity(&reference, &[]), Fidelity::default());
     }
 
     #[test]

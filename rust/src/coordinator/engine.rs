@@ -155,8 +155,8 @@ impl LoaderCtx {
     }
 
     /// Stage a MatKV batch: retrieve, load KVs from the tiered store
-    /// (DRAM hot tier first, then flash), splice into a host state
-    /// (Fig 3b steps 1-2). No device work.
+    /// (DRAM hot tier, then the q8 warm tier, then flash), splice into a
+    /// host state (Fig 3b steps 1-2). No device work.
     pub fn stage_matkv(&self, reqs: &[RagRequest]) -> Result<StagedBatch> {
         self.stage_matkv_with(reqs, None)
     }
@@ -198,7 +198,12 @@ impl LoaderCtx {
             staged.doc_slots[*b].push((slot, l.chunk.seq_len as usize));
             staged.cache_len[*b] += l.chunk.seq_len as i32;
             staged.metrics.loaded_tokens += l.chunk.seq_len as usize;
-            if l.from_cache {
+            if l.from_warm {
+                staged.metrics.warm_hits += 1;
+                staged.metrics.warm_tokens += l.chunk.seq_len as usize;
+                staged.metrics.warm_bytes_saved += l.file_bytes;
+                staged.metrics.dequant_secs += l.dequant_secs;
+            } else if l.from_cache {
                 staged.metrics.cache_hits += 1;
                 staged.metrics.cache_tokens += l.chunk.seq_len as usize;
                 staged.metrics.cache_bytes_saved += l.file_bytes;
@@ -551,9 +556,13 @@ impl Engine {
         // the *requested* budget.
         m.tokens_out = responses.iter().map(|r| r.tokens.len()).sum();
         m.total_wall_secs = total_t0.elapsed().as_secs_f64();
-        // One telemetry sample per executed batch: the hit/miss/eviction
-        // time series the serve-time telemetry benches plot.
+        // One telemetry sample per executed batch and per tier: the
+        // hit/miss/eviction time series the serve-time telemetry benches
+        // plot (tier-labeled, so hot and warm stay distinguishable).
         if let Some(tier) = self.kv.hot_tier() {
+            tier.sample();
+        }
+        if let Some(tier) = self.kv.warm_tier() {
             tier.sample();
         }
         Ok((responses, m))

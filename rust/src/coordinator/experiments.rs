@@ -20,6 +20,8 @@ pub struct Scenario {
     pub doc_tokens: usize,
     /// Hot-tier budget to re-apply when the storage device is swapped.
     hot_tier_bytes: usize,
+    /// Warm-tier (q8) budget to re-apply on the same occasion.
+    warm_tier_bytes: usize,
     /// Shard count to re-apply on reopen (the on-disk layout pins it).
     shards: usize,
     /// Keep the KV directory alive for the scenario's lifetime.
@@ -36,6 +38,9 @@ pub struct ScenarioSpec {
     pub seed: u64,
     /// DRAM hot-tier budget in bytes (0 = flash only).
     pub hot_tier_bytes: usize,
+    /// q8 warm-tier budget in bytes behind the hot tier (0 = none).
+    /// Hot-tier evictions demote here; warm hits dequantize + promote.
+    pub warm_tier_bytes: usize,
     /// Simulated independent storage devices (1 = the classic single
     /// bus; >1 = a JBOD, `profile` describing each member device).
     pub shards: usize,
@@ -50,6 +55,7 @@ impl Default for ScenarioSpec {
             doc_tokens: 1024,
             seed: 42,
             hot_tier_bytes: 0,
+            warm_tier_bytes: 0,
             shards: 1,
         }
     }
@@ -64,6 +70,7 @@ impl Scenario {
         let kv_dir = TempDir::new("matkv-scenario")?;
         let mut kv = KvStore::open_sharded(kv_dir.path(), spec.storage, spec.shards.max(1))?;
         kv.set_hot_tier(spec.hot_tier_bytes);
+        kv.set_warm_tier(spec.warm_tier_bytes);
         let opts = EngineOptions::for_config(&manifest, &spec.config)?;
         let engine = Engine::new(&manifest, opts, kv, corpus.texts())?;
         engine.ingest_corpus(&corpus, spec.doc_tokens)?;
@@ -72,6 +79,7 @@ impl Scenario {
             corpus,
             doc_tokens: spec.doc_tokens,
             hot_tier_bytes: spec.hot_tier_bytes,
+            warm_tier_bytes: spec.warm_tier_bytes,
             shards: spec.shards.max(1),
             _kv_dir: kv_dir,
         })
@@ -100,6 +108,7 @@ impl Scenario {
         let mut store =
             KvStore::open_sharded(dir, profile, self.shards).expect("reopen kvstore");
         store.set_hot_tier(self.hot_tier_bytes);
+        store.set_warm_tier(self.warm_tier_bytes);
         self.engine.kv = std::sync::Arc::new(store);
     }
 }

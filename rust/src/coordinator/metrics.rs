@@ -80,12 +80,25 @@ pub struct PhaseBreakdown {
     pub shard_device_secs: Vec<f64>,
     /// Peak in-flight reads per shard (high-water mark; merged by max).
     pub shard_peak_queue: Vec<u64>,
-    /// Chunk loads served by the DRAM hot tier (no device read).
+    /// Chunk loads served by the DRAM hot tier (no device read). Warm
+    /// hits are counted separately in `warm_hits`.
     pub cache_hits: usize,
     /// Tokens of KV served by the hot tier (subset of `loaded_tokens`).
     pub cache_tokens: usize,
     /// On-disk bytes the hot tier avoided reading (executed scale).
     pub cache_bytes_saved: usize,
+    /// Chunk loads served by the q8 warm tier: no device read, but the
+    /// planes were dequantized (see `dequant_secs`).
+    pub warm_hits: usize,
+    /// Tokens of KV served by the warm tier (subset of `loaded_tokens`,
+    /// disjoint from `cache_tokens`).
+    pub warm_tokens: usize,
+    /// On-disk bytes the warm tier avoided reading (executed scale).
+    pub warm_bytes_saved: usize,
+    /// Modeled q8→f32 dequantization seconds charged to warm hits
+    /// (testbed scale; the architecture-scale charge is folded into
+    /// [`PhaseBreakdown::load_secs_on`]).
+    pub dequant_secs: f64,
     /// Host→device state upload wall time.
     pub upload_secs: f64,
     /// Prefill (doc recompute and/or query sub-prefill) wall time.
@@ -158,6 +171,10 @@ impl PhaseBreakdown {
         self.cache_hits += other.cache_hits;
         self.cache_tokens += other.cache_tokens;
         self.cache_bytes_saved += other.cache_bytes_saved;
+        self.warm_hits += other.warm_hits;
+        self.warm_tokens += other.warm_tokens;
+        self.warm_bytes_saved += other.warm_bytes_saved;
+        self.dequant_secs += other.dequant_secs;
         self.upload_secs += other.upload_secs;
         self.prefill_wall_secs += other.prefill_wall_secs;
         self.prefill_trace.add(&other.prefill_trace);
@@ -180,11 +197,16 @@ impl PhaseBreakdown {
     }
 
     /// Simulated KV-load seconds at architecture scale on a storage
-    /// tier. Hot-tier hits never touched the device, so only the miss
-    /// tokens are charged to it.
+    /// tier. DRAM-tier hits (hot or warm) never touched the device, so
+    /// only the miss tokens are charged to it; warm-served tokens are
+    /// charged the modeled q8 dequant pass instead — one byte per f16
+    /// KV-byte pair, so half of [`ArchSpec::kv_bytes`] moves through the
+    /// dequant bandwidth.
     pub fn load_secs_on(&self, arch: &ArchSpec, storage: &StorageProfile) -> f64 {
-        let bytes = arch.kv_bytes(self.loaded_tokens.saturating_sub(self.cache_tokens));
-        storage.read_secs_batch(bytes, self.load_reads)
+        let miss_tokens =
+            self.loaded_tokens.saturating_sub(self.cache_tokens + self.warm_tokens);
+        storage.read_secs_batch(arch.kv_bytes(miss_tokens), self.load_reads)
+            + crate::hwsim::q8_dequant_secs(arch.kv_bytes(self.warm_tokens) * 0.5)
     }
 
     /// Simulated host→device upload of the loaded KVs (PCIe).
@@ -298,6 +320,29 @@ mod tests {
     }
 
     #[test]
+    fn add_accumulates_warm_tier_fields() {
+        let mut a = PhaseBreakdown {
+            warm_hits: 1,
+            warm_tokens: 256,
+            warm_bytes_saved: 10,
+            dequant_secs: 0.5,
+            ..Default::default()
+        };
+        let b = PhaseBreakdown {
+            warm_hits: 2,
+            warm_tokens: 512,
+            warm_bytes_saved: 30,
+            dequant_secs: 0.25,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.warm_hits, 3);
+        assert_eq!(a.warm_tokens, 768);
+        assert_eq!(a.warm_bytes_saved, 40);
+        assert!((a.dequant_secs - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
     fn shard_rollup_merges_sums_and_peaks() {
         let mut a = PhaseBreakdown::default();
         a.record_shard_read(0, 100, 0.5);
@@ -341,6 +386,36 @@ mod tests {
         assert_eq!(b.upload_secs_on(&arch, &crate::hwsim::DeviceProfile::h100()),
             PhaseBreakdown { loaded_tokens: 2048, ..Default::default() }
                 .upload_secs_on(&arch, &crate::hwsim::DeviceProfile::h100()));
+    }
+
+    #[test]
+    fn load_costing_charges_warm_hits_dequant_not_device() {
+        let arch = crate::hwsim::standin::ArchSpec::llama_70b();
+        let ssd = crate::hwsim::StorageProfile::ssd_9100pro();
+        let cold = PhaseBreakdown { loaded_tokens: 2048, load_reads: 2, ..Default::default() };
+        // the same tokens served from the warm tier: no device reads,
+        // only the dequant pass
+        let warm = PhaseBreakdown {
+            loaded_tokens: 2048,
+            warm_hits: 2,
+            warm_tokens: 2048,
+            ..Default::default()
+        };
+        // and from the hot tier: entirely free
+        let hot = PhaseBreakdown {
+            loaded_tokens: 2048,
+            cache_hits: 2,
+            cache_tokens: 2048,
+            ..Default::default()
+        };
+        let (c, w, h) = (
+            cold.load_secs_on(&arch, &ssd),
+            warm.load_secs_on(&arch, &ssd),
+            hot.load_secs_on(&arch, &ssd),
+        );
+        assert_eq!(h, 0.0);
+        assert!(w > 0.0, "warm hits are not free");
+        assert!(w < c, "dequant must undercut the device read: {w} vs {c}");
     }
 
     #[test]

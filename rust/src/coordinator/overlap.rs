@@ -16,11 +16,13 @@
 //! [`super::scheduler::Scheduler`], and [`serve_overlapped_with`] is a
 //! thin wrapper that plans a FIFO offline schedule and runs it here.
 //!
-//! The loader goes through the tiered store: DRAM hot-tier hits shave
-//! their chunks off the loader's critical path entirely (no throttled
-//! device read), which shrinks `loader_busy_secs` and with it the only
-//! stage that can stall the executor. Per-batch hit counts surface in
-//! the aggregated [`PhaseBreakdown`] (`cache_hits`/`cache_bytes_saved`).
+//! The loader goes through the tiered store: DRAM hits — hot-tier f32
+//! for free, q8 warm-tier at a modeled dequant cost — shave their
+//! chunks' throttled device reads off the loader's critical path, which
+//! shrinks `loader_busy_secs` and with it the only stage that can stall
+//! the executor. Per-batch hit counts surface in the aggregated
+//! [`PhaseBreakdown`] (`cache_hits`/`cache_bytes_saved` for hot,
+//! `warm_hits`/`warm_bytes_saved`/`dequant_secs` for warm).
 //!
 //! **Retrieval-aware prefetch** ([`OverlapOptions::prefetch`]) adds a
 //! third thread: the scheduler already knows every upcoming batch's
@@ -53,8 +55,9 @@ use crate::workload::RagRequest;
 /// Knobs for [`serve_overlapped_with`].
 #[derive(Debug, Clone)]
 pub struct OverlapOptions {
-    /// Warm the DRAM hot tier for upcoming batches from their retrieval
-    /// top-K (requires the store to have a hot tier; a no-op otherwise).
+    /// Warm the DRAM tiers for upcoming batches from their retrieval
+    /// top-K (requires the store to have a hot or warm tier; a no-op
+    /// otherwise — see [`crate::kvstore::KvStore::prefetch_many`]).
     pub prefetch: bool,
     /// How many batches past the last *executed* one the prefetcher may
     /// run ahead (≥ 1). The loader itself pipelines up to 2 batches

@@ -289,12 +289,16 @@ impl Scheduler {
         // snapshot at plan time, plus the chunks of the last
         // RECENT_BATCH_WINDOW planned batches (they fill the tier as
         // they execute; maintained incrementally as a refcounted window,
-        // not re-cloned per release). Advisory — eviction is not
-        // simulated.
-        let resident: HashSet<ChunkId> = if affinity {
-            self.ctx.kv.resident_ids().into_iter().collect()
+        // not re-cloned per release). q8 warm-tier residents are scored
+        // at a *discount* — they avoid the device read but pay the
+        // dequant pass. Advisory — eviction is not simulated.
+        let (resident, warm_resident): (HashSet<ChunkId>, HashSet<ChunkId>) = if affinity {
+            (
+                self.ctx.kv.hot_resident_ids().into_iter().collect(),
+                self.ctx.kv.warm_resident_ids().into_iter().collect(),
+            )
         } else {
-            HashSet::new()
+            (HashSet::new(), HashSet::new())
         };
         let mut recent: VecDeque<Vec<ChunkId>> = VecDeque::new();
         let mut recent_counts: HashMap<ChunkId, usize> = HashMap::new();
@@ -350,6 +354,7 @@ impl Scheduler {
                     max_batch,
                     max_age_batches,
                     &resident,
+                    &warm_resident,
                     &recent_counts,
                     &mut report,
                 ),
@@ -447,15 +452,18 @@ fn fifo_select(pending: &mut VecDeque<Queued>, max_batch: usize) -> Vec<Queued> 
 
 /// Tier-affinity selection. `pending` is arrival-ordered; overdue
 /// requests (starvation bound) are taken first, oldest first, then the
-/// remaining slots fill greedily by score = number of the request's
-/// chunks that need no device read (resident snapshot ∪ recent-batch
-/// window ∪ chunks batchmates already claimed). Ties go to the oldest
-/// request.
+/// remaining slots fill greedily by a weighted score of the request's
+/// chunks that need no device read: **2 points** for a full-value save
+/// (hot-resident snapshot ∪ recent-batch window ∪ chunks batchmates
+/// already claimed) and **1 point** for a q8 warm-tier resident, which
+/// skips the device but pays a dequant pass on promotion. Ties go to
+/// the oldest request.
 fn affinity_select(
     pending: &mut VecDeque<Queued>,
     max_batch: usize,
     max_age_batches: usize,
     resident: &HashSet<ChunkId>,
+    warm_resident: &HashSet<ChunkId>,
     recent: &HashMap<ChunkId, usize>,
     report: &mut SchedReport,
 ) -> Vec<Queued> {
@@ -483,12 +491,19 @@ fn affinity_select(
         let score_of = |q: &Queued| {
             q.retrieved
                 .iter()
-                .filter(|&&id| {
-                    resident.contains(&id)
-                        || recent.contains_key(&id)
-                        || batch_chunks.contains(&id)
+                .map(|id| {
+                    if resident.contains(id)
+                        || recent.contains_key(id)
+                        || batch_chunks.contains(id)
+                    {
+                        2
+                    } else if warm_resident.contains(id) {
+                        1 // device read avoided, dequant still owed
+                    } else {
+                        0
+                    }
                 })
-                .count()
+                .sum::<usize>()
         };
         let mut best = 0usize;
         let mut best_score = score_of(&pending[0]);
@@ -731,6 +746,40 @@ mod tests {
             plan.batches.iter().flat_map(|b| b.reqs.iter().map(|r| r.id)).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn affinity_scores_warm_residents_at_a_discount() {
+        // Score ladder: hot-resident (2) > warm-resident (1) > cold (0).
+        // A warm hit skips the device read but still owes the dequant
+        // pass, so it must rank between the other two.
+        let mk = |id: u64, retrieved: Vec<ChunkId>| Queued {
+            req: req(id, 0),
+            arrival: 0.0,
+            retrieved,
+            passed_over: 0,
+        };
+        let resident: HashSet<ChunkId> = [100].into_iter().collect();
+        let warm: HashSet<ChunkId> = [200].into_iter().collect();
+        let recent = HashMap::new();
+        let mut report = SchedReport::default();
+        // enqueue coldest first so greedy (not FIFO) order is observable
+        let mut pending: VecDeque<Queued> =
+            vec![mk(0, vec![300]), mk(1, vec![200]), mk(2, vec![100])].into();
+        for want in [2u64, 1, 0] {
+            let sel = affinity_select(
+                &mut pending,
+                1,
+                usize::MAX,
+                &resident,
+                &warm,
+                &recent,
+                &mut report,
+            );
+            assert_eq!(sel.len(), 1);
+            assert_eq!(sel[0].req.id, want, "selection order must follow the score ladder");
+        }
+        assert_eq!(report.forced_includes, 0);
     }
 
     #[test]

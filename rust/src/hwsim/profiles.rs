@@ -187,6 +187,27 @@ impl StorageProfile {
     }
 }
 
+/// Modeled host-side throughput of the q8 → f32 dequantization pass the
+/// warm tier pays on every hit, in **q8 payload bytes per second**.
+///
+/// Dequant is one scale-multiply per element over data that just came
+/// out of DRAM — memory-bound, not compute-bound — so the model is a
+/// single effective-bandwidth constant: roughly half of one server DDR5
+/// channel's ~50 GB/s stream rate, accounting for the read-q8 +
+/// write-f32 traffic (1 byte in, 4 bytes out per element, amortized
+/// against the streamed read that dominates). The point of the model is
+/// the *ordering* it preserves: a warm hit (dequant at tens of GB/s) is
+/// far cheaper than a flash read (14.7 GB/s on the headline SSD plus
+/// per-request latency) and far dearer than a hot hit (free) — exactly
+/// the three-rung hierarchy the warm tier buys.
+pub const Q8_DEQUANT_BYTES_PER_SEC: f64 = 24e9;
+
+/// Modeled seconds to dequantize `q8_bytes` of warm-tier payload back to
+/// f32 (see [`Q8_DEQUANT_BYTES_PER_SEC`]).
+pub fn q8_dequant_secs(q8_bytes: f64) -> f64 {
+    q8_bytes / Q8_DEQUANT_BYTES_PER_SEC
+}
+
 /// One row of the Fig-1 cost/performance trend catalog.
 #[derive(Debug, Clone)]
 pub struct GpuCatalogRow {
@@ -262,6 +283,19 @@ mod tests {
     fn infinite_bw_tier_is_latency_only() {
         let d = StorageProfile::dram();
         assert_eq!(d.read_secs(1 << 30), d.latency_s);
+    }
+
+    #[test]
+    fn dequant_sits_between_hot_and_flash() {
+        // The hierarchy ordering the warm tier relies on: serving a chunk
+        // by dequantizing its q8 copy must beat re-reading it from flash
+        // (q8 is a quarter of the f32 bytes AND moves at DRAM-class
+        // speed), while remaining nonzero (warm hits are not free).
+        let f32_bytes = 8 << 20; // one decoded chunk
+        let q8 = q8_dequant_secs(f32_bytes as f64 / 4.0);
+        let flash = StorageProfile::ssd_9100pro().read_secs(f32_bytes / 2); // f16 file
+        assert!(q8 > 0.0);
+        assert!(q8 < flash, "dequant {q8} must undercut the flash read {flash}");
     }
 
     #[test]

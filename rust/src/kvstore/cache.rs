@@ -19,10 +19,32 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::store::KvChunk;
 use crate::vectordb::ChunkId;
+
+/// Which DRAM tier a stats object / telemetry sample belongs to, so the
+/// hot (f32) and warm (q8, [`super::WarmTier`]) series stay
+/// distinguishable once both land in one bench JSON document. Existing
+/// consumers keep working: the default is `Hot`, which serializes to the
+/// `"hot"` label every pre-warm-tier sample implicitly had.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum TierKind {
+    #[default]
+    Hot,
+    Warm,
+}
+
+impl TierKind {
+    /// The label emitted into telemetry JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            TierKind::Hot => "hot",
+            TierKind::Warm => "warm",
+        }
+    }
+}
 
 /// One point of the serve-time telemetry series: a *cumulative* snapshot
 /// of the counters plus the tier's residency at sample time. Emitters
@@ -31,6 +53,8 @@ use crate::vectordb::ChunkId;
 /// per-batch rates the hit-ratio-vs-offered-load curves need.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheSample {
+    /// Which tier recorded this sample (`"hot"` for pre-warm consumers).
+    pub tier: TierKind,
     pub hits: u64,
     pub misses: u64,
     pub insertions: u64,
@@ -38,6 +62,9 @@ pub struct CacheSample {
     pub prefetch_inserts: u64,
     pub prefetch_hits: u64,
     pub prefetch_rejected: u64,
+    /// Modeled seconds spent dequantizing q8 hits (warm tier only; the
+    /// hot tier serves f32 and leaves this 0).
+    pub dequant_secs: f64,
     pub resident_bytes: u64,
     pub resident_chunks: u64,
 }
@@ -48,9 +75,10 @@ impl CacheSample {
     /// from the struct's fields.
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
+            "{{\"tier\":\"{}\",\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
              \"prefetch_inserts\":{},\"prefetch_hits\":{},\"prefetch_rejected\":{},\
-             \"resident_bytes\":{},\"resident_chunks\":{}}}",
+             \"dequant_secs\":{:.6},\"resident_bytes\":{},\"resident_chunks\":{}}}",
+            self.tier.label(),
             self.hits,
             self.misses,
             self.insertions,
@@ -58,6 +86,7 @@ impl CacheSample {
             self.prefetch_inserts,
             self.prefetch_hits,
             self.prefetch_rejected,
+            self.dequant_secs,
             self.resident_bytes,
             self.resident_chunks
         )
@@ -78,6 +107,8 @@ const SAMPLE_CAP: usize = 16_384;
 /// [`super::StoreStats`]).
 #[derive(Debug, Default)]
 pub struct CacheStats {
+    /// Which DRAM tier these counters belong to (hot f32 / warm q8).
+    pub tier: TierKind,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
     pub insertions: AtomicU64,
@@ -91,11 +122,31 @@ pub struct CacheStats {
     pub prefetch_hits: AtomicU64,
     /// Prefetch admissions dropped to protect demand-resident chunks.
     pub prefetch_rejected: AtomicU64,
+    /// Modeled dequant nanoseconds charged to q8 hits (warm tier; the
+    /// nano granularity keeps the counter an integer atomic — like the
+    /// shard stats' device clocks — while staying nonzero even for the
+    /// tiny chunks unit tests dequantize).
+    pub dequant_ns: AtomicU64,
     /// Sampled cumulative snapshots ([`CacheStats::record_sample`]).
     series: Mutex<Vec<CacheSample>>,
 }
 
 impl CacheStats {
+    /// Stats tagged for a specific tier (the default is [`TierKind::Hot`]).
+    pub fn for_tier(tier: TierKind) -> Self {
+        CacheStats { tier, ..CacheStats::default() }
+    }
+
+    /// Charge modeled dequantization time to this tier's clock.
+    pub fn add_dequant_secs(&self, secs: f64) {
+        self.dequant_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total modeled dequantization seconds charged so far.
+    pub fn dequant_secs(&self) -> f64 {
+        self.dequant_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
     /// Hits / (hits + misses); 0 when the tier was never consulted.
     pub fn hit_ratio(&self) -> f64 {
         let h = self.hits.load(Ordering::Relaxed) as f64;
@@ -111,6 +162,8 @@ impl CacheStats {
     /// caller, which owns the LRU lock discipline).
     pub fn snapshot(&self, resident_bytes: usize, resident_chunks: usize) -> CacheSample {
         CacheSample {
+            tier: self.tier,
+            dequant_secs: self.dequant_secs(),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             insertions: self.insertions.load(Ordering::Relaxed),
@@ -176,11 +229,53 @@ struct Lru {
     clock: u64,
 }
 
+/// Receiver for chunks the hot tier evicts under *budget pressure* —
+/// the hook the q8 warm tier ([`super::WarmTier`]) hangs demotion on.
+///
+/// Demotion is split in two so the expensive half (quantization) stays
+/// **off** the hot tier's LRU lock:
+///
+/// * [`DemoteSink::prepare`] runs *inside* the hot lock's critical
+///   section, at the moment of eviction, and snapshots the sink-side
+///   invalidation generation. A writer invalidating `id` takes the hot
+///   lock first and the warm tier second, so any invalidation that had
+///   not completed by prepare-time is ordered *after* it — and will
+///   either bump the generation (refusing the admission) or sweep the
+///   admitted entry. Implementations must not call back into the hot
+///   tier (lock order is strictly hot → warm).
+/// * [`DemoteSink::demote`] runs *after* the hot lock is released, does
+///   the O(plane) quantize + admit work, and is guarded by the prepared
+///   generation — concurrent probes of the hot tier never serialize
+///   behind a demotion's encode pass.
+///
+/// Only budget evictions demote. Invalidations drop the entry outright
+/// (the bytes are superseded), and a same-id reinsert replaces in place.
+pub trait DemoteSink: Send + Sync {
+    /// Snapshot the sink's invalidation generation for `id`. Called
+    /// under the hot LRU lock at eviction time; must be cheap.
+    fn prepare(&self, id: ChunkId) -> u64;
+
+    /// Offer an evicted chunk to the next tier down, guarded by the
+    /// generation [`DemoteSink::prepare`] captured. `prefetched` is the
+    /// entry's admission class at eviction time (a still-unread prefetch
+    /// keeps that status through the demote→promote cycle).
+    fn demote(
+        &self,
+        id: ChunkId,
+        chunk: &Arc<KvChunk>,
+        file_bytes: usize,
+        prefetched: bool,
+        seen_gen: u64,
+    );
+}
+
 /// The DRAM hot tier: an LRU map `ChunkId → Arc<KvChunk>` holding at
 /// most `budget` resident bytes.
 pub struct HotTier {
     budget: usize,
     lru: Mutex<Lru>,
+    /// Where budget evictions demote to (the warm tier), if anywhere.
+    sink: RwLock<Option<Arc<dyn DemoteSink>>>,
     pub stats: CacheStats,
 }
 
@@ -189,8 +284,16 @@ impl HotTier {
         HotTier {
             budget: budget_bytes,
             lru: Mutex::new(Lru::default()),
+            sink: RwLock::new(None),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Install (or clear) the demotion sink budget evictions feed. The
+    /// store wires this to its warm tier; see [`DemoteSink`] for the
+    /// locking contract.
+    pub fn set_demote_sink(&self, sink: Option<Arc<dyn DemoteSink>>) {
+        *self.sink.write().unwrap() = sink;
     }
 
     pub fn budget(&self) -> usize {
@@ -314,6 +417,7 @@ impl HotTier {
         if cost > self.budget {
             return;
         }
+        let sink = self.sink.read().unwrap().clone();
         let mut guard = self.lru.lock().unwrap();
         let lru = &mut *guard;
         if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
@@ -322,6 +426,7 @@ impl HotTier {
         lru.clock += 1;
         let tick = lru.clock;
         if let Some(old) = lru.map.remove(&id) {
+            // superseded in place: the old bytes are NOT demoted
             lru.order.remove(&old.tick);
             lru.bytes -= old.cost;
         }
@@ -329,12 +434,26 @@ impl HotTier {
         lru.map.insert(id, Entry { chunk, file_bytes, cost, tick, prefetched: false });
         lru.order.insert(tick, id);
         self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+        // Evict under the lock, but defer the sink's quantize/admit work
+        // until after it drops (see the DemoteSink contract): only the
+        // cheap generation snapshot happens in the critical section.
+        let mut demotions: Vec<(ChunkId, Arc<KvChunk>, usize, bool, u64)> = Vec::new();
         while lru.bytes > self.budget {
             let Some((&oldest, &evict)) = lru.order.iter().next() else { break };
             lru.order.remove(&oldest);
             if let Some(e) = lru.map.remove(&evict) {
                 lru.bytes -= e.cost;
                 self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                if let Some(sink) = &sink {
+                    let gen = sink.prepare(evict);
+                    demotions.push((evict, e.chunk, e.file_bytes, e.prefetched, gen));
+                }
+            }
+        }
+        drop(guard);
+        if let Some(sink) = &sink {
+            for (evict, chunk, file_bytes, prefetched, gen) in demotions {
+                sink.demote(evict, &chunk, file_bytes, prefetched, gen);
             }
         }
     }
@@ -361,6 +480,7 @@ impl HotTier {
             self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
             return false;
         }
+        let sink = self.sink.read().unwrap().clone();
         let mut guard = self.lru.lock().unwrap();
         let lru = &mut *guard;
         if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
@@ -372,6 +492,7 @@ impl HotTier {
         }
         // Admit only if the budget can be met by reclaiming prefetched
         // entries: walk victims oldest-first, counting reclaimable bytes.
+        let mut demotions: Vec<(ChunkId, Arc<KvChunk>, usize, bool, u64)> = Vec::new();
         let need = (lru.bytes + cost).saturating_sub(self.budget);
         if need > 0 {
             let mut reclaimable = 0usize;
@@ -396,6 +517,10 @@ impl HotTier {
                 if let Some(e) = lru.map.remove(&vid) {
                     lru.bytes -= e.cost;
                     self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    if let Some(sink) = &sink {
+                        let gen = sink.prepare(vid);
+                        demotions.push((vid, e.chunk, e.file_bytes, e.prefetched, gen));
+                    }
                 }
             }
         }
@@ -406,6 +531,14 @@ impl HotTier {
         lru.order.insert(tick, id);
         self.stats.insertions.fetch_add(1, Ordering::Relaxed);
         self.stats.prefetch_inserts.fetch_add(1, Ordering::Relaxed);
+        // Quantize/admit demoted victims only after the lock drops (see
+        // the DemoteSink contract).
+        drop(guard);
+        if let Some(sink) = &sink {
+            for (vid, chunk, file_bytes, prefetched, gen) in demotions {
+                sink.demote(vid, &chunk, file_bytes, prefetched, gen);
+            }
+        }
         true
     }
 }
@@ -625,6 +758,64 @@ mod tests {
         assert_eq!(series[2].misses, 1);
         // per-window rates fall out of diffing consecutive samples
         assert_eq!(series[2].hits - series[1].hits, 1);
+    }
+
+    #[test]
+    fn sample_carries_tier_label_and_defaults_hot() {
+        let tier = HotTier::new(4 * cost());
+        tier.sample();
+        let s = tier.stats.series()[0];
+        assert_eq!(s.tier, TierKind::Hot);
+        assert_eq!(s.dequant_secs, 0.0);
+        assert!(s.to_json().contains("\"tier\":\"hot\""));
+        // warm-tagged stats serialize distinguishably
+        let warm = CacheStats::for_tier(TierKind::Warm);
+        warm.add_dequant_secs(0.25);
+        let snap = warm.snapshot(0, 0);
+        assert_eq!(snap.tier, TierKind::Warm);
+        assert!((snap.dequant_secs - 0.25).abs() < 1e-6);
+        assert!(snap.to_json().contains("\"tier\":\"warm\""));
+    }
+
+    #[test]
+    fn demote_sink_sees_budget_evictions_only() {
+        struct Recorder(Mutex<Vec<(ChunkId, bool)>>);
+        impl DemoteSink for Recorder {
+            fn prepare(&self, _id: ChunkId) -> u64 {
+                0
+            }
+            fn demote(
+                &self,
+                id: ChunkId,
+                _c: &Arc<KvChunk>,
+                _fb: usize,
+                prefetched: bool,
+                _seen_gen: u64,
+            ) {
+                self.0.lock().unwrap().push((id, prefetched));
+            }
+        }
+        let tier = HotTier::new(2 * cost());
+        let rec = Arc::new(Recorder(Mutex::new(Vec::new())));
+        tier.set_demote_sink(Some(rec.clone() as Arc<dyn DemoteSink>));
+        tier.insert(1, chunk(1), 100);
+        tier.insert(1, chunk(9), 100); // same-id reinsert: superseded, not demoted
+        tier.invalidate(1); // invalidation: stale, not demoted
+        assert!(rec.0.lock().unwrap().is_empty());
+
+        tier.insert(2, chunk(2), 100);
+        tier.insert(3, chunk(3), 100);
+        tier.insert(4, chunk(4), 100); // budget eviction of LRU id 2
+        assert_eq!(rec.0.lock().unwrap().as_slice(), &[(2, false)]);
+
+        // a prefetch evicting a prefetched entry demotes it with its class
+        let tier = HotTier::new(2 * cost());
+        let rec = Arc::new(Recorder(Mutex::new(Vec::new())));
+        tier.set_demote_sink(Some(rec.clone() as Arc<dyn DemoteSink>));
+        tier.insert(10, chunk(10), 100);
+        assert!(tier.insert_prefetch(11, chunk(11), 100, tier.generation(11)));
+        assert!(tier.insert_prefetch(12, chunk(12), 100, tier.generation(12)));
+        assert_eq!(rec.0.lock().unwrap().as_slice(), &[(11, true)]);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Materialized-KV store: the storage half of MatKV, now a two-level
+//! Materialized-KV store: the storage half of MatKV, now a three-level
 //! hierarchy.
 //!
 //! Each document chunk's precomputed KV cache is one file
@@ -16,6 +16,16 @@
 //! distribution at memory speed, with hit/miss/eviction stats surfaced
 //! through [`CacheStats`] and per-batch through
 //! [`crate::coordinator::metrics::PhaseBreakdown`].
+//!
+//! Between the hot tier and flash sits an optional **q8 warm tier**
+//! ([`WarmTier`], [`KvStore::set_warm_tier`]): hot-tier budget evictions
+//! demote into it as symmetric per-plane q8 ([`quant`], ~4x fewer
+//! resident bytes), and warm hits dequantize — at a modeled cost
+//! ([`crate::hwsim::profiles::q8_dequant_secs`]) — and promote back to
+//! hot. At equal total DRAM budget the hot+warm split keeps strictly
+//! more chunks off the device than hot alone; the fidelity price of
+//! serving dequantized planes is measured by `benches/fig_warm_tier.rs`.
+//! The lookup ladder in [`KvStore::load_many`] is hot → warm → flash.
 //!
 //! Real SSD hardware is replaced by a [`DeviceThrottle`] (DESIGN.md
 //! "Substitutions"): reads/writes go through the filesystem (page cache —
@@ -37,13 +47,17 @@
 //! [`StorageProfile`]: crate::hwsim::StorageProfile
 
 pub mod cache;
+pub mod quant;
 pub mod shard;
 pub mod store;
 pub mod throttle;
+pub mod warm;
 
-pub use cache::{series_to_json, CacheSample, CacheStats, HotTier, Probe};
+pub use cache::{series_to_json, CacheSample, CacheStats, DemoteSink, HotTier, Probe, TierKind};
+pub use quant::{dequantize, quantize, QuantChunk};
 pub use shard::{route, Shard, ShardStats};
 pub use store::{
     KvChunk, KvFormat, KvStore, Loaded, PrefetchReport, ShardedKvStore, StoreStats,
 };
 pub use throttle::DeviceThrottle;
+pub use warm::{WarmProbe, WarmTier};

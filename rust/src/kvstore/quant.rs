@@ -1,0 +1,290 @@
+//! Symmetric per-plane q8 codec for the DRAM warm tier.
+//!
+//! The warm tier ([`super::WarmTier`]) holds chunks evicted from the f32
+//! hot tier at ~4x fewer resident bytes: each K/V element is stored as a
+//! signed 8-bit integer with one f32 scale per **layer×head plane**
+//! (`seq_len × head_dim` elements). Per-plane scaling matters because KV
+//! magnitudes vary strongly across layers and heads — a global scale
+//! would let one loud attention head destroy every quiet one's
+//! precision; per-plane, each head's error is bounded by *its own*
+//! dynamic range.
+//!
+//! The codec is symmetric (no zero-point): `scale = max|x| / 127`,
+//! `q = round(x / scale)`, `x̂ = q · scale`. Rounding to nearest gives
+//! the error bound the property tests pin:
+//!
+//! ```text
+//! |x − x̂| ≤ scale / 2 = max|x| / 254      (per plane)
+//! ```
+//!
+//! An all-zero plane encodes with scale 0 and decodes exactly. Encode
+//! and decode are single memory-bound passes; the modeled serve-time
+//! cost of the decode pass lives in
+//! [`crate::hwsim::profiles::q8_dequant_secs`].
+
+use super::store::KvChunk;
+
+/// A [`KvChunk`] with its K/V planes quantized to q8 (one f32 scale per
+/// layer×head plane). Header fields mirror the source chunk so
+/// dequantization can rebuild it exactly shaped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantChunk {
+    pub config_id: u32,
+    pub n_layers: u32,
+    pub n_kv_heads: u32,
+    pub seq_len: u32,
+    pub head_dim: u32,
+    /// One scale per layer×head plane of K (`n_layers * n_kv_heads`).
+    pub k_scales: Vec<f32>,
+    /// One scale per layer×head plane of V.
+    pub v_scales: Vec<f32>,
+    /// Quantized K plane, same element order as `KvChunk::k`.
+    pub k_q: Vec<i8>,
+    /// Quantized V plane, same element order as `KvChunk::v`.
+    pub v_q: Vec<i8>,
+}
+
+impl QuantChunk {
+    /// Elements in one layer×head plane.
+    pub fn plane_len(&self) -> usize {
+        self.seq_len as usize * self.head_dim as usize
+    }
+
+    /// Number of layer×head planes per tensor (= scales per tensor).
+    pub fn n_planes(&self) -> usize {
+        self.n_layers as usize * self.n_kv_heads as usize
+    }
+
+    /// Total K+V elements.
+    pub fn total_elems(&self) -> usize {
+        self.k_q.len() + self.v_q.len()
+    }
+
+    /// Bytes the q8 payload occupies (what a dequant pass must touch):
+    /// quantized elements plus the per-plane scales.
+    pub fn q8_bytes(&self) -> usize {
+        self.total_elems() + 4 * (self.k_scales.len() + self.v_scales.len())
+    }
+
+    /// Resident bytes when held by the DRAM warm tier — the ~4x
+    /// advantage over [`KvChunk::dram_bytes`] that lets the warm tier
+    /// keep more chunks off the simulated flash at equal DRAM budget.
+    pub fn dram_bytes(&self) -> usize {
+        std::mem::size_of::<QuantChunk>() + self.q8_bytes()
+    }
+
+    /// Resident bytes the *dequantized* f32 chunk would occupy
+    /// ([`KvChunk::dram_bytes`] of the reconstruction) — what a
+    /// promotion into the hot tier would charge. The warm tier uses
+    /// this to refuse promote-out of chunks the hot tier could never
+    /// admit, which would otherwise evict themselves on every hit.
+    pub fn f32_dram_bytes(&self) -> usize {
+        std::mem::size_of::<KvChunk>() + 4 * self.total_elems()
+    }
+}
+
+/// Worst-case absolute reconstruction error of a plane encoded with
+/// `scale` (round-to-nearest: half a quantization step).
+pub fn max_abs_error(scale: f32) -> f32 {
+    scale * 0.5
+}
+
+fn quantize_planes(src: &[f32], plane_len: usize) -> (Vec<f32>, Vec<i8>) {
+    let mut scales = Vec::with_capacity(if plane_len > 0 { src.len() / plane_len } else { 0 });
+    let mut q = Vec::with_capacity(src.len());
+    if plane_len == 0 {
+        return (scales, q);
+    }
+    for plane in src.chunks(plane_len) {
+        let max_abs = plane.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+        scales.push(scale);
+        if scale == 0.0 {
+            q.extend(std::iter::repeat(0i8).take(plane.len()));
+        } else {
+            q.extend(plane.iter().map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8));
+        }
+    }
+    (scales, q)
+}
+
+fn dequantize_planes(scales: &[f32], q: &[i8], plane_len: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(q.len());
+    if plane_len == 0 {
+        return out;
+    }
+    for (plane, &scale) in q.chunks(plane_len).zip(scales) {
+        out.extend(plane.iter().map(|&v| v as f32 * scale));
+    }
+    out
+}
+
+/// Quantize a chunk's K/V planes to q8 (one scale per layer×head plane).
+pub fn quantize(chunk: &KvChunk) -> QuantChunk {
+    let plane_len = chunk.seq_len as usize * chunk.head_dim as usize;
+    let (k_scales, k_q) = quantize_planes(&chunk.k, plane_len);
+    let (v_scales, v_q) = quantize_planes(&chunk.v, plane_len);
+    QuantChunk {
+        config_id: chunk.config_id,
+        n_layers: chunk.n_layers,
+        n_kv_heads: chunk.n_kv_heads,
+        seq_len: chunk.seq_len,
+        head_dim: chunk.head_dim,
+        k_scales,
+        v_scales,
+        k_q,
+        v_q,
+    }
+}
+
+/// Reconstruct the f32 chunk a warm hit serves (lossy: see the module
+/// error bound).
+pub fn dequantize(q: &QuantChunk) -> KvChunk {
+    let plane_len = q.plane_len();
+    KvChunk {
+        config_id: q.config_id,
+        n_layers: q.n_layers,
+        n_kv_heads: q.n_kv_heads,
+        seq_len: q.seq_len,
+        head_dim: q.head_dim,
+        k: dequantize_planes(&q.k_scales, &q.k_q, plane_len),
+        v: dequantize_planes(&q.v_scales, &q.v_q, plane_len),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk_with<F: FnMut(usize) -> f32, G: FnMut(usize) -> f32>(
+        n_layers: u32,
+        n_kv_heads: u32,
+        seq: u32,
+        head_dim: u32,
+        k_of: F,
+        v_of: G,
+    ) -> KvChunk {
+        let plane = (n_layers * n_kv_heads * seq * head_dim) as usize;
+        KvChunk {
+            config_id: 7,
+            n_layers,
+            n_kv_heads,
+            seq_len: seq,
+            head_dim,
+            k: (0..plane).map(k_of).collect(),
+            v: (0..plane).map(v_of).collect(),
+        }
+    }
+
+    /// Tiny deterministic pseudo-random stream (no external crates).
+    fn lcg(seed: u64) -> impl FnMut() -> f32 {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // uniform in [-1, 1), then stretched by a per-draw magnitude
+            let u = ((s >> 40) as f64 / (1u64 << 24) as f64) * 2.0 - 1.0;
+            let mag = 1.0 + ((s >> 16) & 0xff) as f64 / 16.0;
+            (u * mag) as f32
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_per_plane() {
+        // Property: for random payloads, every reconstructed element is
+        // within max|plane| / 254 of the original — the module's bound.
+        for seed in 1..=8u64 {
+            let mut rnd = lcg(seed);
+            let c = chunk_with(3, 2, 16, 8, |_| rnd(), |_| 0.0);
+            let mut rnd2 = lcg(seed ^ 0xdead);
+            let c = KvChunk { v: c.k.iter().map(|_| rnd2()).collect(), ..c };
+            let q = quantize(&c);
+            let back = dequantize(&q);
+            assert_eq!(back.plane_elems(), c.plane_elems());
+            let plane_len = q.plane_len();
+            for (src, dst, scales) in
+                [(&c.k, &back.k, &q.k_scales), (&c.v, &back.v, &q.v_scales)]
+            {
+                for (p, (orig, rec)) in
+                    src.chunks(plane_len).zip(dst.chunks(plane_len)).enumerate()
+                {
+                    let bound = max_abs_error(scales[p]) + 1e-7;
+                    for (a, b) in orig.iter().zip(rec) {
+                        assert!(
+                            (a - b).abs() <= bound,
+                            "seed {seed} plane {p}: {a} vs {b} (bound {bound})"
+                        );
+                    }
+                    // and the bound itself is max|plane|/254
+                    let max_abs = orig.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    assert!(max_abs_error(scales[p]) <= max_abs / 254.0 + 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_plane_scales_isolate_loud_heads() {
+        // One loud plane must not destroy a quiet plane's precision: the
+        // quiet plane's error stays bounded by ITS max, not the loud one's.
+        let plane_len = 16 * 8;
+        let c = chunk_with(
+            2,
+            1,
+            16,
+            8,
+            |i| if i < plane_len { 1000.0 } else { 0.001 * ((i % 7) as f32 - 3.0) },
+            |_| 1.0,
+        );
+        let q = quantize(&c);
+        let back = dequantize(&q);
+        for (a, b) in c.k[plane_len..].iter().zip(&back.k[plane_len..]) {
+            assert!((a - b).abs() <= 0.003 / 254.0 + 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_planes_and_exact_grid_values_roundtrip_exactly() {
+        // All-zero planes encode with scale 0 and decode exactly; values
+        // already on the q8 grid (integers with a ±127 in every plane, so
+        // scale = 1) survive exactly too.
+        let c = chunk_with(
+            1,
+            2,
+            4,
+            4,
+            |_| 0.0,
+            |i| if i % 16 == 0 { 127.0 } else { (i % 255) as f32 - 127.0 },
+        );
+        let q = quantize(&c);
+        assert!(q.k_scales.iter().all(|&s| s == 0.0));
+        let back = dequantize(&q);
+        assert_eq!(back.k, c.k);
+        assert_eq!(back.v, c.v, "on-grid integers must be exact");
+        // negatives preserved
+        assert!(back.v[1] < 0.0);
+    }
+
+    #[test]
+    fn q8_is_about_a_quarter_of_f32_residency() {
+        let c = chunk_with(4, 4, 64, 16, |i| (i as f32).sin(), |i| (i as f32).cos());
+        let q = quantize(&c);
+        let ratio = q.dram_bytes() as f64 / c.dram_bytes() as f64;
+        assert!(ratio < 0.30, "q8/f32 residency ratio {ratio}");
+        assert_eq!(q.total_elems(), 2 * c.plane_elems());
+        assert_eq!(q.n_planes(), 16);
+        assert_eq!(q.k_scales.len(), 16);
+    }
+
+    #[test]
+    fn shapes_survive_roundtrip() {
+        let c = chunk_with(2, 3, 8, 4, |i| i as f32, |i| -(i as f32));
+        let q = quantize(&c);
+        let back = dequantize(&q);
+        assert_eq!(
+            (back.config_id, back.n_layers, back.n_kv_heads, back.seq_len, back.head_dim),
+            (c.config_id, c.n_layers, c.n_kv_heads, c.seq_len, c.head_dim)
+        );
+        assert_eq!(back.k.len(), c.k.len());
+        assert_eq!(back.v.len(), c.v.len());
+    }
+}

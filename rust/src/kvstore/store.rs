@@ -19,7 +19,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::cache::{HotTier, Probe};
+use super::quant;
 use super::shard::{route, Shard};
+use super::warm::{WarmProbe, WarmTier};
+use crate::hwsim::profiles::q8_dequant_secs;
 use crate::hwsim::StorageProfile;
 use crate::manifest::ModelConfig;
 use crate::util::aio::{IoPool, Pending};
@@ -143,6 +146,9 @@ pub struct KvStore {
     pool: IoPool,
     format: KvFormat,
     hot: Option<Arc<HotTier>>,
+    /// q8 warm tier between the hot tier and flash (hot-tier budget
+    /// evictions demote here; warm hits dequantize and promote back).
+    warm: Option<Arc<WarmTier>>,
     pub stats: Arc<StoreStats>,
 }
 
@@ -159,13 +165,21 @@ const SHARD_MARKER: &str = "SHARDS";
 #[derive(Debug)]
 pub struct Loaded {
     pub chunk: Arc<KvChunk>,
-    /// Simulated storage-device seconds (0 for hot-tier hits).
+    /// Simulated storage-device seconds (0 for DRAM-tier hits).
     pub device_secs: f64,
     /// Size of the chunk's on-disk file (for a hit: the read it avoided).
     pub file_bytes: usize,
-    /// Served without a device read: a DRAM hot-tier hit, or a reuse of
-    /// an identical id earlier in the same `load_many` call.
+    /// Served without a device read: a DRAM tier hit (hot or warm), or a
+    /// reuse of an identical id earlier in the same `load_many` call.
     pub from_cache: bool,
+    /// Served by the q8 warm tier: no device read, but the planes were
+    /// dequantized (lossy within the codec's error bound) and the load
+    /// was charged `dequant_secs` of modeled time.
+    pub from_warm: bool,
+    /// Modeled q8→f32 dequantization seconds (warm hits only; 0
+    /// elsewhere, including for in-call duplicates of a warm hit — the
+    /// dequantized chunk is shared, not re-decoded).
+    pub dequant_secs: f64,
     /// Index of the shard this chunk routes to (for a hit: the device
     /// read the hit avoided).
     pub shard: usize,
@@ -263,6 +277,7 @@ impl KvStore {
             pool: IoPool::new((2 * n_shards).clamp(4, 16)),
             format: KvFormat::V2,
             hot: None,
+            warm: None,
             stats: Arc::new(StoreStats::default()),
         })
     }
@@ -347,19 +362,65 @@ impl KvStore {
     pub fn set_hot_tier(&mut self, budget_bytes: usize) {
         self.hot =
             if budget_bytes > 0 { Some(Arc::new(HotTier::new(budget_bytes))) } else { None };
+        self.wire_demote();
+    }
+
+    /// Enable a q8 **warm tier** of `budget_bytes` resident bytes behind
+    /// the hot tier (0 disables; replacing drops contents). With a hot
+    /// tier present, budget evictions *demote* into the warm tier
+    /// instead of dropping, and warm hits dequantize + promote back
+    /// (exclusive placement). Without one, the warm tier is the
+    /// first-level cache: misses admit quantized copies directly.
+    pub fn set_warm_tier(&mut self, budget_bytes: usize) {
+        self.warm =
+            if budget_bytes > 0 { Some(Arc::new(WarmTier::new(budget_bytes))) } else { None };
+        self.wire_demote();
+    }
+
+    /// Point the hot tier's budget evictions at the warm tier (or back
+    /// at the void). Called whenever either tier is replaced, so the
+    /// demote path survives any `set_hot_tier`/`set_warm_tier` order.
+    fn wire_demote(&self) {
+        if let Some(hot) = &self.hot {
+            hot.set_demote_sink(
+                self.warm.as_ref().map(|w| w.clone() as Arc<dyn super::cache::DemoteSink>),
+            );
+        }
     }
 
     pub fn hot_tier(&self) -> Option<&HotTier> {
         self.hot.as_deref()
     }
 
-    /// Snapshot of the hot tier's resident chunk ids (empty without a
-    /// tier). The serving scheduler's tier-affinity policy scores queued
-    /// requests by overlap of their retrieval top-K with this set —
-    /// advisory only, residency can change as soon as the snapshot is
-    /// taken (see [`HotTier::resident_ids`]).
+    pub fn warm_tier(&self) -> Option<&WarmTier> {
+        self.warm.as_deref()
+    }
+
+    /// Snapshot of every DRAM-resident chunk id — the union of the hot
+    /// and warm tiers (either may be absent). The serving scheduler's
+    /// tier-affinity policy scores queued requests by overlap of their
+    /// retrieval top-K with this set — advisory only, residency can
+    /// change as soon as the snapshot is taken (see
+    /// [`HotTier::resident_ids`]). Policies that price the dequant cost
+    /// use the per-tier snapshots ([`KvStore::hot_resident_ids`] /
+    /// [`KvStore::warm_resident_ids`]) instead.
     pub fn resident_ids(&self) -> Vec<ChunkId> {
+        let mut ids = self.hot_resident_ids();
+        ids.extend(self.warm_resident_ids());
+        ids.sort_unstable();
+        ids.dedup(); // a promote in flight can briefly double-list an id
+        ids
+    }
+
+    /// Resident ids of the hot (f32) tier only.
+    pub fn hot_resident_ids(&self) -> Vec<ChunkId> {
         self.hot.as_deref().map(HotTier::resident_ids).unwrap_or_default()
+    }
+
+    /// Resident ids of the q8 warm tier only — served without a device
+    /// read but at a dequant cost, which tier-affinity scoring discounts.
+    pub fn warm_resident_ids(&self) -> Vec<ChunkId> {
+        self.warm.as_deref().map(WarmTier::resident_ids).unwrap_or_default()
     }
 
     /// On-disk size of `chunk` in the store's current write format.
@@ -461,22 +522,31 @@ impl KvStore {
         })
     }
 
+    /// Invalidate `id` in every DRAM tier, **hot first**: the hot-side
+    /// invalidation serializes behind any in-flight demotion of this id
+    /// (both hold the hot LRU lock), so the warm-side sweep that follows
+    /// always sees — and removes — whatever that demotion parked.
+    fn invalidate_tiers(&self, id: ChunkId) {
+        if let Some(hot) = &self.hot {
+            hot.invalidate(id);
+        }
+        if let Some(warm) = &self.warm {
+            warm.invalidate(id);
+        }
+    }
+
     /// Synchronous materialization (throttled to the device profile).
     ///
-    /// The hot tier is invalidated on *both* sides of the write: the
-    /// first pass drops the resident copy, the second (generation bump)
+    /// The DRAM tiers are invalidated on *both* sides of the write: the
+    /// first pass drops resident copies, the second (generation bump)
     /// rejects any concurrent load that read the superseded file while
-    /// the write was in flight — the tier never serves a stale KV.
+    /// the write was in flight — no tier ever serves a stale KV.
     pub fn store_sync(&self, id: ChunkId, chunk: &KvChunk) -> Result<f64> {
         chunk.validate()?;
-        if let Some(hot) = &self.hot {
-            hot.invalidate(id);
-        }
+        self.invalidate_tiers(id);
         let buf = Self::encode(chunk, self.format);
         let secs = self.shard_of(id).write(id, &buf)?;
-        if let Some(hot) = &self.hot {
-            hot.invalidate(id);
-        }
+        self.invalidate_tiers(id);
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
         Ok(secs)
@@ -492,20 +562,22 @@ impl KvStore {
         if let Err(e) = chunk.validate() {
             return self.pool.submit(move || Err(e));
         }
-        if let Some(hot) = &self.hot {
-            hot.invalidate(id);
-        }
+        self.invalidate_tiers(id);
         let shard = self.shard_of(id).clone();
         let stats = self.stats.clone();
         let hot = self.hot.clone();
+        let warm = self.warm.clone();
         let buf = Self::encode(&chunk, self.format);
         self.pool.submit(move || {
             let secs = shard.write(id, &buf)?;
             // Second invalidation once the write landed: a load that
             // raced the write and read the old bytes can no longer keep
-            // or re-admit them (see store_sync).
+            // or re-admit them, in either tier (see store_sync).
             if let Some(hot) = &hot {
                 hot.invalidate(id);
+            }
+            if let Some(warm) = &warm {
+                warm.invalidate(id);
             }
             // Accounting happens only once the write actually landed.
             stats.writes.fetch_add(1, Ordering::Relaxed);
@@ -524,19 +596,55 @@ impl KvStore {
         Ok(total)
     }
 
-    /// Load one chunk: hot tier first (free), then the throttled device.
+    /// Load one chunk: hot tier first (free), then the q8 warm tier
+    /// (dequant cost), then the throttled device.
     pub fn load(&self, id: ChunkId) -> Result<Loaded> {
         let mut loaded = self.load_many(std::slice::from_ref(&id))?;
         Ok(loaded.pop().expect("load_many returns one Loaded per id"))
     }
 
-    /// Load many chunks concurrently. Hot-tier hits are answered inline;
-    /// misses fan out across the shard set through the I/O pool — reads
-    /// against the *same* shard still serialize on that device's
-    /// throttle (like real parallel reads of one SSD), but misses routed
-    /// to different shards overlap in simulated device time, which is
-    /// where the JBOD's aggregate bandwidth comes from. Output order
-    /// matches `ids`.
+    /// Serve a warm-tier hit: dequantize, charge the modeled dequant
+    /// cost, and — when a hot tier exists — promote the f32 chunk back
+    /// into it (the q8 copy was already taken out of the warm tier, so
+    /// placement stays exclusive). `hot_gen` is the generation the hot
+    /// probe reported; a write/delete that raced the promote bounces off
+    /// the hot tier's guard exactly like a raced device read would.
+    fn serve_warm_hit(
+        &self,
+        id: ChunkId,
+        q: &quant::QuantChunk,
+        file_bytes: usize,
+        hot_gen: u64,
+        shard: usize,
+    ) -> Loaded {
+        let chunk = Arc::new(quant::dequantize(q));
+        let dequant_secs = q8_dequant_secs(q.q8_bytes() as f64);
+        if let Some(warm) = &self.warm {
+            warm.stats.add_dequant_secs(dequant_secs);
+        }
+        if let Some(hot) = &self.hot {
+            hot.insert_at(id, chunk.clone(), file_bytes, hot_gen);
+        }
+        Loaded {
+            chunk,
+            device_secs: 0.0,
+            file_bytes,
+            from_cache: true,
+            from_warm: true,
+            dequant_secs,
+            shard,
+        }
+    }
+
+    /// Load many chunks concurrently. The lookup ladder per id is
+    /// **hot → warm → flash**: hot-tier hits are answered inline for
+    /// free; warm-tier hits dequantize (modeled cost, no device read)
+    /// and promote back to hot; remaining misses fan out across the
+    /// shard set through the I/O pool — reads against the *same* shard
+    /// still serialize on that device's throttle (like real parallel
+    /// reads of one SSD), but misses routed to different shards overlap
+    /// in simulated device time, which is where the JBOD's aggregate
+    /// bandwidth comes from. Output order matches `ids`.
     ///
     /// Repeated ids within one call collapse to a single device read:
     /// two batch elements splicing the same chunk share one file, so the
@@ -547,10 +655,11 @@ impl KvStore {
     pub fn load_many(&self, ids: &[ChunkId]) -> Result<Vec<Loaded>> {
         enum Slot {
             Hit(Loaded),
-            /// A device read plus the id's invalidation generation,
-            /// captured before the read could start: if a write/delete
-            /// races this load, the stale bytes are not cached.
-            Miss(u64, usize, Pending<Result<(Vec<u8>, f64)>>),
+            /// A device read plus the id's invalidation generations in
+            /// both DRAM tiers, captured before the read could start: if
+            /// a write/delete races this load, the stale bytes are not
+            /// cached in either tier.
+            Miss { hot_gen: u64, warm_gen: u64, shard: usize, read: Pending<Result<(Vec<u8>, f64)>> },
             /// Same id appeared earlier in this call (at the given output
             /// index): reuse that slot's outcome instead of re-reading.
             Dup(usize),
@@ -565,7 +674,7 @@ impl KvStore {
                 }
                 first_at.insert(id, i);
                 let shard_idx = self.shard_index_of(id);
-                let mut gen = 0;
+                let mut hot_gen = 0;
                 if let Some(hot) = &self.hot {
                     match hot.probe(id) {
                         Probe::Hit(chunk, file_bytes) => {
@@ -574,39 +683,80 @@ impl KvStore {
                                 device_secs: 0.0,
                                 file_bytes,
                                 from_cache: true,
+                                from_warm: false,
+                                dequant_secs: 0.0,
                                 shard: shard_idx,
                             });
                         }
-                        Probe::Miss(g) => gen = g,
+                        Probe::Miss(g) => hot_gen = g,
+                    }
+                }
+                let mut warm_gen = 0;
+                if let Some(warm) = &self.warm {
+                    // With a hot tier that can admit the chunk, a warm
+                    // hit promotes (take); otherwise — warm-only store,
+                    // or a chunk oversize for the hot tier — it stays
+                    // put and is touched MRU.
+                    match warm.probe(id, self.hot.as_ref().map(|h| h.budget())) {
+                        WarmProbe::Hit { q, file_bytes, .. } => {
+                            return Slot::Hit(self.serve_warm_hit(
+                                id, &q, file_bytes, hot_gen, shard_idx,
+                            ));
+                        }
+                        WarmProbe::Miss(g) => warm_gen = g,
                     }
                 }
                 let shard = self.shards[shard_idx].clone();
-                Slot::Miss(gen, shard_idx, self.pool.submit(move || shard.read(id)))
+                Slot::Miss {
+                    hot_gen,
+                    warm_gen,
+                    shard: shard_idx,
+                    read: self.pool.submit(move || shard.read(id)),
+                }
             })
             .collect();
         let mut out: Vec<Loaded> = Vec::with_capacity(ids.len());
         for (slot, &id) in slots.into_iter().zip(ids) {
             match slot {
                 Slot::Hit(l) => out.push(l),
-                Slot::Miss(gen, shard_idx, h) => {
-                    let (data, device_secs) = h.wait()?;
+                Slot::Miss { hot_gen, warm_gen, shard: shard_idx, read } => {
+                    let (data, device_secs) = read.wait()?;
                     self.stats.reads.fetch_add(1, Ordering::Relaxed);
                     self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
                     let chunk = Arc::new(Self::decode(&data)?);
-                    if let Some(hot) = &self.hot {
-                        hot.insert_at(id, chunk.clone(), data.len(), gen);
+                    match &self.hot {
+                        // Fill the hot tier; overflow demotes into the
+                        // warm tier through the eviction sink.
+                        Some(hot) if chunk.dram_bytes() <= hot.budget() => {
+                            hot.insert_at(id, chunk.clone(), data.len(), hot_gen);
+                        }
+                        // No hot tier — or a chunk the hot tier could
+                        // never admit (it would reject it for size
+                        // before the demote sink fires): park the q8
+                        // copy in the warm tier directly, gen-guarded
+                        // like any admission whose bytes were read
+                        // outside the tier's lock.
+                        _ => {
+                            if let Some(warm) = &self.warm {
+                                let q = Arc::new(quant::quantize(&chunk));
+                                warm.admit(id, q, data.len(), false, warm_gen);
+                            }
+                        }
                     }
                     out.push(Loaded {
                         chunk,
                         device_secs,
                         file_bytes: data.len(),
                         from_cache: false,
+                        from_warm: false,
+                        dequant_secs: 0.0,
                         shard: shard_idx,
                     });
                 }
                 Slot::Dup(j) => {
                     // `j` indexes a strictly earlier slot, so `out[j]` is
-                    // already resolved; no device charge for the reuse.
+                    // already resolved; no device charge for the reuse —
+                    // and no second dequant either, the Arc is shared.
                     let (chunk, file_bytes, shard) = {
                         let first = &out[j];
                         (first.chunk.clone(), first.file_bytes, first.shard)
@@ -616,6 +766,8 @@ impl KvStore {
                         device_secs: 0.0,
                         file_bytes,
                         from_cache: true,
+                        from_warm: false,
+                        dequant_secs: 0.0,
                         shard,
                     });
                 }
@@ -624,35 +776,46 @@ impl KvStore {
         Ok(out)
     }
 
-    /// Warm the DRAM hot tier for `ids` ahead of demand time (the
+    /// Warm the DRAM hierarchy for `ids` ahead of demand time (the
     /// overlap pipeline calls this with batch *n+1*'s retrieval top-K
     /// while batch *n* decodes). Reads fan out across shards like
-    /// `load_many` misses, but admission goes through the *protected*
-    /// prefetch path ([`HotTier::insert_prefetch`]): a prefetch can
-    /// never evict a chunk a demand load admitted, and a chunk that is
-    /// missing or superseded mid-flight degrades to a later demand miss
-    /// instead of an error. No hot tier → no-op.
+    /// `load_many` misses; a chunk already resident in *either* DRAM
+    /// tier is left where it is. With a hot tier, admission goes through
+    /// the *protected* prefetch path ([`HotTier::insert_prefetch`]): a
+    /// prefetch can never evict a chunk a demand load admitted, and a
+    /// chunk that is missing or superseded mid-flight degrades to a
+    /// later demand miss instead of an error. In a warm-only store — or
+    /// for a chunk too large for the hot tier to ever admit — the read
+    /// is admitted quantized (gen-guarded; plain LRU — the warm tier
+    /// has no protection classes to defend). No DRAM tier → no-op.
     pub fn prefetch_many(&self, ids: &[ChunkId]) -> PrefetchReport {
-        let Some(hot) = self.hot.clone() else {
+        let hot = self.hot.clone();
+        let warm = self.warm.clone();
+        if hot.is_none() && warm.is_none() {
             return PrefetchReport::default();
-        };
+        }
         let mut report = PrefetchReport::default();
         let mut seen = std::collections::HashSet::new();
-        let mut pending: Vec<(ChunkId, u64, Pending<Result<(Vec<u8>, f64)>>)> = Vec::new();
+        let mut pending: Vec<(ChunkId, u64, u64, Pending<Result<(Vec<u8>, f64)>>)> = Vec::new();
         for &id in ids {
             if !seen.insert(id) {
                 continue;
             }
             report.requested += 1;
-            if hot.contains(id) {
+            if hot.as_ref().is_some_and(|h| h.contains(id))
+                || warm.as_ref().is_some_and(|w| w.contains(id))
+            {
                 report.already_resident += 1;
                 continue;
             }
-            let gen = hot.generation(id);
+            // Capture both tiers' generations before the read: which
+            // tier admits is only known once the chunk's size is.
+            let hot_gen = hot.as_ref().map(|h| h.generation(id)).unwrap_or(0);
+            let warm_gen = warm.as_ref().map(|w| w.generation(id)).unwrap_or(0);
             let shard = self.shard_of(id).clone();
-            pending.push((id, gen, self.pool.submit(move || shard.read(id))));
+            pending.push((id, hot_gen, warm_gen, self.pool.submit(move || shard.read(id))));
         }
-        for (id, gen, h) in pending {
+        for (id, hot_gen, warm_gen, h) in pending {
             let (data, device_secs) = match h.wait() {
                 Ok(r) => r,
                 Err(_) => {
@@ -672,7 +835,21 @@ impl KvStore {
                     continue;
                 }
             };
-            if hot.insert_prefetch(id, chunk, data.len(), gen) {
+            let admitted = match (&hot, &warm) {
+                // A chunk the hot tier could never admit goes straight
+                // to the warm tier (quantized) instead of being dropped.
+                (Some(h), Some(w)) if chunk.dram_bytes() > h.budget() => {
+                    let q = Arc::new(quant::quantize(&chunk));
+                    w.admit(id, q, data.len(), true, warm_gen)
+                }
+                (Some(hot), _) => hot.insert_prefetch(id, chunk, data.len(), hot_gen),
+                (None, Some(warm)) => {
+                    let q = Arc::new(quant::quantize(&chunk));
+                    warm.admit(id, q, data.len(), true, warm_gen)
+                }
+                (None, None) => unreachable!("early return above"),
+            };
+            if admitted {
                 report.warmed += 1;
             } else {
                 report.rejected += 1;
@@ -682,17 +859,13 @@ impl KvStore {
     }
 
     /// Delete a chunk's materialized KV (vector-DB delete path). Like
-    /// the write paths, the hot tier is invalidated around the unlink so
-    /// a racing load can't resurrect the deleted chunk in DRAM.
+    /// the write paths, the DRAM tiers are invalidated around the unlink
+    /// so a racing load can't resurrect the deleted chunk in DRAM.
     pub fn delete(&self, id: ChunkId) -> Result<bool> {
-        if let Some(hot) = &self.hot {
-            hot.invalidate(id);
-        }
+        self.invalidate_tiers(id);
         let deleted = self.shard_of(id).delete(id)?;
         if deleted {
-            if let Some(hot) = &self.hot {
-                hot.invalidate(id);
-            }
+            self.invalidate_tiers(id);
             self.stats.deletes.fetch_add(1, Ordering::Relaxed);
         }
         Ok(deleted)
@@ -1064,6 +1237,249 @@ mod tests {
         // delete: no stale hit either
         s.delete(1).unwrap();
         assert!(s.load(1).is_err());
+    }
+
+    // --- warm tier ------------------------------------------------------
+
+    /// A chunk with constant planes. Use multiples of 127 for `val`:
+    /// the q8 scale is then an exact small integer (max/127), the code
+    /// is exactly ±127, and the round trip is bit-exact — so identity
+    /// asserts stay valid through the warm tier. (An arbitrary constant
+    /// is NOT safe: fl(127 · fl(x/127)) can land one ulp off x.)
+    fn flat_chunk(val: f32, seq: u32) -> KvChunk {
+        let plane = (2 * 2 * seq * 4) as usize;
+        KvChunk {
+            config_id: 0xabcd,
+            n_layers: 2,
+            n_kv_heads: 2,
+            seq_len: seq,
+            head_dim: 4,
+            k: vec![val; plane],
+            v: vec![-val; plane],
+        }
+    }
+
+    fn warm_store(hot_budget: usize, warm_budget: usize) -> (crate::util::tempdir::TempDir, KvStore) {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-warm").unwrap();
+        let mut s = KvStore::open(dir.path(), StorageProfile::ssd_9100pro()).unwrap();
+        s.disable_throttle();
+        s.set_hot_tier(hot_budget);
+        s.set_warm_tier(warm_budget);
+        (dir, s)
+    }
+
+    fn f32_cost() -> usize {
+        flat_chunk(0.0, 8).dram_bytes()
+    }
+
+    #[test]
+    fn hot_eviction_demotes_to_warm_and_promotes_back() {
+        let (_d, s) = warm_store(2 * f32_cost(), 64 << 20);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(127.0 * i as f32, 8)).unwrap();
+        }
+        s.load(1).unwrap();
+        s.load(2).unwrap();
+        s.load(3).unwrap(); // hot full → LRU id 1 demotes into warm
+        let warm = s.warm_tier().unwrap();
+        assert!(warm.contains(1), "eviction must demote, not drop");
+        assert!(s.hot_tier().unwrap().contains(2) && s.hot_tier().unwrap().contains(3));
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 3);
+
+        // warm hit: dequant + promote back to hot, exclusive placement
+        let l = s.load(1).unwrap();
+        assert!(l.from_cache && l.from_warm);
+        assert_eq!(l.device_secs, 0.0);
+        assert!(l.dequant_secs > 0.0, "warm hits charge modeled dequant time");
+        assert_eq!(*l.chunk, flat_chunk(127.0, 8), "on-grid planes survive q8 exactly");
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 3, "no device read for a warm hit");
+        assert!(!warm.contains(1), "promote must remove the q8 copy");
+        assert!(s.hot_tier().unwrap().contains(1));
+        assert!(warm.contains(2), "promote overflowed id 2 into the warm tier");
+        assert_eq!(warm.stats.hits.load(Ordering::Relaxed), 1);
+        assert!(warm.stats.dequant_secs() > 0.0);
+        // a hot hit afterwards costs nothing further
+        let l = s.load(1).unwrap();
+        assert!(l.from_cache && !l.from_warm);
+        assert_eq!(l.dequant_secs, 0.0);
+    }
+
+    #[test]
+    fn warm_only_store_serves_q8_hits_in_place() {
+        let (_d, s) = warm_store(0, 64 << 20);
+        assert!(s.hot_tier().is_none());
+        s.store_sync(1, &flat_chunk(508.0, 8)).unwrap();
+        let cold = s.load(1).unwrap();
+        assert!(!cold.from_cache && !cold.from_warm);
+        let warm_hit = s.load(1).unwrap();
+        assert!(warm_hit.from_cache && warm_hit.from_warm);
+        assert!(warm_hit.dequant_secs > 0.0);
+        assert_eq!(*warm_hit.chunk, flat_chunk(508.0, 8));
+        // no hot tier to promote into: the q8 copy stays put
+        assert!(s.warm_tier().unwrap().contains(1));
+        assert!(s.load(1).unwrap().from_warm);
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 1, "one cold read total");
+    }
+
+    #[test]
+    fn invalidate_between_demote_and_promote_serves_fresh_bytes() {
+        // The generation-guard race the warm tier must survive (mirrors
+        // the hot tier's insert_at race tests): a chunk demoted into the
+        // warm tier is re-materialized before it is promoted back — the
+        // store must serve the NEW payload from flash, never the stale
+        // q8 copy.
+        let (_d, s) = warm_store(2 * f32_cost(), 64 << 20);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+            s.load(i).unwrap();
+        }
+        assert!(s.warm_tier().unwrap().contains(1), "id 1 demoted");
+        // re-materialize id 1 between its demotion and any promotion
+        s.store_sync(1, &flat_chunk(50.0, 8)).unwrap();
+        assert!(!s.warm_tier().unwrap().contains(1), "write must sweep the warm copy");
+        let l = s.load(1).unwrap();
+        assert!(!l.from_cache && !l.from_warm, "stale warm copy served after rewrite");
+        assert_eq!(l.chunk.k[0], 50.0);
+        // deletes sweep the warm tier too
+        s.load(2).unwrap(); // ensure 2 is somewhere in DRAM
+        s.delete(2).unwrap();
+        assert!(!s.warm_tier().unwrap().contains(2));
+        assert!(s.load(2).is_err());
+    }
+
+    #[test]
+    fn demote_promote_cycle_preserves_prefetch_semantics() {
+        // One-chunk hot tier + warm tier: a prefetched-but-unread chunk
+        // is demoted by a later prefetch, keeps its class in the warm
+        // tier, converts to a demand entry on promote — and is then
+        // protected from prefetch eviction like any demand resident.
+        let (_d, s) = warm_store(f32_cost(), 64 << 20);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+        }
+        assert_eq!(s.prefetch_many(&[1]).warmed, 1);
+        assert_eq!(s.prefetch_many(&[2]).warmed, 1); // evicts prefetched 1 → warm
+        let warm = s.warm_tier().unwrap();
+        assert!(warm.contains(1), "prefetched eviction demotes like any other");
+
+        // demand load of 1: a warm hit that still counts as a prefetch
+        // conversion, then promotes as a demand entry (evicting 2).
+        let l = s.load(1).unwrap();
+        assert!(l.from_warm);
+        assert_eq!(warm.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+        assert!(s.hot_tier().unwrap().contains(1));
+
+        // as a demand resident, 1 is now protected from prefetch eviction
+        let rep = s.prefetch_many(&[3]);
+        assert_eq!(rep.rejected, 1, "prefetch displaced a demand-promoted chunk");
+        assert!(s.hot_tier().unwrap().contains(1));
+    }
+
+    #[test]
+    fn prefetch_counts_warm_residents_and_warms_warm_only_stores() {
+        // Warm-resident chunks are DRAM-resident: prefetch leaves them be.
+        let (_d, s) = warm_store(2 * f32_cost(), 64 << 20);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+            s.load(i).unwrap();
+        }
+        assert!(s.warm_tier().unwrap().contains(1));
+        let rep = s.prefetch_many(&[1, 2, 3]);
+        assert_eq!(rep.already_resident, 3, "{rep:?}");
+        assert_eq!(rep.warmed, 0);
+
+        // Warm-only store: prefetch admits quantized copies directly.
+        let (_d2, s2) = warm_store(0, 64 << 20);
+        for i in 1..=2u64 {
+            s2.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+        }
+        let rep = s2.prefetch_many(&[1, 2, 9]);
+        assert_eq!(rep.warmed, 2);
+        assert_eq!(rep.absent, 1);
+        assert!(rep.device_secs > 0.0);
+        let warm = s2.warm_tier().unwrap();
+        assert_eq!(warm.stats.prefetch_inserts.load(Ordering::Relaxed), 2);
+        let l = s2.load(1).unwrap();
+        assert!(l.from_warm, "prefetched q8 copy must serve the demand load");
+        assert_eq!(warm.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunk_too_large_for_hot_tier_still_lands_in_warm() {
+        // A hot tier smaller than one chunk can never admit anything —
+        // so the warm tier must catch the miss directly (both demand
+        // and prefetch paths), or --warm-tier-bytes would be silently
+        // dead in that configuration.
+        let (_d, s) = warm_store(f32_cost() / 2, 64 << 20);
+        s.store_sync(1, &flat_chunk(127.0, 8)).unwrap();
+        s.store_sync(2, &flat_chunk(254.0, 8)).unwrap();
+        // demand path
+        assert!(!s.load(1).unwrap().from_cache);
+        assert_eq!(s.hot_tier().unwrap().len(), 0);
+        assert!(s.warm_tier().unwrap().contains(1), "oversize miss must park in warm");
+        let l = s.load(1).unwrap();
+        assert!(l.from_warm);
+        assert_eq!(*l.chunk, flat_chunk(127.0, 8));
+        // no promote was attempted (the hot tier could never admit it),
+        // so the q8 copy stays resident and keeps serving
+        assert!(s.warm_tier().unwrap().contains(1), "hit must not evict itself");
+        assert!(s.load(1).unwrap().from_warm);
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 1, "exactly one cold read");
+        // prefetch path
+        let rep = s.prefetch_many(&[2]);
+        assert_eq!(rep.warmed, 1, "{rep:?}");
+        assert!(s.warm_tier().unwrap().contains(2));
+        assert!(s.load(2).unwrap().from_warm);
+    }
+
+    #[test]
+    fn resident_ids_union_both_tiers() {
+        let (_d, s) = warm_store(2 * f32_cost(), 64 << 20);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+            s.load(i).unwrap();
+        }
+        // hot: {2, 3}, warm: {1}
+        let mut hot_ids = s.hot_resident_ids();
+        hot_ids.sort_unstable();
+        assert_eq!(hot_ids, vec![2, 3]);
+        assert_eq!(s.warm_resident_ids(), vec![1]);
+        assert_eq!(s.resident_ids(), vec![1, 2, 3], "union, sorted");
+    }
+
+    #[test]
+    fn equal_dram_budget_split_beats_hot_only() {
+        // The tentpole's acceptance shape at unit scale: at EQUAL total
+        // DRAM bytes, hot+warm holds strictly more chunks (q8 is ~4x
+        // denser), so a Zipf replay serves strictly more loads from DRAM
+        // and issues strictly fewer device reads than hot-only.
+        let n = 64usize;
+        let total = 12 * f32_cost();
+        let mut results = Vec::new();
+        for (hot, warm) in [(total, 0), (total / 2, total - total / 2)] {
+            let (_d, s) = warm_store(hot, warm);
+            for i in 0..n as u64 {
+                s.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+            }
+            let zipf = Zipf::new(n, 1.0);
+            let mut rng = Rng::new(99);
+            let mut dram_served = 0u64;
+            for _ in 0..1500 {
+                let l = s.load(zipf.sample(&mut rng) as u64).unwrap();
+                dram_served += l.from_cache as u64;
+            }
+            results.push((s.stats.reads.load(Ordering::Relaxed), dram_served));
+        }
+        let (hot_only_reads, hot_only_dram) = results[0];
+        let (split_reads, split_dram) = results[1];
+        assert!(
+            split_reads < hot_only_reads,
+            "split must read the device strictly less: {split_reads} vs {hot_only_reads}"
+        );
+        assert!(
+            split_dram > hot_only_dram,
+            "split must serve strictly more from DRAM: {split_dram} vs {hot_only_dram}"
+        );
     }
 
     // --- sharding -------------------------------------------------------

@@ -1,0 +1,470 @@
+//! The DRAM **warm tier**: a byte-budgeted LRU of q8-quantized chunks
+//! between the f32 hot tier and the simulated flash.
+//!
+//! MatKV's core trade — recompute vs. storage — recurs *inside* DRAM: a
+//! q8 plane ([`super::quant`]) costs ~4x fewer resident bytes than the
+//! hot tier's f32 copy, so at equal total DRAM budget a hot+warm
+//! hierarchy keeps strictly more chunks off the flash device than hot
+//! alone ("LLM in a flash" / kv-cache-tier style). The price is paid in
+//! compute and fidelity instead of bytes: a warm hit must dequantize
+//! (charged a modeled cost, [`crate::hwsim::profiles::q8_dequant_secs`])
+//! and serves planes with bounded quantization error (measured by the
+//! table-VI fidelity harness, `benches/fig_warm_tier.rs`).
+//!
+//! Placement in the hierarchy is **exclusive**: chunks enter the warm
+//! tier by *demotion* — the hot tier's budget evictions land here via
+//! [`DemoteSink`] instead of being dropped — and leave it by *promotion*:
+//! a warm hit on a store with a hot tier dequantizes, removes the q8
+//! copy, and re-admits the f32 chunk to the hot tier, so no chunk is
+//! double-resident. Without a hot tier (warm-only stores) the tier acts
+//! as the first-level cache: misses admit quantized copies directly and
+//! hits serve in place.
+//!
+//! Invalidation reuses the hot tier's generation-guard scheme
+//! ([`WarmTier::generation`] / [`WarmTier::admit`] with a seen
+//! generation). Demotions are guarded too: the generation is snapshotted
+//! *inside* the hot tier's eviction critical section
+//! ([`DemoteSink::prepare`]) — where every writer's hot-then-warm
+//! invalidation order pins it fresh — while the O(plane) quantize+admit
+//! runs after the hot lock is released, so demotion cost never
+//! serializes the serve path's hot-tier probes.
+//!
+//! [`DemoteSink`]: super::cache::DemoteSink
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use super::cache::{CacheStats, DemoteSink, TierKind};
+use super::quant::{self, QuantChunk};
+use super::store::KvChunk;
+use crate::vectordb::ChunkId;
+
+struct WarmEntry {
+    q: Arc<QuantChunk>,
+    /// Size of the backing flash file (what a hit avoids reading).
+    file_bytes: usize,
+    /// Resident q8 bytes charged against the budget.
+    cost: usize,
+    /// Recency stamp; key into `WarmLru::order`.
+    tick: u64,
+    /// Admission class carried over from the hot tier: a still-unread
+    /// prefetched chunk keeps that status through demotion, so the first
+    /// demand hit — wherever it lands — still counts as a prefetch
+    /// conversion in the stats.
+    prefetched: bool,
+}
+
+#[derive(Default)]
+struct WarmLru {
+    map: HashMap<ChunkId, WarmEntry>,
+    /// tick → id, oldest first (ticks unique: one logical clock).
+    order: BTreeMap<u64, ChunkId>,
+    /// Per-id invalidation generation (same scheme as the hot tier).
+    gens: HashMap<ChunkId, u64>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// Outcome of a [`WarmTier::probe`].
+pub enum WarmProbe {
+    /// Resident: the q8 chunk, the flash bytes the hit avoided, and
+    /// whether the entry was admitted by a prefetch and never read.
+    Hit { q: Arc<QuantChunk>, file_bytes: usize, prefetched: bool },
+    /// Not resident: the id's current invalidation generation (to pass
+    /// back to [`WarmTier::admit`] after a device read).
+    Miss(u64),
+}
+
+/// The q8 warm tier: an LRU map `ChunkId → Arc<QuantChunk>` holding at
+/// most `budget` resident bytes. Unlike the hot tier there are no
+/// protection classes — the warm tier is a victim cache, and everything
+/// in it is already one demotion away from free.
+pub struct WarmTier {
+    budget: usize,
+    lru: Mutex<WarmLru>,
+    pub stats: CacheStats,
+}
+
+impl WarmTier {
+    pub fn new(budget_bytes: usize) -> Self {
+        WarmTier {
+            budget: budget_bytes,
+            lru: Mutex::new(WarmLru::default()),
+            stats: CacheStats::for_tier(TierKind::Warm),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Resident q8 bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.lru.lock().unwrap().bytes
+    }
+
+    /// Number of resident chunks.
+    pub fn len(&self) -> usize {
+        self.lru.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Residency check with no side effects (no stat bump, no LRU
+    /// promotion) — the prefetcher's "is it already in DRAM?" test.
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.lru.lock().unwrap().map.contains_key(&id)
+    }
+
+    /// Snapshot of resident chunk ids, no side effects. The scheduler's
+    /// tier-affinity policy scores these at a discount against hot
+    /// residents: a warm hit still avoids the device read but pays the
+    /// dequant pass.
+    pub fn resident_ids(&self) -> Vec<ChunkId> {
+        self.lru.lock().unwrap().map.keys().copied().collect()
+    }
+
+    /// Record one telemetry sample (tagged [`TierKind::Warm`]).
+    pub fn sample(&self) {
+        let (bytes, chunks) = {
+            let lru = self.lru.lock().unwrap();
+            (lru.bytes, lru.map.len())
+        };
+        self.stats.record_sample(bytes, chunks);
+    }
+
+    /// Current invalidation generation of `id` (see
+    /// [`super::HotTier::generation`] — same contract).
+    pub fn generation(&self, id: ChunkId) -> u64 {
+        self.lru.lock().unwrap().gens.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Drop `id` and advance its generation. Writers/deleters call this
+    /// on both sides of the file mutation, after the hot tier's
+    /// invalidation (lock order hot → warm keeps demotions safe).
+    pub fn invalidate(&self, id: ChunkId) {
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        *lru.gens.entry(id).or_insert(0) += 1;
+        if let Some(e) = lru.map.remove(&id) {
+            lru.order.remove(&e.tick);
+            lru.bytes -= e.cost;
+        }
+    }
+
+    /// Look up a chunk. A hit bumps the hit/bytes-saved counters and
+    /// either **takes** the entry out of the tier — the promote-to-hot
+    /// path: the caller re-admits the dequantized f32 chunk to the hot
+    /// tier, keeping placement exclusive — or touches it to
+    /// most-recently-used in place. `promote_budget` is the hot tier's
+    /// byte budget (`None` in warm-only stores): the entry is taken
+    /// only when its *reconstructed f32* footprint fits, so a chunk the
+    /// hot tier could never admit keeps serving from the warm tier
+    /// instead of evicting itself on every hit. A miss reports the id's
+    /// invalidation generation for a later gen-guarded
+    /// [`WarmTier::admit`].
+    pub fn probe(&self, id: ChunkId, promote_budget: Option<usize>) -> WarmProbe {
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        let gen = lru.gens.get(&id).copied().unwrap_or(0);
+        let Some(entry) = lru.map.get(&id) else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            return WarmProbe::Miss(gen);
+        };
+        let take = promote_budget.is_some_and(|b| entry.q.f32_dram_bytes() <= b);
+        self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        if take {
+            let e = lru.map.remove(&id).expect("presence checked");
+            lru.order.remove(&e.tick);
+            lru.bytes -= e.cost;
+            self.stats.bytes_saved.fetch_add(e.file_bytes as u64, Ordering::Relaxed);
+            if e.prefetched {
+                self.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            WarmProbe::Hit { q: e.q, file_bytes: e.file_bytes, prefetched: e.prefetched }
+        } else {
+            lru.clock += 1;
+            let tick = lru.clock;
+            let e = lru.map.get_mut(&id).expect("presence checked");
+            let old_tick = std::mem::replace(&mut e.tick, tick);
+            let was_prefetched = std::mem::take(&mut e.prefetched);
+            let (q, file_bytes) = (e.q.clone(), e.file_bytes);
+            lru.order.remove(&old_tick);
+            lru.order.insert(tick, id);
+            self.stats.bytes_saved.fetch_add(file_bytes as u64, Ordering::Relaxed);
+            if was_prefetched {
+                self.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            WarmProbe::Hit { q, file_bytes, prefetched: was_prefetched }
+        }
+    }
+
+    /// Admit a quantized chunk, evicting least-recently-used entries
+    /// until the tier is back under budget (evicted q8 copies are
+    /// dropped — this is the last DRAM rung; the flash file remains).
+    ///
+    /// `seen_gen` is the hot-tier-style generation guard: pass the
+    /// generation captured *before* the bytes were obtained (before the
+    /// device read for misses/prefetches, at eviction time — via
+    /// [`DemoteSink::prepare`] — for demotions), and an admission raced
+    /// by an invalidation is refused instead of parking stale bytes.
+    ///
+    /// Returns `true` when `id` is resident after the call.
+    pub fn admit(
+        &self,
+        id: ChunkId,
+        q: Arc<QuantChunk>,
+        file_bytes: usize,
+        prefetched: bool,
+        seen_gen: u64,
+    ) -> bool {
+        let cost = q.dram_bytes();
+        if cost > self.budget {
+            if prefetched {
+                self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            return false;
+        }
+        let mut guard = self.lru.lock().unwrap();
+        let lru = &mut *guard;
+        if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
+            if prefetched {
+                self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            return false; // superseded while the bytes were in flight
+        }
+        lru.clock += 1;
+        let tick = lru.clock;
+        if let Some(old) = lru.map.remove(&id) {
+            lru.order.remove(&old.tick);
+            lru.bytes -= old.cost;
+        }
+        lru.bytes += cost;
+        lru.map.insert(id, WarmEntry { q, file_bytes, cost, tick, prefetched });
+        lru.order.insert(tick, id);
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+        if prefetched {
+            self.stats.prefetch_inserts.fetch_add(1, Ordering::Relaxed);
+        }
+        while lru.bytes > self.budget {
+            let Some((&oldest, &evict)) = lru.order.iter().next() else { break };
+            lru.order.remove(&oldest);
+            if let Some(e) = lru.map.remove(&evict) {
+                lru.bytes -= e.cost;
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        true
+    }
+}
+
+impl DemoteSink for WarmTier {
+    /// Generation snapshot taken inside the hot tier's eviction critical
+    /// section: any writer invalidation not complete by now is ordered
+    /// after it (writers sweep hot-then-warm), so it will either bump
+    /// this generation — refusing the admission below — or remove the
+    /// admitted entry. Cheap by contract: one map lookup.
+    fn prepare(&self, id: ChunkId) -> u64 {
+        self.generation(id)
+    }
+
+    /// Hot-tier budget evictions land here *after* the hot lock is
+    /// released: the O(plane), memory-bound quantize pass never
+    /// serializes concurrent hot-tier probes. Guarded by the generation
+    /// [`DemoteSink::prepare`] captured at eviction time.
+    fn demote(
+        &self,
+        id: ChunkId,
+        chunk: &Arc<KvChunk>,
+        file_bytes: usize,
+        prefetched: bool,
+        seen_gen: u64,
+    ) {
+        let q = Arc::new(quant::quantize(chunk));
+        self.admit(id, q, file_bytes, prefetched, seen_gen);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qchunk(seed: u32) -> Arc<QuantChunk> {
+        let plane = 2 * 2 * 8 * 4;
+        let c = KvChunk {
+            config_id: 1,
+            n_layers: 2,
+            n_kv_heads: 2,
+            seq_len: 8,
+            head_dim: 4,
+            k: (0..plane).map(|i| (i + seed as usize) as f32).collect(),
+            v: (0..plane).map(|i| -((i + seed as usize) as f32)).collect(),
+        };
+        Arc::new(quant::quantize(&c))
+    }
+
+    fn cost() -> usize {
+        qchunk(0).dram_bytes()
+    }
+
+    /// Admit with a freshly captured generation (the common happy path).
+    fn admit_now(tier: &WarmTier, id: ChunkId, seed: u32, prefetched: bool) -> bool {
+        tier.admit(id, qchunk(seed), 100, prefetched, tier.generation(id))
+    }
+
+    #[test]
+    fn lru_eviction_order_and_budget() {
+        let tier = WarmTier::new(2 * cost());
+        assert!(admit_now(&tier, 1, 1, false));
+        assert!(admit_now(&tier, 2, 2, false));
+        // touch 1 → LRU victim is 2
+        assert!(matches!(tier.probe(1, None), WarmProbe::Hit { .. }));
+        assert!(admit_now(&tier, 3, 3, false));
+        assert_eq!(tier.len(), 2);
+        assert!(tier.contains(1) && tier.contains(3));
+        assert!(!tier.contains(2), "LRU entry must be the one evicted");
+        assert_eq!(tier.stats.evictions.load(Ordering::Relaxed), 1);
+        assert!(tier.bytes() <= tier.budget());
+    }
+
+    #[test]
+    fn take_removes_touch_keeps() {
+        let tier = WarmTier::new(4 * cost());
+        tier.admit(5, qchunk(5), 640, false, tier.generation(5));
+        match tier.probe(5, None) {
+            WarmProbe::Hit { file_bytes, .. } => assert_eq!(file_bytes, 640),
+            WarmProbe::Miss(_) => panic!("touch lost the entry"),
+        }
+        assert!(tier.contains(5));
+        assert!(matches!(tier.probe(5, Some(usize::MAX)), WarmProbe::Hit { .. }));
+        assert!(!tier.contains(5), "take must remove (promote-out)");
+        assert_eq!(tier.bytes(), 0);
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(tier.stats.bytes_saved.load(Ordering::Relaxed), 2 * 640);
+        // and the next probe is a miss
+        assert!(matches!(tier.probe(5, Some(usize::MAX)), WarmProbe::Miss(_)));
+        assert_eq!(tier.stats.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn generation_guard_rejects_stale_admission() {
+        // Mirrors the hot tier's insert_at race test: gen captured, then
+        // an invalidation lands, then the stale admission must bounce.
+        let tier = WarmTier::new(4 * cost());
+        let seen = tier.generation(9);
+        tier.invalidate(9);
+        assert!(!tier.admit(9, qchunk(9), 100, false, seen));
+        assert!(!tier.contains(9));
+        // a fresh capture admits
+        assert!(tier.admit(9, qchunk(9), 100, false, tier.generation(9)));
+        assert!(tier.contains(9));
+        // unrelated invalidations never suppress admission
+        let other = tier.generation(8);
+        tier.invalidate(9);
+        assert!(tier.admit(8, qchunk(8), 100, false, other));
+        assert!(tier.contains(8));
+    }
+
+    #[test]
+    fn demotion_is_guarded_by_the_prepared_generation() {
+        // prepare() snapshots the generation at (simulated) eviction
+        // time; an invalidation landing between prepare and demote must
+        // refuse the admission — the demoted bytes are superseded.
+        let tier = WarmTier::new(64 << 20);
+        let chunk = kvchunk(127.0);
+        let gen = tier.prepare(3);
+        tier.demote(3, &chunk, 100, false, gen);
+        assert!(tier.contains(3), "unraced demotion must land");
+
+        let gen = tier.prepare(4);
+        tier.invalidate(4); // writer swept between eviction and admit
+        tier.demote(4, &chunk, 100, false, gen);
+        assert!(!tier.contains(4), "stale demotion admitted after invalidate");
+    }
+
+    #[test]
+    fn prefetched_class_survives_until_first_hit() {
+        let tier = WarmTier::new(4 * cost());
+        admit_now(&tier, 1, 1, true);
+        assert_eq!(tier.stats.prefetch_inserts.load(Ordering::Relaxed), 1);
+        match tier.probe(1, None) {
+            WarmProbe::Hit { prefetched, .. } => assert!(prefetched),
+            WarmProbe::Miss(_) => panic!(),
+        }
+        assert_eq!(tier.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+        // the first hit consumed the class: a second hit is plain
+        match tier.probe(1, None) {
+            WarmProbe::Hit { prefetched, .. } => assert!(!prefetched),
+            WarmProbe::Miss(_) => panic!(),
+        }
+        assert_eq!(tier.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn oversize_chunk_not_admitted() {
+        let tier = WarmTier::new(cost() - 1);
+        assert!(!admit_now(&tier, 1, 1, false));
+        assert_eq!(tier.len(), 0);
+        assert!(!admit_now(&tier, 2, 2, true));
+        assert_eq!(tier.stats.prefetch_rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn invalidate_drops_and_is_idempotent() {
+        let tier = WarmTier::new(4 * cost());
+        admit_now(&tier, 1, 1, false);
+        tier.invalidate(1);
+        assert_eq!(tier.len(), 0);
+        assert_eq!(tier.bytes(), 0);
+        assert!(matches!(tier.probe(1, None), WarmProbe::Miss(_)));
+        tier.invalidate(1); // absent: no panic
+    }
+
+    /// A real (unquantized) chunk with constant planes at multiples of
+    /// 127: the q8 scale is an exact integer, so the round trip is
+    /// bit-exact and equality asserts hold.
+    fn kvchunk(val: f32) -> Arc<KvChunk> {
+        let plane = 2 * 2 * 8 * 4;
+        Arc::new(KvChunk {
+            config_id: 1,
+            n_layers: 2,
+            n_kv_heads: 2,
+            seq_len: 8,
+            head_dim: 4,
+            k: vec![val; plane],
+            v: vec![-2.0 * val; plane],
+        })
+    }
+
+    #[test]
+    fn demote_sink_quantizes_and_admits() {
+        let tier = WarmTier::new(64 << 20);
+        let chunk = kvchunk(127.0);
+        tier.demote(7, &chunk, 512, false, tier.prepare(7));
+        assert!(tier.contains(7));
+        match tier.probe(7, Some(usize::MAX)) {
+            WarmProbe::Hit { q, file_bytes, .. } => {
+                assert_eq!(file_bytes, 512);
+                let back = quant::dequantize(&q);
+                assert_eq!(back.k, chunk.k);
+                assert_eq!(back.v, chunk.v);
+            }
+            WarmProbe::Miss(_) => panic!(),
+        }
+    }
+
+    #[test]
+    fn resident_ids_snapshot_without_side_effects() {
+        let tier = WarmTier::new(4 * cost());
+        admit_now(&tier, 1, 1, false);
+        admit_now(&tier, 2, 2, true);
+        let mut ids = tier.resident_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(tier.stats.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(tier.stats.misses.load(Ordering::Relaxed), 0);
+    }
+}

@@ -26,9 +26,11 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --doc-tokens N --mode matkv|vanilla|cacheblend --overlap
                --storage 9100pro|raid0|pm9a3|dram --kv-dir PATH
                --hot-tier-bytes N (DRAM hot tier in front of flash, 0=off)
+               --warm-tier-bytes N (q8 warm tier behind the hot tier:
+                           evictions demote, hits dequantize+promote, 0=off)
                --kv-format v1|v2 (on-disk KV planes: f32|f16, default v2)
                --shards N (JBOD of N independent simulated devices, default 1)
-               --prefetch (with --overlap: warm the hot tier from upcoming
+               --prefetch (with --overlap: warm the DRAM tiers from upcoming
                            batches' planned retrieval top-K)
                --policy fifo|affinity (batch formation: arrival order, or
                            tier-affinity grouping with a starvation bound)
@@ -96,8 +98,15 @@ fn serve(args: &Args) -> Result<()> {
     if prefetch && !overlap {
         anyhow::bail!("--prefetch warms ahead of the overlap pipeline; it requires --overlap");
     }
-    if prefetch && args.usize("hot-tier-bytes", 0) == 0 {
-        anyhow::bail!("--prefetch warms the DRAM hot tier; set --hot-tier-bytes > 0");
+    // Prefetch lands in whichever DRAM tier exists (hot, or quantized
+    // into a warm-only store) — any nonzero tier will do.
+    if prefetch
+        && args.usize("hot-tier-bytes", 0) == 0
+        && args.usize("warm-tier-bytes", 0) == 0
+    {
+        anyhow::bail!(
+            "--prefetch warms the DRAM tiers; set --hot-tier-bytes or --warm-tier-bytes > 0"
+        );
     }
 
     let m = Manifest::load(matkv::artifacts_dir())?;
@@ -115,6 +124,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut kv =
         KvStore::open_sharded(&dir, storage_profile(&args.str("storage", "9100pro"))?, shards)?;
     kv.set_hot_tier(args.usize("hot-tier-bytes", 0));
+    kv.set_warm_tier(args.usize("warm-tier-bytes", 0));
     match args.str("kv-format", "v2").as_str() {
         "v1" => kv.set_format(KvFormat::V1),
         "v2" => kv.set_format(KvFormat::V2),
@@ -231,6 +241,21 @@ fn serve(args: &Args) -> Result<()> {
             100.0 * tier.stats.hit_ratio(),
             tier.bytes() as f64 / MIB,
             tier.stats.bytes_saved.load(std::sync::atomic::Ordering::Relaxed) as f64 / MIB,
+        );
+    }
+    if let Some(tier) = engine.kv.warm_tier() {
+        const MIB: f64 = (1 << 20) as f64;
+        use std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "warm tier (q8, {:.0} MiB budget): {} hits / {} misses ({:.0}% hit), \
+             {:.1} MiB resident, {:.1} MiB device reads saved, dequant {:.3}s",
+            tier.budget() as f64 / MIB,
+            tier.stats.hits.load(Relaxed),
+            tier.stats.misses.load(Relaxed),
+            100.0 * tier.stats.hit_ratio(),
+            tier.bytes() as f64 / MIB,
+            tier.stats.bytes_saved.load(Relaxed) as f64 / MIB,
+            tier.stats.dequant_secs(),
         );
     }
     if engine.kv.n_shards() > 1 {
