@@ -6,7 +6,7 @@
 //! 4090 — we use buckets 8 and 2).
 
 use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
-use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile};
+use matkv::hwsim::{serving_profile, ArchSpec, StorageProfile};
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
 
@@ -23,8 +23,11 @@ fn main() -> anyhow::Result<()> {
         ..ScenarioSpec::default()
     })?;
 
-    let h100 = DeviceProfile::h100();
-    let r4090 = DeviceProfile::rtx4090();
+    // Device identities come from the serving catalog — the same rows
+    // the fleet spec parser resolves — so the profile *and* its price
+    // are defined in exactly one place.
+    let h100 = serving_profile("h100").expect("H100 in the serving catalog");
+    let r4090 = serving_profile("rtx4090").expect("RTX4090 in the serving catalog");
     let raid = StorageProfile::raid0_4x9100();
     let pm9a3 = StorageProfile::ssd_pm9a3();
     let arch = ArchSpec::llama_8b(); // paper runs this figure on 8B-class
@@ -40,15 +43,15 @@ fn main() -> anyhow::Result<()> {
         (
             "Vanilla @ H100 (b=8)",
             v8.prefill_secs_on(&arch, &h100) + v8.decode_secs_on(&arch, &h100),
-            50_000.0,
+            h100.price_usd,
         ),
-        ("MatKV   @ H100 (b=8)", m8.total_secs_on(&arch, &h100, &raid), 50_000.0),
+        ("MatKV   @ H100 (b=8)", m8.total_secs_on(&arch, &h100, &raid), h100.price_usd),
         (
             "Vanilla @ 4090 (b=2)",
             v2.prefill_secs_on(&arch, &r4090) + v2.decode_secs_on(&arch, &r4090),
-            1_600.0,
+            r4090.price_usd,
         ),
-        ("MatKV   @ 4090 (b=2)", m2.total_secs_on(&arch, &r4090, &pm9a3), 1_600.0),
+        ("MatKV   @ 4090 (b=2)", m2.total_secs_on(&arch, &r4090, &pm9a3), r4090.price_usd),
     ];
     let baseline = rows[0].1;
 

@@ -146,6 +146,7 @@ fn main() -> anyhow::Result<()> {
                 batch: BatchPolicy { max_batch: batch, max_wait_secs: 0.05 },
                 policy,
                 service_estimate_secs: service_ms / 1e3,
+                estimator: None,
             },
         );
         sched.enqueue_timed(trace.clone());
@@ -268,6 +269,7 @@ fn main() -> anyhow::Result<()> {
                     batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.05 },
                     policy,
                     service_estimate_secs: service_ms / 1e3,
+                    estimator: None,
                 },
             );
             sched.enqueue_timed(trace);

@@ -198,6 +198,12 @@ impl LoaderCtx {
             staged.doc_slots[*b].push((slot, l.chunk.seq_len as usize));
             staged.cache_len[*b] += l.chunk.seq_len as i32;
             staged.metrics.loaded_tokens += l.chunk.seq_len as usize;
+            staged.metrics.quant_secs += l.quant_secs;
+            if l.quant_secs > 0.0 {
+                // This load quantized its chunk into the warm tier:
+                // the arch-scale costing charges the symmetric pass.
+                staged.metrics.warm_admit_tokens += l.chunk.seq_len as usize;
+            }
             if l.from_warm {
                 staged.metrics.warm_hits += 1;
                 staged.metrics.warm_tokens += l.chunk.seq_len as usize;

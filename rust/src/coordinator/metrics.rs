@@ -99,6 +99,19 @@ pub struct PhaseBreakdown {
     /// (testbed scale; the architecture-scale charge is folded into
     /// [`PhaseBreakdown::load_secs_on`]).
     pub dequant_secs: f64,
+    /// Modeled f32→q8 quantization seconds the serve path paid admitting
+    /// chunks into the warm tier (testbed scale, symmetric to
+    /// `dequant_secs`; demote-on-evict charges accrue to the tier's
+    /// [`crate::kvstore::CacheStats`] instead — they are not tied to one
+    /// batch).
+    pub quant_secs: f64,
+    /// Tokens of KV this serve path's loads quantized *into* the warm
+    /// tier (direct q8 admissions: warm-only stores and chunks oversize
+    /// for hot). The architecture-scale quantize charge in
+    /// [`PhaseBreakdown::load_secs_on`] reads this, symmetric to
+    /// `warm_tokens`' dequant charge; demote-on-evict admissions are
+    /// not batch-attributable and live in the tier's `CacheStats` only.
+    pub warm_admit_tokens: usize,
     /// Host→device state upload wall time.
     pub upload_secs: f64,
     /// Prefill (doc recompute and/or query sub-prefill) wall time.
@@ -115,6 +128,20 @@ pub struct PhaseBreakdown {
     pub requests: usize,
     /// Tokens generated.
     pub tokens_out: usize,
+    /// Virtual-clock busy seconds per fleet worker (index = worker;
+    /// empty when no fleet dispatched this work). Merged element-wise
+    /// like the shard rollups.
+    pub worker_busy_secs: Vec<f64>,
+    /// Batches dispatched per fleet worker.
+    pub worker_batches: Vec<u64>,
+    /// Modeled host→device KV transfer seconds per fleet worker — the
+    /// PCIe charge a batch pays when its chunks were loaded by a
+    /// different worker (or sit in host DRAM, not on this device).
+    pub worker_transfer_secs: Vec<f64>,
+    /// Per-request end-to-end latency on the virtual clock (arrival →
+    /// batch completion), recorded by the fleet dispatcher. Empty for
+    /// wall-clock serve paths, which have no virtual completion times.
+    pub request_latency: Percentiles,
 }
 
 /// Element-wise `a[i] += b[i]`, growing `a` as needed.
@@ -175,6 +202,8 @@ impl PhaseBreakdown {
         self.warm_tokens += other.warm_tokens;
         self.warm_bytes_saved += other.warm_bytes_saved;
         self.dequant_secs += other.dequant_secs;
+        self.quant_secs += other.quant_secs;
+        self.warm_admit_tokens += other.warm_admit_tokens;
         self.upload_secs += other.upload_secs;
         self.prefill_wall_secs += other.prefill_wall_secs;
         self.prefill_trace.add(&other.prefill_trace);
@@ -183,6 +212,10 @@ impl PhaseBreakdown {
         self.total_wall_secs += other.total_wall_secs;
         self.requests += other.requests;
         self.tokens_out += other.tokens_out;
+        merge_add(&mut self.worker_busy_secs, &other.worker_busy_secs);
+        merge_add(&mut self.worker_batches, &other.worker_batches);
+        merge_add(&mut self.worker_transfer_secs, &other.worker_transfer_secs);
+        self.request_latency.merge(&other.request_latency);
     }
 
     /// Simulated prefill seconds for the trace under an architecture.
@@ -201,12 +234,16 @@ impl PhaseBreakdown {
     /// only the miss tokens are charged to it; warm-served tokens are
     /// charged the modeled q8 dequant pass instead — one byte per f16
     /// KV-byte pair, so half of [`ArchSpec::kv_bytes`] moves through the
-    /// dequant bandwidth.
+    /// dequant bandwidth. Symmetrically, tokens this path quantized
+    /// *into* the warm tier (`warm_admit_tokens`) are charged the
+    /// quantize pass at the same scale — the warm tier's round trip is
+    /// never half-priced.
     pub fn load_secs_on(&self, arch: &ArchSpec, storage: &StorageProfile) -> f64 {
         let miss_tokens =
             self.loaded_tokens.saturating_sub(self.cache_tokens + self.warm_tokens);
         storage.read_secs_batch(arch.kv_bytes(miss_tokens), self.load_reads)
             + crate::hwsim::q8_dequant_secs(arch.kv_bytes(self.warm_tokens) * 0.5)
+            + crate::hwsim::q8_quant_secs(arch.kv_bytes(self.warm_admit_tokens) * 0.5)
     }
 
     /// Simulated host→device upload of the loaded KVs (PCIe).
@@ -237,6 +274,16 @@ impl PhaseBreakdown {
     }
 }
 
+/// The serving percentiles the fleet bench emits, in one copyable
+/// bundle (nearest-rank, from [`Percentiles::summary`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
 /// Latency percentile helper for per-request distributions.
 #[derive(Debug, Default, Clone)]
 pub struct Percentiles {
@@ -246,6 +293,36 @@ pub struct Percentiles {
 impl Percentiles {
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
+    }
+
+    /// Fold another distribution's samples into this one (the
+    /// [`PhaseBreakdown::add`] merge).
+    pub fn merge(&mut self, other: &Percentiles) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Nearest-rank pick from a pre-sorted sample slice — the one
+    /// definition of the rule [`Percentiles::percentile`] and
+    /// [`Percentiles::summary`] share.
+    fn rank_pick(sorted: &[f64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    /// The p50/p95/p99 bundle serving reports quote. One sort serves
+    /// all three ranks.
+    pub fn summary(&self) -> LatencySummary {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        LatencySummary {
+            mean: self.mean(),
+            p50: Self::rank_pick(&sorted, 50.0),
+            p95: Self::rank_pick(&sorted, 95.0),
+            p99: Self::rank_pick(&sorted, 99.0),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -258,13 +335,9 @@ impl Percentiles {
 
     /// p in [0, 100]; nearest-rank.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.total_cmp(b));
-        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-        sorted[rank.min(sorted.len() - 1)]
+        Self::rank_pick(&sorted, p)
     }
 
     pub fn mean(&self) -> f64 {
@@ -326,6 +399,7 @@ mod tests {
             warm_tokens: 256,
             warm_bytes_saved: 10,
             dequant_secs: 0.5,
+            quant_secs: 0.1,
             ..Default::default()
         };
         let b = PhaseBreakdown {
@@ -333,6 +407,7 @@ mod tests {
             warm_tokens: 512,
             warm_bytes_saved: 30,
             dequant_secs: 0.25,
+            quant_secs: 0.2,
             ..Default::default()
         };
         a.add(&b);
@@ -340,6 +415,56 @@ mod tests {
         assert_eq!(a.warm_tokens, 768);
         assert_eq!(a.warm_bytes_saved, 40);
         assert!((a.dequant_secs - 0.75).abs() < 1e-12);
+        assert!((a.quant_secs - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_merges_worker_rollups_and_latency() {
+        let mut lat_a = Percentiles::default();
+        lat_a.record(0.010);
+        lat_a.record(0.030);
+        let mut a = PhaseBreakdown {
+            worker_busy_secs: vec![1.0, 2.0],
+            worker_batches: vec![1, 2],
+            worker_transfer_secs: vec![0.125],
+            request_latency: lat_a,
+            ..Default::default()
+        };
+        let mut lat_b = Percentiles::default();
+        lat_b.record(0.020);
+        let b = PhaseBreakdown {
+            worker_busy_secs: vec![0.5, 0.5, 3.0], // sparse worker 2 grows vecs
+            worker_batches: vec![0, 1, 4],
+            worker_transfer_secs: vec![0.25, 0.5],
+            request_latency: lat_b,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.worker_busy_secs, vec![1.5, 2.5, 3.0]);
+        assert_eq!(a.worker_batches, vec![1, 3, 4]);
+        assert_eq!(a.worker_transfer_secs, vec![0.375, 0.5]);
+        assert_eq!(a.request_latency.len(), 3);
+        let s = a.request_latency.summary();
+        assert_eq!(s.p50, 0.020);
+        assert!((s.mean - 0.020).abs() < 1e-12);
+        // merging into an empty breakdown grows everything
+        let mut empty = PhaseBreakdown::default();
+        empty.add(&a);
+        assert_eq!(empty.worker_busy_secs, a.worker_busy_secs);
+        assert_eq!(empty.request_latency.len(), 3);
+    }
+
+    #[test]
+    fn latency_summary_is_ordered_and_deterministic() {
+        let mut p = Percentiles::default();
+        for i in (0..200).rev() {
+            p.record(i as f64 / 1000.0);
+        }
+        let s = p.summary();
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{s:?}");
+        assert_eq!(s, p.summary(), "same samples must summarize identically");
+        // nearest-rank pins the exact values for a known distribution
+        assert_eq!(s.p99, 0.197);
     }
 
     #[test]
@@ -416,6 +541,35 @@ mod tests {
         assert_eq!(h, 0.0);
         assert!(w > 0.0, "warm hits are not free");
         assert!(w < c, "dequant must undercut the device read: {w} vs {c}");
+    }
+
+    #[test]
+    fn load_costing_charges_warm_admissions_symmetrically() {
+        let arch = crate::hwsim::standin::ArchSpec::llama_70b();
+        let ssd = crate::hwsim::StorageProfile::ssd_9100pro();
+        // tokens served FROM warm pay dequant; the same token count
+        // quantized INTO warm pays exactly the same modeled seconds
+        let served = PhaseBreakdown {
+            loaded_tokens: 1024,
+            warm_hits: 1,
+            warm_tokens: 1024,
+            ..Default::default()
+        };
+        let admitted = PhaseBreakdown {
+            loaded_tokens: 1024,
+            load_reads: 1,
+            warm_admit_tokens: 1024,
+            ..Default::default()
+        };
+        let base =
+            PhaseBreakdown { loaded_tokens: 1024, load_reads: 1, ..Default::default() };
+        let quant_charge = admitted.load_secs_on(&arch, &ssd) - base.load_secs_on(&arch, &ssd);
+        let dequant_charge = served.load_secs_on(&arch, &ssd);
+        assert!(quant_charge > 0.0, "warm admission is not free at arch scale");
+        assert!(
+            (quant_charge - dequant_charge).abs() < 1e-12,
+            "round trip must price symmetrically: {quant_charge} vs {dequant_charge}"
+        );
     }
 
     #[test]

@@ -16,23 +16,34 @@
 //!   n+1's KVs from flash while the device decodes batch n; the
 //!   prefetcher warms upcoming batches straight from the scheduler's
 //!   plan.
+//! * [`fleet`] — the heterogeneous device fleet: N simulated GPU
+//!   workers (serving-catalog profiles + per-worker energy meters)
+//!   consuming the scheduler's planned batches on the virtual clock,
+//!   with pluggable routing (round-robin / role-aware) and an explicit
+//!   host→device KV transfer charge — the paper's low-end-decode
+//!   premise (Fig 10) at serving scale.
 //! * [`baselines`] — the CacheBlend-style partial-recompute comparator.
 //! * [`metrics`] — per-phase latency breakdown + simulated device costs.
 
 pub mod baselines;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod ingest;
 pub mod metrics;
 pub mod overlap;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineOptions, Response, ServeMode};
+pub use fleet::{
+    BatchCost, BatchWork, Fleet, FleetCostModel, FleetReport, FleetSpec, Role, Routing,
+    WorkerReport,
+};
 pub use ingest::{IngestStats, Ingestor};
-pub use metrics::{PhaseBreakdown, Percentiles};
+pub use metrics::{LatencySummary, PhaseBreakdown, Percentiles};
 pub use experiments::{Scenario, ScenarioSpec};
 pub use overlap::{serve_overlapped, serve_overlapped_with, OverlapOptions, OverlapReport};
 pub use scheduler::{
-    BatchPolicy, ExecOptions, PlannedBatch, SchedOptions, SchedPolicy, SchedReport, Schedule,
-    Scheduler, ServeOutcome,
+    execute_schedule, BatchPolicy, ExecOptions, PlannedBatch, SchedOptions, SchedPolicy,
+    SchedReport, Schedule, Scheduler, ServeOutcome, ServiceEstimator,
 };

@@ -35,6 +35,7 @@
 //! [`Engine::serve_all`]: super::engine::Engine::serve_all
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -75,8 +76,21 @@ pub enum SchedPolicy {
     TierAffinity { max_age_batches: usize },
 }
 
+/// Per-batch executor-busy model consulted by the planner in place of
+/// the flat `service_estimate_secs` knob. The fleet installs one
+/// ([`super::fleet::Fleet::service_estimator`]) so the release clock
+/// sees realistic per-batch costs — a cache-miss batch occupies the
+/// executor longer than a KV-resident one — which is what shapes the
+/// continuous-batching backlog under mixed traffic.
+pub trait ServiceEstimator: Send + Sync {
+    /// Modeled executor-busy virtual seconds for one released batch.
+    /// `retrieved[i]` pairs with `reqs[i]` (the planner computes
+    /// retrieval whenever an estimator is installed).
+    fn batch_secs(&self, reqs: &[RagRequest], retrieved: &[Vec<ChunkId>]) -> f64;
+}
+
 /// Scheduler construction knobs.
-#[derive(Debug, Clone, Default)]
+#[derive(Clone, Default)]
 pub struct SchedOptions {
     pub batch: BatchPolicy,
     pub policy: SchedPolicy,
@@ -84,8 +98,23 @@ pub struct SchedOptions {
     /// Arrivals keep landing while a batch "executes", which is what
     /// builds the backlog continuous batching selects from; 0 releases
     /// as soon as the condition fires (the offline/batch-replay shape,
-    /// where the whole backlog is visible at t = 0 anyway).
+    /// where the whole backlog is visible at t = 0 anyway). Ignored
+    /// when `estimator` is set.
     pub service_estimate_secs: f64,
+    /// Per-batch service model replacing the flat knob above (forces
+    /// retrieval at plan time — the estimate needs the chunk sets).
+    pub estimator: Option<Arc<dyn ServiceEstimator>>,
+}
+
+impl std::fmt::Debug for SchedOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SchedOptions")
+            .field("batch", &self.batch)
+            .field("policy", &self.policy)
+            .field("service_estimate_secs", &self.service_estimate_secs)
+            .field("estimator", &self.estimator.as_ref().map(|_| "per-batch"))
+            .finish()
+    }
 }
 
 /// How recently-released batches count toward the warm set: chunks
@@ -101,6 +130,10 @@ pub struct PlannedBatch {
     /// (`len == reqs.len()`) when the policy or the overlap prefetcher
     /// needed it at plan time; empty (`len == 0`) otherwise.
     pub retrieved: Vec<Vec<ChunkId>>,
+    /// Virtual arrival time per request (same order as `reqs`) — what
+    /// the fleet dispatcher diffs against batch completion for the
+    /// per-request latency percentiles.
+    pub arrivals: Vec<f64>,
     /// Virtual time the release condition fired.
     pub release_secs: f64,
 }
@@ -215,6 +248,7 @@ impl Scheduler {
                 batch: BatchPolicy { max_batch: batch_size.max(1), max_wait_secs: 0.0 },
                 policy: SchedPolicy::Fifo,
                 service_estimate_secs: 0.0,
+                estimator: None,
             },
         )
     }
@@ -264,6 +298,9 @@ impl Scheduler {
     }
 
     fn plan_inner(&mut self, want_retrieval: bool) -> Schedule {
+        // A per-batch service estimator needs the chunk sets to price a
+        // batch, so it forces retrieval at plan time.
+        let want_retrieval = want_retrieval || self.opts.estimator.is_some();
         let mut report = SchedReport::default();
         let mut incoming: VecDeque<Queued> = {
             let mut q = std::mem::take(&mut self.queue);
@@ -363,8 +400,10 @@ impl Scheduler {
             let mut batch_chunks: Vec<ChunkId> = Vec::new();
             let mut reqs = Vec::with_capacity(selected.len());
             let mut retrieved = Vec::with_capacity(selected.len());
+            let mut arrivals = Vec::with_capacity(selected.len());
             for q in selected {
                 waits.push(t - q.arrival);
+                arrivals.push(q.arrival);
                 if affinity {
                     batch_chunks.extend(q.retrieved.iter().copied());
                 }
@@ -389,8 +428,14 @@ impl Scheduler {
                     }
                 }
             }
-            batches.push(PlannedBatch { reqs, retrieved, release_secs: t });
-            t_free = t + service;
+            // Per-batch cost estimate when a model is installed; the
+            // flat knob otherwise.
+            let batch_service = match &self.opts.estimator {
+                Some(est) => est.batch_secs(&reqs, &retrieved).max(0.0),
+                None => service,
+            };
+            batches.push(PlannedBatch { reqs, retrieved, arrivals, release_secs: t });
+            t_free = t + batch_service;
         }
 
         report.requests = waits.len();
@@ -405,43 +450,63 @@ impl Scheduler {
         Schedule { batches, report }
     }
 
+    /// Plan the schedule exactly as [`Scheduler::run`] would for `exec`:
+    /// retrieval is computed when the policy needs it, when the overlap
+    /// prefetcher will read it from the plan, or when a per-batch
+    /// service estimator is installed. Drains the queue; the caller can
+    /// inspect or fleet-dispatch the plan before (and independently of)
+    /// executing it with [`execute_schedule`].
+    pub fn plan_for_exec(&mut self, exec: &ExecOptions) -> Schedule {
+        let want_retrieval = matches!(self.opts.policy, SchedPolicy::TierAffinity { .. })
+            || exec.overlap.as_ref().is_some_and(|o| o.prefetch);
+        self.plan_inner(want_retrieval)
+    }
+
     /// Plan the schedule and drive it through `engine`: sequentially
     /// (each batch to completion) or through the overlap pipeline — in
     /// which case the prefetcher warms upcoming batches from the plan's
     /// retrieval sets rather than re-running retrieval.
     pub fn run(mut self, engine: &Engine, mode: ServeMode, exec: &ExecOptions) -> Result<ServeOutcome> {
-        let want_retrieval = matches!(self.opts.policy, SchedPolicy::TierAffinity { .. })
-            || exec.overlap.as_ref().is_some_and(|o| o.prefetch);
-        let schedule = self.plan_inner(want_retrieval);
-        let (responses, metrics, overlap) = match &exec.overlap {
-            Some(opts) => run_pipeline(engine, &schedule.batches, mode, opts)?,
-            None => {
-                let ctx = engine.loader_ctx();
-                let mut responses =
-                    Vec::with_capacity(schedule.batches.iter().map(|b| b.reqs.len()).sum());
-                let mut agg = PhaseBreakdown::default();
-                for b in &schedule.batches {
-                    // Reuse the plan's retrieval when it was computed;
-                    // staging must not pay for the search twice.
-                    let staged = match mode {
-                        ServeMode::Vanilla => {
-                            ctx.stage_vanilla_with(&b.reqs, b.planned_retrieval())?
-                        }
-                        ServeMode::MatKv | ServeMode::CacheBlend { .. } => {
-                            ctx.stage_matkv_with(&b.reqs, b.planned_retrieval())?
-                        }
-                    };
-                    let (r, m) = engine.exec_staged(staged, mode)?;
-                    responses.extend(r);
-                    agg.add(&m);
-                }
-                let report =
-                    OverlapReport { batches: schedule.batches.len(), ..Default::default() };
-                (responses, agg, report)
-            }
-        };
-        Ok(ServeOutcome { responses, metrics, overlap, sched: schedule.report })
+        let schedule = self.plan_for_exec(exec);
+        execute_schedule(engine, &schedule, mode, exec)
     }
+}
+
+/// Drive a planned schedule through `engine` — the execution half of
+/// [`Scheduler::run`], split out so callers that need the plan itself
+/// (the CLI's fleet report dispatches the very schedule it executes)
+/// don't plan twice.
+pub fn execute_schedule(
+    engine: &Engine,
+    schedule: &Schedule,
+    mode: ServeMode,
+    exec: &ExecOptions,
+) -> Result<ServeOutcome> {
+    let (responses, metrics, overlap) = match &exec.overlap {
+        Some(opts) => run_pipeline(engine, &schedule.batches, mode, opts)?,
+        None => {
+            let ctx = engine.loader_ctx();
+            let mut responses =
+                Vec::with_capacity(schedule.batches.iter().map(|b| b.reqs.len()).sum());
+            let mut agg = PhaseBreakdown::default();
+            for b in &schedule.batches {
+                // Reuse the plan's retrieval when it was computed;
+                // staging must not pay for the search twice.
+                let staged = match mode {
+                    ServeMode::Vanilla => ctx.stage_vanilla_with(&b.reqs, b.planned_retrieval())?,
+                    ServeMode::MatKv | ServeMode::CacheBlend { .. } => {
+                        ctx.stage_matkv_with(&b.reqs, b.planned_retrieval())?
+                    }
+                };
+                let (r, m) = engine.exec_staged(staged, mode)?;
+                responses.extend(r);
+                agg.add(&m);
+            }
+            let report = OverlapReport { batches: schedule.batches.len(), ..Default::default() };
+            (responses, agg, report)
+        }
+    };
+    Ok(ServeOutcome { responses, metrics, overlap, sched: schedule.report.clone() })
 }
 
 /// Arrival order, oldest first.
@@ -601,6 +666,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: batch, max_wait_secs: 0.0 },
                 policy,
                 service_estimate_secs: 0.0,
+                estimator: None,
             },
         )
     }
@@ -640,6 +706,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 8, max_wait_secs: 0.005 },
                 policy: SchedPolicy::Fifo,
                 service_estimate_secs: 0.0,
+                estimator: None,
             },
         );
         s.enqueue(req(0, 0), 0.0);
@@ -667,6 +734,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 3, max_wait_secs: 60.0 },
                 policy: SchedPolicy::Fifo,
                 service_estimate_secs: 0.0,
+                estimator: None,
             },
         );
         for i in 0..3 {
@@ -691,6 +759,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 2, max_wait_secs: 0.1 },
                 policy: SchedPolicy::Fifo,
                 service_estimate_secs: 0.005,
+                estimator: None,
             },
         );
         for i in 0..10u64 {
@@ -705,6 +774,71 @@ mod tests {
             );
         }
         assert!(plan.report.mean_wait_secs > 0.0);
+    }
+
+    #[test]
+    fn per_batch_estimator_replaces_flat_service_knob() {
+        // An estimator pricing each batch by its size: releases must be
+        // spaced by the per-batch estimate (0.004s/request), the flat
+        // knob must be ignored, and retrieval must be forced so the
+        // estimator sees the chunk sets.
+        struct PerRequest;
+        impl ServiceEstimator for PerRequest {
+            fn batch_secs(&self, reqs: &[RagRequest], retrieved: &[Vec<ChunkId>]) -> f64 {
+                assert_eq!(retrieved.len(), reqs.len(), "estimator must see retrieval");
+                0.004 * reqs.len() as f64
+            }
+        }
+        let corpus = Corpus::generate(4, 64, 4, 1);
+        let (_d, ctx) = golden_ctx(&corpus, 0, 1);
+        let mut s = Scheduler::new(
+            ctx,
+            SchedOptions {
+                batch: BatchPolicy { max_batch: 2, max_wait_secs: 0.0 },
+                policy: SchedPolicy::Fifo,
+                service_estimate_secs: 99.0, // must be ignored
+                estimator: Some(Arc::new(PerRequest)),
+            },
+        );
+        for i in 0..5u64 {
+            s.enqueue(req(i, 0), 0.0);
+        }
+        let plan = s.plan();
+        assert_eq!(plan.batches.len(), 3); // 2 + 2 + 1
+        // batch 0 at 0, then +0.008 per full batch released before it
+        assert!((plan.batches[0].release_secs - 0.0).abs() < 1e-12);
+        assert!((plan.batches[1].release_secs - 0.008).abs() < 1e-12);
+        assert!((plan.batches[2].release_secs - 0.016).abs() < 1e-12);
+        // forced retrieval populated every batch
+        assert!(plan.batches.iter().all(|b| b.retrieved.len() == b.reqs.len()));
+    }
+
+    #[test]
+    fn planned_batches_carry_arrivals() {
+        let corpus = Corpus::generate(4, 64, 4, 1);
+        let (_d, ctx) = golden_ctx(&corpus, 0, 1);
+        let mut s = Scheduler::new(
+            ctx,
+            SchedOptions {
+                batch: BatchPolicy { max_batch: 2, max_wait_secs: 0.001 },
+                policy: SchedPolicy::Fifo,
+                service_estimate_secs: 0.0,
+                estimator: None,
+            },
+        );
+        s.enqueue(req(0, 0), 0.000);
+        s.enqueue(req(1, 1), 0.0005);
+        s.enqueue(req(2, 2), 1.0);
+        let plan = s.plan();
+        assert_eq!(plan.batches.len(), 2);
+        assert_eq!(plan.batches[0].arrivals, vec![0.000, 0.0005]);
+        assert_eq!(plan.batches[1].arrivals, vec![1.0]);
+        for b in &plan.batches {
+            assert_eq!(b.arrivals.len(), b.reqs.len());
+            for &a in &b.arrivals {
+                assert!(a <= b.release_secs + 1e-12, "arrival after release");
+            }
+        }
     }
 
     #[test]
@@ -875,6 +1009,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.02 },
                 policy: SchedPolicy::TierAffinity { max_age_batches: 4 },
                 service_estimate_secs: 0.01,
+                estimator: None,
             },
         );
         s.enqueue_timed(trace);
@@ -898,6 +1033,59 @@ mod tests {
         assert_eq!(agg.load_reads + agg.cache_hits, 24 * 2);
         assert!(agg.cache_hits > 0, "skewed repeat traffic must reuse the tier");
         assert_eq!(agg.shard_reads.iter().sum::<u64>() as usize, agg.load_reads);
+    }
+
+    #[test]
+    fn fleet_dispatch_deterministic_on_poisson_zipf_trace() {
+        // Satellite: same fixed Poisson×Zipf trace + same fleet spec →
+        // identical per-worker assignment and identical p50/p95/p99 on
+        // the virtual clock, run to run (the whole pipeline — arrivals,
+        // plan, dispatch — is deterministic by construction).
+        use crate::coordinator::fleet::{Fleet, FleetCostModel, FleetSpec, Routing};
+        use crate::hwsim::{ArchSpec, StorageProfile};
+        let corpus = Corpus::generate(16, 64, 16, 3);
+        let (_d, ctx) = golden_ctx(&corpus, 32 << 20, 1);
+        let mut gen = ArrivalGen::new(
+            TurboRagProfile { top_k: 2, query_tokens: 12.0, output_tokens: 4 },
+            corpus.n_topics,
+            1.1,
+            150.0,
+            9,
+        );
+        let trace = gen.take(&corpus, 32);
+        let mut s = Scheduler::new(
+            ctx.clone(),
+            SchedOptions {
+                batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.02 },
+                policy: SchedPolicy::Fifo,
+                service_estimate_secs: 0.0,
+                estimator: None,
+            },
+        );
+        s.enqueue_timed(trace);
+        let plan = s.plan_with_retrieval();
+        let model = FleetCostModel {
+            arch: ArchSpec::llama_70b(),
+            storage: StorageProfile::ssd_9100pro(),
+            chunk_tokens: DOC_TOKENS,
+            query_tokens: 12,
+            chunk_step: 256,
+        };
+        let run = || {
+            let mut fleet = Fleet::new(
+                &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+                Routing::RoleAware,
+                model.clone(),
+            );
+            fleet.seed_resident(&ctx.kv.resident_set());
+            fleet.dispatch(&plan.batches, &|id| ctx.kv.contains(id))
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.assignments, b.assignments, "per-worker assignment must replay");
+        assert_eq!(a.latency, b.latency, "percentiles must replay");
+        assert!(a.latency.p50 <= a.latency.p95 && a.latency.p95 <= a.latency.p99);
+        assert!(a.latency.p99 > 0.0, "completions happen strictly after arrivals");
+        assert_eq!(a.requests, 32, "every queued request dispatched exactly once");
     }
 
     #[test]

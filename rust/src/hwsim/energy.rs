@@ -51,12 +51,15 @@ pub struct EnergyReport {
 
 impl EnergyMeter {
     pub fn h100_server(storage: StorageProfile) -> Self {
-        EnergyMeter {
-            system_idle_w: 550.0,
-            gpu: DeviceProfile::h100(),
-            storage,
-            phases: Vec::new(),
-        }
+        Self::server_for(DeviceProfile::h100(), storage)
+    }
+
+    /// Meter for a server anchored by `gpu`: the idle floor comes from
+    /// the profile's `host_idle_w` (550 W for the paper's H100 box,
+    /// desktop-class for a 4090). The fleet simulator builds one of
+    /// these per worker so each box integrates its own draw.
+    pub fn server_for(gpu: DeviceProfile, storage: StorageProfile) -> Self {
+        EnergyMeter { system_idle_w: gpu.host_idle_w, gpu, storage, phases: Vec::new() }
     }
 
     pub fn new(system_idle_w: f64, gpu: DeviceProfile, storage: StorageProfile) -> Self {
@@ -162,6 +165,22 @@ mod tests {
         let r = m.system_report();
         assert_eq!(r.time_s, 0.0);
         assert_eq!(r.total_kj, 0.0);
+    }
+
+    #[test]
+    fn server_for_uses_the_profile_idle_floor() {
+        let h100 = EnergyMeter::server_for(DeviceProfile::h100(), StorageProfile::ssd_pm9a3());
+        assert_eq!(h100.system_idle_w, DeviceProfile::h100().host_idle_w);
+        // a 4090 box: same work, far fewer joules at idle and at load —
+        // the arithmetic the fleet's tokens-per-joule claim rests on
+        let mut desktop =
+            EnergyMeter::server_for(DeviceProfile::rtx4090(), StorageProfile::ssd_pm9a3());
+        let mut server = EnergyMeter::h100_server(StorageProfile::ssd_pm9a3());
+        for m in [&mut desktop, &mut server] {
+            m.record(PhaseKind::GpuCompute, 2.0);
+            m.record(PhaseKind::HostIdle, 1.0);
+        }
+        assert!(desktop.system_report().total_kj < server.system_report().total_kj);
     }
 
     #[test]

@@ -25,6 +25,15 @@ pub struct DeviceProfile {
     pub power_active: f64,
     /// Idle power draw, watts.
     pub power_idle: f64,
+    /// Whole-server idle floor of the box this device anchors, watts
+    /// (the H100 lives in a dual-socket server — paper: 550 W — while a
+    /// 4090 sits in a desktop-class chassis). Drives the per-worker
+    /// [`super::EnergyMeter`]s of the fleet simulator.
+    pub host_idle_w: f64,
+    /// Device memory capacity, bytes. Bounds the fleet workers'
+    /// device-resident KV model: weights stay pinned, the remainder
+    /// holds loaded KV chunks.
+    pub hbm_bytes: f64,
     /// Street price, dollars.
     pub price_usd: f64,
 }
@@ -70,6 +79,8 @@ impl DeviceProfile {
                              // there reconciles Fig 5 with Table IV)
             power_active: 350.0, // paper: power cap reached in all configs
             power_idle: 50.0,
+            host_idle_w: 550.0, // paper: the H100 server's IPMI idle floor
+            hbm_bytes: 80e9,
             price_usd: 50_000.0,
         }
     }
@@ -90,6 +101,8 @@ impl DeviceProfile {
             membw_util: 0.6,
             power_active: 320.0,
             power_idle: 20.0,
+            host_idle_w: 120.0, // desktop-class chassis (the Fig-10 box)
+            hbm_bytes: 24e9,
             price_usd: 1_600.0,
         }
     }
@@ -107,6 +120,8 @@ impl DeviceProfile {
             membw_util: 0.5,
             power_active: 180.0,
             power_idle: 90.0,
+            host_idle_w: 150.0,
+            hbm_bytes: 64e9,
             price_usd: 5_000.0,
         }
     }
@@ -208,7 +223,29 @@ pub fn q8_dequant_secs(q8_bytes: f64) -> f64 {
     q8_bytes / Q8_DEQUANT_BYTES_PER_SEC
 }
 
-/// One row of the Fig-1 cost/performance trend catalog.
+/// Modeled host-side throughput of the f32 → q8 quantization pass paid
+/// when a chunk *enters* the warm tier (demote-on-evict, a direct q8
+/// admission, or a prefetch parked there), in q8 payload bytes/second.
+///
+/// Quantization is the mirror image of the dequant pass — one
+/// scale-multiply per element over streamed planes, with the wide side
+/// of the traffic (4 f32 bytes per element) on the read instead of the
+/// write — so it is memory-bound at the same effective bandwidth and
+/// shares the dequant constant. Demotion and promotion therefore charge
+/// **symmetrically** in simulated time, which keeps the warm tier's
+/// modeled round trip (quantize in, dequantize out) honest instead of
+/// letting demotions look free.
+pub const Q8_QUANT_BYTES_PER_SEC: f64 = Q8_DEQUANT_BYTES_PER_SEC;
+
+/// Modeled seconds to quantize a chunk whose q8 payload is `q8_bytes`
+/// (see [`Q8_QUANT_BYTES_PER_SEC`]).
+pub fn q8_quant_secs(q8_bytes: f64) -> f64 {
+    q8_bytes / Q8_QUANT_BYTES_PER_SEC
+}
+
+/// One row of a GPU catalog: the Fig-1 cost/performance trend
+/// ([`CATALOG_GPUS`]) and the serving simulator's device menu
+/// ([`SERVING_GPUS`]) share this shape.
 #[derive(Debug, Clone)]
 pub struct GpuCatalogRow {
     pub year: u32,
@@ -216,6 +253,42 @@ pub struct GpuCatalogRow {
     pub tflops_f16: f64,
     pub price_usd: f64,
     pub tdp_w: f64,
+}
+
+impl GpuCatalogRow {
+    /// The calibrated [`DeviceProfile`] for this row, when the serving
+    /// simulator has one. `None` for trend-only rows (V100/A100/H200):
+    /// they have no measured-stack calibration to run a fleet on.
+    pub fn device_profile(&self) -> Option<DeviceProfile> {
+        match self.name {
+            "H100" => Some(DeviceProfile::h100()),
+            "RTX4090" => Some(DeviceProfile::rtx4090()),
+            _ => None,
+        }
+    }
+}
+
+/// The serving simulator's device menu: every GPU class a fleet worker
+/// can wrap, with the *paper-config* price/power (the trend catalog
+/// above carries launch specs instead — the H100 rows differ on
+/// purpose). `fig10_gpu_class`, the fleet spec parser and the CLI all
+/// resolve device names here, so there is exactly one place a GPU class
+/// is defined; a unit test pins each row to its calibrated profile so
+/// the two can never drift apart.
+pub const SERVING_GPUS: &[GpuCatalogRow] = &[
+    GpuCatalogRow { year: 2022, name: "H100", tflops_f16: 989.0, price_usd: 50_000.0, tdp_w: 350.0 },
+    GpuCatalogRow { year: 2022, name: "RTX4090", tflops_f16: 165.0, price_usd: 1_600.0, tdp_w: 320.0 },
+];
+
+/// Look up a serving-catalog row by (case-insensitive) device name.
+pub fn gpu_by_name(name: &str) -> Option<&'static GpuCatalogRow> {
+    SERVING_GPUS.iter().find(|r| r.name.eq_ignore_ascii_case(name))
+}
+
+/// The calibrated serving profile for a device name, via the catalog
+/// (the one constructor fleet specs and benches share).
+pub fn serving_profile(name: &str) -> Option<DeviceProfile> {
+    gpu_by_name(name).and_then(GpuCatalogRow::device_profile)
 }
 
 /// GPU generations 2017-2024 (dense f16 TFLOPs, launch street price).
@@ -296,6 +369,48 @@ mod tests {
         let flash = StorageProfile::ssd_9100pro().read_secs(f32_bytes / 2); // f16 file
         assert!(q8 > 0.0);
         assert!(q8 < flash, "dequant {q8} must undercut the flash read {flash}");
+    }
+
+    #[test]
+    fn quant_charges_symmetrically_to_dequant() {
+        // The warm tier's modeled round trip: parking a chunk (quantize)
+        // costs exactly what serving it back (dequantize) does — and
+        // both stay far cheaper than the flash read they stand in for.
+        let q8_bytes = 2e6;
+        assert_eq!(q8_quant_secs(q8_bytes), q8_dequant_secs(q8_bytes));
+        assert!(q8_quant_secs(q8_bytes) > 0.0);
+        let flash = StorageProfile::ssd_9100pro().read_secs(4 * q8_bytes as usize / 2);
+        assert!(q8_quant_secs(q8_bytes) < flash);
+    }
+
+    #[test]
+    fn serving_catalog_resolves_calibrated_profiles() {
+        // Case-insensitive name → catalog row → calibrated profile; the
+        // row's price/power must match the profile bit-for-bit so the
+        // catalog can never drift from the calibration it names.
+        for row in SERVING_GPUS {
+            let p = row.device_profile().expect("every serving row has a profile");
+            assert_eq!(p.name, row.name);
+            assert_eq!(p.price_usd, row.price_usd, "{} price drifted", row.name);
+            assert_eq!(p.power_active, row.tdp_w, "{} power drifted", row.name);
+            assert_eq!(p.peak_flops, row.tflops_f16 * 1e12, "{} flops drifted", row.name);
+        }
+        assert_eq!(serving_profile("h100").unwrap(), DeviceProfile::h100());
+        assert_eq!(serving_profile("RTX4090").unwrap(), DeviceProfile::rtx4090());
+        assert_eq!(serving_profile("rtx4090").unwrap().name, "RTX4090");
+        assert!(serving_profile("TPUv9").is_none());
+        // trend-only rows exist in the Fig-1 catalog but not the menu
+        assert!(gpu_by_name("V100").is_none());
+    }
+
+    #[test]
+    fn host_idle_floors_follow_server_class() {
+        // The fleet's energy story rests on this ordering: the H100 box
+        // idles at server-class wattage, the 4090 at desktop-class.
+        let h = DeviceProfile::h100();
+        let r = DeviceProfile::rtx4090();
+        assert!(h.host_idle_w > 3.0 * r.host_idle_w, "{} vs {}", h.host_idle_w, r.host_idle_w);
+        assert!(h.hbm_bytes > r.hbm_bytes);
     }
 
     #[test]

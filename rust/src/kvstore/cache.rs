@@ -65,6 +65,9 @@ pub struct CacheSample {
     /// Modeled seconds spent dequantizing q8 hits (warm tier only; the
     /// hot tier serves f32 and leaves this 0).
     pub dequant_secs: f64,
+    /// Modeled seconds spent quantizing chunks *into* the q8 tier
+    /// (demotions and direct admissions; symmetric to `dequant_secs`).
+    pub quant_secs: f64,
     pub resident_bytes: u64,
     pub resident_chunks: u64,
 }
@@ -77,7 +80,8 @@ impl CacheSample {
         format!(
             "{{\"tier\":\"{}\",\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
              \"prefetch_inserts\":{},\"prefetch_hits\":{},\"prefetch_rejected\":{},\
-             \"dequant_secs\":{:.6},\"resident_bytes\":{},\"resident_chunks\":{}}}",
+             \"dequant_secs\":{:.6},\"quant_secs\":{:.6},\"resident_bytes\":{},\
+             \"resident_chunks\":{}}}",
             self.tier.label(),
             self.hits,
             self.misses,
@@ -87,6 +91,7 @@ impl CacheSample {
             self.prefetch_hits,
             self.prefetch_rejected,
             self.dequant_secs,
+            self.quant_secs,
             self.resident_bytes,
             self.resident_chunks
         )
@@ -127,6 +132,10 @@ pub struct CacheStats {
     /// shard stats' device clocks — while staying nonzero even for the
     /// tiny chunks unit tests dequantize).
     pub dequant_ns: AtomicU64,
+    /// Modeled quantization nanoseconds charged to chunks entering the
+    /// q8 tier — demote-on-evict, direct q8 admissions, and prefetches
+    /// parked in warm. The symmetric twin of `dequant_ns`.
+    pub quant_ns: AtomicU64,
     /// Sampled cumulative snapshots ([`CacheStats::record_sample`]).
     series: Mutex<Vec<CacheSample>>,
 }
@@ -147,6 +156,16 @@ impl CacheStats {
         self.dequant_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Charge modeled quantization time (chunk entering the q8 tier).
+    pub fn add_quant_secs(&self, secs: f64) {
+        self.quant_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total modeled quantization seconds charged so far.
+    pub fn quant_secs(&self) -> f64 {
+        self.quant_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
     /// Hits / (hits + misses); 0 when the tier was never consulted.
     pub fn hit_ratio(&self) -> f64 {
         let h = self.hits.load(Ordering::Relaxed) as f64;
@@ -164,6 +183,7 @@ impl CacheStats {
         CacheSample {
             tier: self.tier,
             dequant_secs: self.dequant_secs(),
+            quant_secs: self.quant_secs(),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             insertions: self.insertions.load(Ordering::Relaxed),
@@ -771,10 +791,13 @@ mod tests {
         // warm-tagged stats serialize distinguishably
         let warm = CacheStats::for_tier(TierKind::Warm);
         warm.add_dequant_secs(0.25);
+        warm.add_quant_secs(0.125);
         let snap = warm.snapshot(0, 0);
         assert_eq!(snap.tier, TierKind::Warm);
         assert!((snap.dequant_secs - 0.25).abs() < 1e-6);
+        assert!((snap.quant_secs - 0.125).abs() < 1e-6);
         assert!(snap.to_json().contains("\"tier\":\"warm\""));
+        assert!(snap.to_json().contains("\"quant_secs\":0.125"));
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub use cache::{series_to_json, CacheSample, CacheStats, DemoteSink, HotTier, Pr
 pub use quant::{dequantize, quantize, QuantChunk};
 pub use shard::{route, Shard, ShardStats};
 pub use store::{
-    KvChunk, KvFormat, KvStore, Loaded, PrefetchReport, ShardedKvStore, StoreStats,
+    KvChunk, KvFormat, KvStore, Loaded, PrefetchReport, ResidentSet, ShardedKvStore, StoreStats,
 };
 pub use throttle::DeviceThrottle;
 pub use warm::{WarmProbe, WarmTier};

@@ -12,6 +12,7 @@
 //!   write format; decode dispatches on the version word, so stores
 //!   holding a mix of v1 and v2 files serve both transparently.
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -180,9 +181,51 @@ pub struct Loaded {
     /// elsewhere, including for in-call duplicates of a warm hit — the
     /// dequantized chunk is shared, not re-decoded).
     pub dequant_secs: f64,
+    /// Modeled f32→q8 quantization seconds this load paid admitting its
+    /// chunk into the warm tier (warm-only stores and chunks oversize
+    /// for the hot tier; 0 elsewhere — demote-on-evict quantization is
+    /// charged to the *evicting* tier's [`super::CacheStats`], not to
+    /// the load that triggered it).
+    pub quant_secs: f64,
     /// Index of the shard this chunk routes to (for a hit: the device
     /// read the hit avoided).
     pub shard: usize,
+}
+
+/// Point-in-time snapshot of DRAM residency, split by tier — the
+/// routing input of the fleet dispatcher
+/// ([`crate::coordinator::fleet::Fleet`]): a chunk in either set can be
+/// served without a storage-device read (warm residents additionally
+/// owe a dequant pass), so batches made of resident chunks are safe to
+/// route to low-end decode workers. Like [`KvStore::resident_ids`] this
+/// is advisory — residency can change the moment the snapshot returns.
+#[derive(Debug, Clone, Default)]
+pub struct ResidentSet {
+    /// Ids resident in the f32 hot tier.
+    pub hot: HashSet<ChunkId>,
+    /// Ids resident in the q8 warm tier.
+    pub warm: HashSet<ChunkId>,
+}
+
+impl ResidentSet {
+    /// Is `id` resident in either DRAM tier?
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.hot.contains(&id) || self.warm.contains(&id)
+    }
+
+    /// Total resident ids (a promote in flight can briefly double-list
+    /// an id; the union collapses it).
+    pub fn len(&self) -> usize {
+        if self.warm.is_empty() {
+            self.hot.len()
+        } else {
+            self.hot.union(&self.warm).count()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hot.is_empty() && self.warm.is_empty()
+    }
 }
 
 /// Outcome of a [`KvStore::prefetch_many`] pass. Prefetch is strictly
@@ -195,7 +238,10 @@ pub struct PrefetchReport {
     pub requested: usize,
     /// Already resident in the hot tier — nothing to do.
     pub already_resident: usize,
-    /// Read from flash and admitted to the hot tier.
+    /// Read from flash and admitted to a DRAM tier: the hot tier, or —
+    /// when its protected admission refused the chunk, in a warm-only
+    /// store, or for a chunk oversize for hot — parked as q8 in the
+    /// warm tier (demote-on-prefetch-reject).
     pub warmed: usize,
     /// Missing/unreadable on flash — left for the demand path to surface.
     pub absent: usize,
@@ -423,6 +469,16 @@ impl KvStore {
         self.warm.as_deref().map(WarmTier::resident_ids).unwrap_or_default()
     }
 
+    /// Per-tier residency snapshot (see [`ResidentSet`]) — what the
+    /// fleet's routing policy consumes to tell KV-resident batches from
+    /// cache-miss ones.
+    pub fn resident_set(&self) -> ResidentSet {
+        ResidentSet {
+            hot: self.hot_resident_ids().into_iter().collect(),
+            warm: self.warm_resident_ids().into_iter().collect(),
+        }
+    }
+
     /// On-disk size of `chunk` in the store's current write format.
     pub fn encoded_bytes(&self, chunk: &KvChunk) -> usize {
         chunk.file_bytes(self.format)
@@ -632,6 +688,7 @@ impl KvStore {
             from_cache: true,
             from_warm: true,
             dequant_secs,
+            quant_secs: 0.0,
             shard,
         }
     }
@@ -685,6 +742,7 @@ impl KvStore {
                                 from_cache: true,
                                 from_warm: false,
                                 dequant_secs: 0.0,
+                                quant_secs: 0.0,
                                 shard: shard_idx,
                             });
                         }
@@ -724,6 +782,7 @@ impl KvStore {
                     self.stats.reads.fetch_add(1, Ordering::Relaxed);
                     self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
                     let chunk = Arc::new(Self::decode(&data)?);
+                    let mut quant_secs = 0.0;
                     match &self.hot {
                         // Fill the hot tier; overflow demotes into the
                         // warm tier through the eviction sink.
@@ -735,11 +794,13 @@ impl KvStore {
                         // before the demote sink fires): park the q8
                         // copy in the warm tier directly, gen-guarded
                         // like any admission whose bytes were read
-                        // outside the tier's lock.
+                        // outside the tier's lock. The quantize pass is
+                        // charged to this load in simulated time.
                         _ => {
                             if let Some(warm) = &self.warm {
-                                let q = Arc::new(quant::quantize(&chunk));
-                                warm.admit(id, q, data.len(), false, warm_gen);
+                                quant_secs = warm
+                                    .quantize_admit(id, &chunk, data.len(), false, warm_gen)
+                                    .1;
                             }
                         }
                     }
@@ -750,6 +811,7 @@ impl KvStore {
                         from_cache: false,
                         from_warm: false,
                         dequant_secs: 0.0,
+                        quant_secs,
                         shard: shard_idx,
                     });
                 }
@@ -768,6 +830,7 @@ impl KvStore {
                         from_cache: true,
                         from_warm: false,
                         dequant_secs: 0.0,
+                        quant_secs: 0.0,
                         shard,
                     });
                 }
@@ -835,18 +898,28 @@ impl KvStore {
                     continue;
                 }
             };
+            // Park `chunk` in `w` via the tier's one quantize+charge+
+            // admit entry point — the warm-side admission every non-hot
+            // prefetch outcome funnels through.
+            let admit_warm = |w: &Arc<WarmTier>, chunk: &Arc<KvChunk>| {
+                w.quantize_admit(id, chunk, data.len(), true, warm_gen).0
+            };
             let admitted = match (&hot, &warm) {
                 // A chunk the hot tier could never admit goes straight
                 // to the warm tier (quantized) instead of being dropped.
-                (Some(h), Some(w)) if chunk.dram_bytes() > h.budget() => {
-                    let q = Arc::new(quant::quantize(&chunk));
-                    w.admit(id, q, data.len(), true, warm_gen)
+                (Some(h), Some(w)) if chunk.dram_bytes() > h.budget() => admit_warm(w, &chunk),
+                (Some(hot), w) => {
+                    // Demote-on-prefetch-reject: when the protected
+                    // admission path refuses the chunk (the hot tier is
+                    // full of demand residents a prefetch must not
+                    // displace), park the q8 copy in the warm tier —
+                    // generation-guarded via the warm generation
+                    // captured before the read — instead of discarding
+                    // a device read the demand path will just repeat.
+                    hot.insert_prefetch(id, chunk.clone(), data.len(), hot_gen)
+                        || w.as_ref().is_some_and(|w| admit_warm(w, &chunk))
                 }
-                (Some(hot), _) => hot.insert_prefetch(id, chunk, data.len(), hot_gen),
-                (None, Some(warm)) => {
-                    let q = Arc::new(quant::quantize(&chunk));
-                    warm.admit(id, q, data.len(), true, warm_gen)
-                }
+                (None, Some(w)) => admit_warm(w, &chunk),
                 (None, None) => unreachable!("early return above"),
             };
             if admitted {
@@ -1369,10 +1442,120 @@ mod tests {
         assert_eq!(warm.stats.prefetch_hits.load(Ordering::Relaxed), 1);
         assert!(s.hot_tier().unwrap().contains(1));
 
-        // as a demand resident, 1 is now protected from prefetch eviction
+        // as a demand resident, 1 is now protected from prefetch
+        // eviction — the refused prefetch parks in the warm tier
+        // instead of dropping (demote-on-prefetch-reject)
         let rep = s.prefetch_many(&[3]);
-        assert_eq!(rep.rejected, 1, "prefetch displaced a demand-promoted chunk");
+        assert_eq!(rep.warmed, 1, "refused hot admission must park in warm: {rep:?}");
+        assert_eq!(rep.rejected, 0);
         assert!(s.hot_tier().unwrap().contains(1));
+        assert!(warm.contains(3));
+    }
+
+    #[test]
+    fn prefetch_reject_demotes_into_warm() {
+        // Satellite: a hot tier full of demand residents refuses the
+        // prefetch admission (protection semantics unchanged — the
+        // hot-tier stats still record the refusal), but the chunk parks
+        // in the warm tier instead of wasting the device read, and the
+        // demand load then serves from DRAM.
+        let (_d, s) = warm_store(f32_cost(), 64 << 20);
+        s.store_sync(1, &flat_chunk(127.0, 8)).unwrap();
+        s.store_sync(2, &flat_chunk(254.0, 8)).unwrap();
+        s.load(1).unwrap(); // demand-resident, fills the whole hot budget
+        let rep = s.prefetch_many(&[2]);
+        assert_eq!(rep.warmed, 1, "{rep:?}");
+        assert_eq!(rep.rejected, 0);
+        assert!(s.hot_tier().unwrap().contains(1), "demand resident displaced");
+        assert!(!s.hot_tier().unwrap().contains(2));
+        assert!(s.warm_tier().unwrap().contains(2));
+        assert_eq!(
+            s.hot_tier().unwrap().stats.prefetch_rejected.load(Ordering::Relaxed),
+            1,
+            "the hot-side refusal is still recorded"
+        );
+        // quantize-on-demote charged in simulated time (satellite 2)
+        assert!(s.warm_tier().unwrap().stats.quant_secs() > 0.0);
+        // the demand load is a warm hit: no second device read
+        let reads = s.stats.reads.load(Ordering::Relaxed);
+        let l = s.load(2).unwrap();
+        assert!(l.from_warm, "parked prefetch must serve the demand load");
+        assert_eq!(*l.chunk, flat_chunk(254.0, 8));
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), reads);
+        // prefetch class survived the park: the hit converts it
+        assert_eq!(s.warm_tier().unwrap().stats.prefetch_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn prefetch_reject_without_warm_still_drops() {
+        // No warm tier: the pre-satellite behavior is unchanged.
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-rejdrop").unwrap();
+        let mut s = KvStore::open(dir.path(), StorageProfile::ssd_9100pro()).unwrap();
+        s.disable_throttle();
+        s.set_hot_tier(f32_cost());
+        s.store_sync(1, &flat_chunk(127.0, 8)).unwrap();
+        s.store_sync(2, &flat_chunk(254.0, 8)).unwrap();
+        s.load(1).unwrap();
+        let rep = s.prefetch_many(&[2]);
+        assert_eq!(rep.rejected, 1, "{rep:?}");
+        assert_eq!(rep.warmed, 0);
+        assert!(!s.load(2).unwrap().from_cache);
+    }
+
+    #[test]
+    fn rejected_prefetch_park_is_generation_guarded() {
+        // A delete landing while the to-be-parked chunk's read was in
+        // flight must bounce the warm admission — same guard as any
+        // other warm-side park.
+        let (_d, s) = warm_store(f32_cost(), 64 << 20);
+        s.store_sync(1, &flat_chunk(127.0, 8)).unwrap();
+        s.store_sync(2, &flat_chunk(254.0, 8)).unwrap();
+        s.load(1).unwrap();
+        s.prefetch_many(&[2]);
+        assert!(s.warm_tier().unwrap().contains(2));
+        s.delete(2).unwrap();
+        assert!(!s.warm_tier().unwrap().contains(2), "delete must sweep the parked copy");
+        assert!(s.load(2).is_err());
+    }
+
+    #[test]
+    fn warm_only_miss_charges_quantize_on_the_load() {
+        // Direct q8 admission (warm-only store): the cold load pays the
+        // modeled quantize pass, carried on Loaded and mirrored in the
+        // tier's CacheStats; the warm hit afterwards pays dequant only.
+        let (_d, s) = warm_store(0, 64 << 20);
+        s.store_sync(1, &flat_chunk(508.0, 8)).unwrap();
+        let cold = s.load(1).unwrap();
+        assert!(cold.quant_secs > 0.0, "cold admit must charge quantize");
+        assert_eq!(cold.dequant_secs, 0.0);
+        let warm = s.warm_tier().unwrap();
+        // the tier's clock is nanosecond-granular, so allow one tick
+        assert!((warm.stats.quant_secs() - cold.quant_secs).abs() <= 2e-9);
+        let hit = s.load(1).unwrap();
+        assert_eq!(hit.quant_secs, 0.0);
+        assert!(hit.dequant_secs > 0.0);
+        // symmetric charge: same q8 payload in, same payload out
+        assert!((cold.quant_secs - hit.dequant_secs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resident_set_splits_tiers() {
+        let (_d, s) = warm_store(2 * f32_cost(), 64 << 20);
+        assert!(s.resident_set().is_empty());
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(i as f32, 8)).unwrap();
+            s.load(i).unwrap();
+        }
+        // hot: {2, 3}, warm: {1} (same shape as resident_ids_union test)
+        let snap = s.resident_set();
+        assert!(snap.hot.contains(&2) && snap.hot.contains(&3));
+        assert!(snap.warm.contains(&1));
+        assert!(snap.contains(1) && snap.contains(2) && snap.contains(3));
+        assert!(!snap.contains(9));
+        assert_eq!(snap.len(), 3);
+        // the snapshot is a copy: later loads don't mutate it
+        s.load(1).unwrap();
+        assert!(snap.warm.contains(&1));
     }
 
     #[test]

@@ -202,6 +202,29 @@ impl WarmTier {
         }
     }
 
+    /// Quantize `chunk`, charge the modeled quantize pass
+    /// ([`crate::hwsim::profiles::q8_quant_secs`], symmetric to the
+    /// dequant a later hit pays) to this tier's clock, and admit the q8
+    /// copy (gen-guarded like [`WarmTier::admit`]). The **one entry
+    /// point** for f32 chunks entering the tier — demotions, direct
+    /// admissions on the load path, and prefetch parks — so the cost
+    /// accounting can never diverge between them. Returns whether `id`
+    /// is resident after the call, plus the charged quantize seconds.
+    pub fn quantize_admit(
+        &self,
+        id: ChunkId,
+        chunk: &KvChunk,
+        file_bytes: usize,
+        prefetched: bool,
+        seen_gen: u64,
+    ) -> (bool, f64) {
+        let q = Arc::new(quant::quantize(chunk));
+        let quant_secs = crate::hwsim::profiles::q8_quant_secs(q.q8_bytes() as f64);
+        self.stats.add_quant_secs(quant_secs);
+        let admitted = self.admit(id, q, file_bytes, prefetched, seen_gen);
+        (admitted, quant_secs)
+    }
+
     /// Admit a quantized chunk, evicting least-recently-used entries
     /// until the tier is back under budget (evicted q8 copies are
     /// dropped — this is the last DRAM rung; the flash file remains).
@@ -274,7 +297,9 @@ impl DemoteSink for WarmTier {
     /// Hot-tier budget evictions land here *after* the hot lock is
     /// released: the O(plane), memory-bound quantize pass never
     /// serializes concurrent hot-tier probes. Guarded by the generation
-    /// [`DemoteSink::prepare`] captured at eviction time.
+    /// [`DemoteSink::prepare`] captured at eviction time. Goes through
+    /// [`WarmTier::quantize_admit`], so demotion charges the simulated
+    /// quantize pass exactly like every other entry into the tier.
     fn demote(
         &self,
         id: ChunkId,
@@ -283,8 +308,7 @@ impl DemoteSink for WarmTier {
         prefetched: bool,
         seen_gen: u64,
     ) {
-        let q = Arc::new(quant::quantize(chunk));
-        self.admit(id, q, file_bytes, prefetched, seen_gen);
+        self.quantize_admit(id, chunk, file_bytes, prefetched, seen_gen);
     }
 }
 
@@ -445,6 +469,10 @@ mod tests {
         let chunk = kvchunk(127.0);
         tier.demote(7, &chunk, 512, false, tier.prepare(7));
         assert!(tier.contains(7));
+        // quantize-on-demote is charged in simulated time, symmetric to
+        // the dequant a promotion would pay on the same q8 payload
+        let quant = tier.stats.quant_secs();
+        assert!(quant > 0.0, "demotion must charge the quantize pass");
         match tier.probe(7, Some(usize::MAX)) {
             WarmProbe::Hit { q, file_bytes, .. } => {
                 assert_eq!(file_bytes, 512);

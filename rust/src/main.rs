@@ -10,8 +10,8 @@ use anyhow::Result;
 
 use matkv::coordinator::baselines::cacheblend_mode;
 use matkv::coordinator::{
-    BatchPolicy, Engine, EngineOptions, ExecOptions, OverlapOptions, SchedOptions, SchedPolicy,
-    Scheduler, ServeMode,
+    execute_schedule, BatchPolicy, Engine, EngineOptions, ExecOptions, Fleet, FleetCostModel,
+    FleetSpec, OverlapOptions, Routing, SchedOptions, SchedPolicy, Scheduler, ServeMode,
 };
 use matkv::hwsim::economics::fig1_trend;
 use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
@@ -41,7 +41,16 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --service-ms N (modeled executor seconds per batch; builds
                            the backlog continuous batching selects from)
                --max-age-batches N (affinity: force-include a request
-                           passed over N times, default 8)";
+                           passed over N times, default 8)
+               --fleet SPEC (simulate dispatching the planned schedule
+                           across a heterogeneous worker pool, e.g.
+                           h100:1,rtx4090:3 — names from the serving
+                           catalog; emits per-worker utilization, energy
+                           and latency percentiles on the virtual clock)
+               --routing rr|role (with --fleet: round-robin baseline, or
+                           role-aware — KV-resident batches to low-end
+                           decode workers, cache-miss/prefill-heavy ones
+                           to the high-end card; default rr)";
 
 fn storage_profile(name: &str) -> Result<StorageProfile> {
     Ok(match name {
@@ -109,6 +118,15 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
 
+    let fleet_spec = match args.opt("fleet") {
+        Some(s) => Some(FleetSpec::parse(s)?),
+        None => None,
+    };
+    let routing = Routing::parse(&args.str("routing", "rr"))?;
+    if args.opt("routing").is_some() && fleet_spec.is_none() {
+        anyhow::bail!("--routing selects a fleet dispatch policy; it requires --fleet");
+    }
+
     let m = Manifest::load(matkv::artifacts_dir())?;
     let corpus = Corpus::generate(docs, doc_tokens, docs.min(16), 42);
     let _tmp;
@@ -149,6 +167,25 @@ fn serve(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown mode {other}"),
     };
 
+    // The fleet simulator (and its per-batch service estimator) costs
+    // work at the stand-in architecture scale, over the same storage
+    // profile the store throttles to.
+    let arch = ArchSpec::standin_for(&config);
+    let storage = storage_profile(&args.str("storage", "9100pro"))?;
+    let mut fleet = fleet_spec.as_ref().map(|spec| {
+        Fleet::new(
+            spec,
+            routing,
+            FleetCostModel {
+                arch: arch.clone(),
+                storage: storage.clone(),
+                chunk_tokens: doc_tokens,
+                query_tokens: 20,
+                chunk_step: engine.opts.chunk_step,
+            },
+        )
+    });
+
     // Every serve path goes through the scheduler: a queue of (possibly
     // simulated-Poisson) arrivals, a size-or-timeout release condition,
     // and a batch-formation policy.
@@ -161,6 +198,18 @@ fn serve(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown scheduling policy {other}"),
     };
     let rate = args.f64("arrival-rate", 0.0);
+    // With a fleet and no explicit --service-ms, the planner's release
+    // clock uses the fleet's per-batch cost model instead of a flat
+    // estimate (the backlog then drains at the fleet's modeled rate);
+    // the store answers which chunks are materialized, so cache-miss
+    // batches price as on-device recompute.
+    let estimator = match (&fleet, args.opt("service-ms")) {
+        (Some(f), None) => {
+            let kv = engine.kv.clone();
+            Some(f.service_estimator_with(std::sync::Arc::new(move |id| kv.contains(id))))
+        }
+        _ => None,
+    };
     let mut sched = Scheduler::new(
         engine.loader_ctx(),
         SchedOptions {
@@ -170,6 +219,7 @@ fn serve(args: &Args) -> Result<()> {
             },
             policy,
             service_estimate_secs: args.f64("service-ms", 0.0) / 1e3,
+            estimator,
         },
     );
     if rate > 0.0 {
@@ -185,7 +235,29 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         ExecOptions::sequential()
     };
-    let out = sched.run(&engine, serve_mode, &exec)?;
+    // Plan and execute separately so the fleet can dispatch the very
+    // schedule the engine serves (the plan needs retrieval when a fleet
+    // will price the batches). Both store snapshots — DRAM residency
+    // and the materialized-on-flash set — are taken BEFORE execution:
+    // the fleet must price this schedule against the store as it stood
+    // when the run started, not after the run itself filled the tiers
+    // (which would model a serve with no storage reads at all).
+    let schedule = if fleet.is_some() {
+        sched.plan_with_retrieval()
+    } else {
+        sched.plan_for_exec(&exec)
+    };
+    let resident_before = fleet.as_ref().map(|_| engine.kv.resident_set());
+    let materialized_before: Option<std::collections::HashSet<matkv::vectordb::ChunkId>> =
+        fleet.as_ref().map(|_| {
+            schedule
+                .batches
+                .iter()
+                .flat_map(|b| b.chunk_ids())
+                .filter(|&id| engine.kv.contains(id))
+                .collect()
+        });
+    let out = execute_schedule(&engine, &schedule, serve_mode, &exec)?;
 
     eprintln!(
         "[sched] policy={policy_name} {} batches ({} full / {} timeout releases), \
@@ -219,8 +291,6 @@ fn serve(args: &Args) -> Result<()> {
     let (responses, metrics) = (out.responses, out.metrics);
 
     let h100 = DeviceProfile::h100();
-    let arch = ArchSpec::standin_for(&config);
-    let storage = storage_profile(&args.str("storage", "9100pro"))?;
     println!("mode={mode_name} overlap={overlap} requests={} batch={batch}", responses.len());
     println!(
         "measured: total {:.2}s | retrieve {:.3}s | load {:.3}s | prefill {:.3}s | decode {:.3}s | {:.1} tok/s",
@@ -248,7 +318,7 @@ fn serve(args: &Args) -> Result<()> {
         use std::sync::atomic::Ordering::Relaxed;
         println!(
             "warm tier (q8, {:.0} MiB budget): {} hits / {} misses ({:.0}% hit), \
-             {:.1} MiB resident, {:.1} MiB device reads saved, dequant {:.3}s",
+             {:.1} MiB resident, {:.1} MiB device reads saved, dequant {:.3}s, quant {:.3}s",
             tier.budget() as f64 / MIB,
             tier.stats.hits.load(Relaxed),
             tier.stats.misses.load(Relaxed),
@@ -256,6 +326,7 @@ fn serve(args: &Args) -> Result<()> {
             tier.bytes() as f64 / MIB,
             tier.stats.bytes_saved.load(Relaxed) as f64 / MIB,
             tier.stats.dequant_secs(),
+            tier.stats.quant_secs(),
         );
     }
     if engine.kv.n_shards() > 1 {
@@ -284,6 +355,52 @@ fn serve(args: &Args) -> Result<()> {
         metrics.decode_secs_on(&arch, &h100),
         metrics.total_secs_on(&arch, &h100, &storage)
     );
+
+    // Fleet simulation: dispatch the exact schedule the engine just
+    // served across the worker pool on the virtual clock.
+    if let Some(fleet) = fleet.as_mut() {
+        fleet.seed_resident(&resident_before.unwrap_or_default());
+        let materialized = materialized_before.unwrap_or_default();
+        let rep = fleet.dispatch(&schedule.batches, &|id| materialized.contains(&id));
+        println!(
+            "fleet ({} workers, routing={}): {} prefill-heavy / {} KV-resident batches, \
+             makespan {:.2}s (virtual), {:.1} tok/s, {:.2} kJ, {:.4} tok/J",
+            rep.workers.len(),
+            rep.routing.label(),
+            rep.prefill_batches,
+            rep.decode_batches,
+            rep.makespan_secs,
+            rep.throughput(),
+            rep.total_kj,
+            rep.tokens_per_joule,
+        );
+        for (i, w) in rep.workers.iter().enumerate() {
+            println!(
+                "  worker {i:02} {:8} [{:7}]: {} batches / {} reqs / {} tokens | busy {:.2}s \
+                 ({:.0}% util) | load {:.3}s | transfer {:.3}s | {:.2} kJ",
+                w.name,
+                w.role.label(),
+                w.batches,
+                w.requests,
+                w.tokens_out,
+                w.busy_secs,
+                100.0 * w.utilization,
+                w.load_secs,
+                w.transfer_secs,
+                w.energy_kj,
+            );
+        }
+        let l = &rep.latency;
+        println!(
+            "  latency (virtual, arrival→completion): mean {:.1}ms | p50 {:.1}ms | \
+             p95 {:.1}ms | p99 {:.1}ms",
+            l.mean * 1e3,
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3,
+        );
+    }
+
     for r in responses.iter().take(2) {
         println!("  req {} -> {:?} (docs {:?})", r.request_id, r.text, r.retrieved);
     }

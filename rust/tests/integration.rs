@@ -371,6 +371,7 @@ fn scheduler_integrates_with_engine() {
             batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.0 },
             policy: SchedPolicy::Fifo,
             service_estimate_secs: 0.0,
+            estimator: None,
         },
     );
     sched.enqueue_now(requests(&corpus, 10, 1, 3));
@@ -399,6 +400,7 @@ fn affinity_scheduling_preserves_per_request_outputs() {
             batch: BatchPolicy { max_batch: 2, max_wait_secs: 0.0 },
             policy: SchedPolicy::TierAffinity { max_age_batches: 4 },
             service_estimate_secs: 0.0,
+            estimator: None,
         },
     );
     sched.enqueue_now(reqs.clone());
