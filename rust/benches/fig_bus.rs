@@ -1,0 +1,248 @@
+//! fig_bus — PCIe/DMA as a contended resource: tokens/s and tail
+//! latency vs offered load, with link queueing on vs off.
+//!
+//! The KV-offloading literature (PAPERS.md) argues the serving
+//! bottleneck is not flash bandwidth but the **interconnect**: once
+//! materialized KVs stream from storage through host DRAM into device
+//! memory, every batch's upload competes for the same PCIe lanes. The
+//! pre-refactor fleet charged transfers a flat `bytes / pcie_bw` that
+//! could never queue — concurrent uploads overlapped for free, so the
+//! modeled fleet saturated later than a real one would.
+//!
+//! This bench measures what that optimism hid. One Poisson×Zipf
+//! request stream per offered rate is planned once (the scheduler's
+//! release clock paced by the fleet's own estimator), then the
+//! identical schedule is dispatched twice through the same mixed fleet
+//! (1×H100 + 3×RTX4090, role-aware):
+//!
+//! * **contention on** (the new default) — each worker's H2D link
+//!   grants queued slots; back-to-back uploads wait behind each other;
+//! * **contention off** — links disabled: every transfer keeps its
+//!   wire time but the link never queues (the old flat-charge world).
+//!
+//! Traffic is deliberately transfer-dominant (large chunks, high
+//! top-k, 2-token outputs — the RAG short-answer regime where MatKV's
+//! splice path is all upload): at low offered load the two modes agree;
+//! at high load the contention-on run must show a **strictly positive
+//! tokens/s or p99 gap** and nonzero link queued-seconds (WARNING
+//! otherwise — CI asserts the queued-seconds via `bus_smoke.json`).
+//!
+//! Pure-rust: golden manifest retrieval, stand-in architecture costs,
+//! virtual clock. `--smoke` shrinks everything; `--json PATH` writes
+//! the document.
+
+use std::sync::Arc;
+
+use matkv::coordinator::engine::{EngineOptions, LoaderCtx, Retrieval};
+use matkv::coordinator::{
+    BatchPolicy, Fleet, FleetCostModel, FleetSpec, Routing, SchedOptions, SchedPolicy, Scheduler,
+};
+use matkv::hwsim::{ArchSpec, StorageProfile};
+use matkv::kvstore::KvStore;
+use matkv::manifest::Manifest;
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::workload::{ArrivalGen, Corpus, TimedRequest, TurboRagProfile};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let smoke = args.flag("smoke");
+    let n_docs = args.usize("docs", if smoke { 32 } else { 64 });
+    let requests = args.usize("requests", if smoke { 48 } else { 160 });
+    let batch = args.usize("batch", 8);
+    let skew = args.f64("skew", 1.1);
+    // Transfer-dominant knobs: paper-scale chunks, many per request,
+    // short outputs — the upload is the batch, not the decode.
+    let chunk_tokens = 1024usize;
+    let top_k = 8usize;
+    let output_tokens = 2usize;
+    let fleet_spec = "h100:1,rtx4090:3";
+    let rates: Vec<f64> =
+        if smoke { vec![50.0, 400.0] } else { vec![25.0, 100.0, 400.0] };
+
+    let m = Manifest::load_or_golden()?;
+    let cfg = m.config("tiny")?.clone();
+    let corpus = Corpus::generate(n_docs, 64, n_docs, 42);
+
+    // The engine's exact retrieval stack, PJRT-free (fig_fleet idiom);
+    // the store only anchors the scheduler's LoaderCtx — dispatch never
+    // reads it, and every chunk counts as flash-materialized.
+    let retrieval = {
+        let opts = EngineOptions::for_config(&m, "tiny")?;
+        Arc::new(Retrieval::for_corpus(corpus.texts(), cfg.vocab as u32, opts.embed_dim))
+    };
+    {
+        let mut ix = retrieval.index.write().unwrap();
+        for d in &corpus.docs {
+            let (ids, _) = retrieval.tokenizer.encode_block(&d.text, chunk_tokens);
+            ix.insert(d.id, retrieval.embedder.embed(&ids));
+        }
+    }
+    let dir = TempDir::new("matkv-fig-bus")?;
+    let mut kv = KvStore::open_sharded(dir.path(), StorageProfile::ssd_9100pro(), 1)?;
+    kv.disable_throttle();
+    let kv = Arc::new(kv);
+
+    // Host loads priced at DRAM speed: the storage tier is not what
+    // this bench contends — all pressure lands on the H2D links.
+    let model = FleetCostModel {
+        arch: ArchSpec::llama_70b(),
+        storage: StorageProfile::dram(),
+        chunk_tokens,
+        query_tokens: 20,
+        chunk_step: 256,
+    };
+    let spec = FleetSpec::parse(fleet_spec)?;
+    let estimator = Fleet::new(&spec, Routing::RoleAware, model.clone()).service_estimator();
+
+    eprintln!(
+        "[fig_bus] {requests} reqs Zipf({skew}) over {n_docs} docs, top-k {top_k}, \
+         {chunk_tokens}-token chunks, fleet {fleet_spec}, rates {rates:?}/s"
+    );
+
+    struct RateRow {
+        rate: f64,
+        batches: usize,
+        on: matkv::coordinator::FleetReport,
+        off: matkv::coordinator::FleetReport,
+    }
+    let mut rows: Vec<RateRow> = Vec::new();
+    for &rate in &rates {
+        let trace: Vec<TimedRequest> = ArrivalGen::new(
+            TurboRagProfile { top_k, query_tokens: 20.0, output_tokens },
+            corpus.n_topics,
+            skew,
+            rate,
+            7,
+        )
+        .take(&corpus, requests);
+        let ctx = LoaderCtx {
+            retrieval: retrieval.clone(),
+            kv: kv.clone(),
+            cfg: cfg.clone(),
+            opts: EngineOptions::for_config(&m, "tiny")?,
+        };
+        let mut sched = Scheduler::new(
+            ctx,
+            SchedOptions {
+                batch: BatchPolicy { max_batch: batch, max_wait_secs: 0.05 },
+                policy: SchedPolicy::Fifo,
+                service_estimate_secs: 0.0,
+                estimator: Some(estimator.clone()),
+            },
+        );
+        sched.enqueue_timed(trace);
+        let plan = sched.plan_with_retrieval();
+
+        // Same plan, same fleet, two dispatches: only the links differ.
+        let mut fleet = Fleet::new(&spec, Routing::RoleAware, model.clone());
+        fleet.set_contention(true);
+        let on = fleet.dispatch(&plan.batches, &|_| true);
+        fleet.set_contention(false);
+        let off = fleet.dispatch(&plan.batches, &|_| true);
+        rows.push(RateRow { rate, batches: plan.batches.len(), on, off });
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "PCIe contention A/B — {fleet_spec}, role-aware ({requests} reqs, batch {batch}, \
+             virtual clock)"
+        ),
+        &[
+            "offered (req/s)",
+            "batches",
+            "tok/s on",
+            "tok/s off",
+            "p99 on (ms)",
+            "p99 off (ms)",
+            "link queued (s)",
+            "peak backlog (s)",
+        ],
+    );
+    for r in &rows {
+        let queued: f64 = r.on.workers.iter().map(|w| w.link.queued_secs).sum();
+        let peak =
+            r.on.workers.iter().map(|w| w.link.peak_backlog_secs).fold(0.0f64, f64::max);
+        table.row(&[
+            format!("{:.0}", r.rate),
+            r.batches.to_string(),
+            format!("{:.1}", r.on.throughput()),
+            format!("{:.1}", r.off.throughput()),
+            format!("{:.0}", r.on.latency.p99 * 1e3),
+            format!("{:.0}", r.off.latency.p99 * 1e3),
+            format!("{queued:.3}"),
+            format!("{peak:.3}"),
+        ]);
+    }
+    table.print();
+
+    // Acceptance shape at the highest offered rate: the queued link
+    // must cost something a flat charge never could.
+    let high = rows.last().expect("at least one rate");
+    let queued_on: f64 = high.on.workers.iter().map(|w| w.link.queued_secs).sum();
+    let tps_gap = high.off.throughput() - high.on.throughput();
+    let p99_gap = high.on.latency.p99 - high.off.latency.p99;
+    println!(
+        "\nhigh load ({:.0} req/s): contention costs {:.1} tok/s and {:+.0}ms p99 \
+         ({:.3}s queued on the links; identical wire time both runs)",
+        high.rate,
+        tps_gap,
+        p99_gap * 1e3,
+        queued_on,
+    );
+    if tps_gap <= 0.0 && p99_gap <= 0.0 {
+        eprintln!(
+            "[fig_bus] WARNING: contention-on showed no tokens/s or p99 penalty at high \
+             load (tps gap {tps_gap}, p99 gap {p99_gap}) — the link model is not biting"
+        );
+    }
+    if queued_on <= 0.0 {
+        eprintln!(
+            "[fig_bus] WARNING: contention-on run reports zero link queued-seconds at \
+             high load — uploads never waited, check the traffic shape"
+        );
+    }
+
+    if let Some(path) = args.opt("json") {
+        let rate_docs: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                let queued: f64 = r.on.workers.iter().map(|w| w.link.queued_secs).sum();
+                let peak = r
+                    .on
+                    .workers
+                    .iter()
+                    .map(|w| w.link.peak_backlog_secs)
+                    .fold(0.0f64, f64::max);
+                format!(
+                    "{{\"arrival_rate\":{},\"batches\":{},\"queued_secs_on\":{:.6},\
+                     \"peak_backlog_secs_on\":{:.6},\"tps_gap\":{:.6},\"p99_gap\":{:.6},\
+                     \"on\":{},\"off\":{}}}",
+                    r.rate,
+                    r.batches,
+                    queued,
+                    peak,
+                    r.off.throughput() - r.on.throughput(),
+                    r.on.latency.p99 - r.off.latency.p99,
+                    r.on.to_json(),
+                    r.off.to_json(),
+                )
+            })
+            .collect();
+        let doc = format!(
+            "{{\"bench\":\"fig_bus\",\"smoke\":{smoke},\"requests\":{requests},\
+             \"batch\":{batch},\"docs\":{n_docs},\"top_k\":{top_k},\
+             \"chunk_tokens\":{chunk_tokens},\"skew\":{skew},\"fleet\":\"{fleet_spec}\",\
+             \"routing\":\"role\",\"rates\":[{}],\"high_load_queued_secs_on\":{:.6},\
+             \"high_load_tps_gap\":{:.6},\"high_load_p99_gap\":{:.6}}}",
+            rate_docs.join(","),
+            queued_on,
+            tps_gap,
+            p99_gap,
+        );
+        std::fs::write(path, doc)?;
+        eprintln!("[fig_bus] wrote {path}");
+    }
+    Ok(())
+}

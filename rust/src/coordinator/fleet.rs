@@ -47,7 +47,15 @@
 //!    a *different* worker is host-resident but still pays this — the
 //!    disaggregation tax the routing policy exists to dodge. Per-worker
 //!    residency is a byte-budgeted window of HBM minus resident
-//!    weights.
+//!    weights. Since the interconnect refactor the upload is
+//!    **chunk-granular on a per-worker [`Link`]**: each chunk reserves
+//!    a queued slot on the worker's PCIe link starting when the storage
+//!    load drains, so batch *n+1*'s upload overlaps batch *n*'s compute
+//!    (double buffering) up to link saturation, and concurrent uploads
+//!    queue behind each other instead of overlapping for free.
+//!    [`Fleet::set_contention`] switches the queueing off for A/B runs
+//!    (`benches/fig_bus.rs`): transfers still take their wire time, but
+//!    the link grants horizon-free slots.
 //! 3. *prefill* — query sub-prefill for everyone, plus chunked
 //!    on-device recompute of unmaterialized chunks (the Vanilla-path
 //!    cost), through the same [`ArchSpec`] roofline the benches use.
@@ -71,7 +79,8 @@ use anyhow::{bail, Context, Result};
 use super::metrics::{LatencySummary, Percentiles, PhaseBreakdown, WorkTrace};
 use super::scheduler::{PlannedBatch, ServiceEstimator};
 use crate::hwsim::{
-    serving_profile, ArchSpec, DeviceProfile, EnergyMeter, PhaseKind, StorageProfile, SERVING_GPUS,
+    serving_profile, ArchSpec, DeviceProfile, EnergyMeter, Link, LinkClock, LinkSnapshot,
+    PhaseKind, StorageProfile, TrafficClass, SERVING_GPUS,
 };
 use crate::kvstore::ResidentSet;
 use crate::vectordb::ChunkId;
@@ -360,7 +369,10 @@ impl FleetCostModel {
             }
         }
         cost.load_secs = self.storage.read_secs_batch(miss_bytes, cost.miss_reads);
-        cost.transfer_secs = cost.transfer_bytes / dev.pcie_bw;
+        // Wire time via the one definition every transfer site shares;
+        // queueing on top of it is the dispatcher's job (per-worker
+        // H2D links), not the cost model's.
+        cost.transfer_secs = Link::wire_secs(dev.pcie_bw, 0.0, cost.transfer_bytes as usize);
         cost.prefill_secs = self.arch.trace_secs(&work.prefill, dev);
         cost.decode_secs = self.arch.trace_secs_decode(&work.decode, dev);
         cost
@@ -390,6 +402,11 @@ struct Worker {
     profile: DeviceProfile,
     role: Role,
     meter: EnergyMeter,
+    /// This worker's host→device PCIe link on the dispatch virtual
+    /// clock: every KV upload reserves queued slots here, sized from
+    /// the profile's `pcie_bw` (latency folded into the batched wire
+    /// time, so chunked slot sums equal the flat charge exactly).
+    link: Link,
     /// Virtual time this worker is next free.
     free_at: f64,
     busy_secs: f64,
@@ -415,10 +432,13 @@ impl Worker {
         // HBM minus resident weights holds KV; floor at 10% so a model
         // larger than the card still leaves a (paged) working set.
         let kv_budget = (profile.hbm_bytes - weight_bytes).max(0.1 * profile.hbm_bytes);
+        let link =
+            Link::new(format!("{}-pcie", profile.name), profile.pcie_bw, 0.0, LinkClock::Virtual);
         Worker {
             meter: EnergyMeter::server_for(profile.clone(), model.storage.clone()),
             profile,
             role,
+            link,
             free_at: 0.0,
             busy_secs: 0.0,
             load_secs: 0.0,
@@ -437,6 +457,7 @@ impl Worker {
     /// simulation contract).
     fn reset(&mut self) {
         self.meter.reset();
+        self.link.reset();
         self.free_at = 0.0;
         self.busy_secs = 0.0;
         self.load_secs = 0.0;
@@ -468,6 +489,31 @@ impl Worker {
     }
 }
 
+/// Chunk-granular H2D upload: reserve `cost`'s transfer on `link` as
+/// per-chunk slots starting at `load_done` — the double-buffered path;
+/// the link may still be draining an earlier batch's upload, in which
+/// case these chunks queue behind it. Returns the instant the last
+/// byte lands (`load_done` when nothing transfers). The **one** upload
+/// timeline: [`Fleet::dispatch`] plays it and the hand-computed
+/// latency test mirrors it verbatim, so the two can't drift.
+fn h2d_upload(link: &Link, load_done: f64, cost: &BatchCost, chunk_bytes: f64) -> f64 {
+    if cost.transfer_bytes <= 0.0 {
+        return load_done;
+    }
+    let n = (cost.transfer_bytes / chunk_bytes.max(1.0)).round().max(1.0) as usize;
+    let per_secs = cost.transfer_secs / n as f64;
+    let per_bytes = (cost.transfer_bytes / n as f64) as usize;
+    let total_bytes = cost.transfer_bytes as usize;
+    let mut cursor = load_done;
+    for i in 0..n {
+        // the last chunk carries the integer-division remainder, so the
+        // byte counters stay exact
+        let bytes = if i + 1 == n { total_bytes - (n - 1) * per_bytes } else { per_bytes };
+        cursor = link.reserve_secs_at(cursor, per_secs, bytes, TrafficClass::H2D).end;
+    }
+    cursor
+}
+
 /// Per-worker slice of a [`FleetReport`].
 #[derive(Debug, Clone)]
 pub struct WorkerReport {
@@ -486,12 +532,17 @@ pub struct WorkerReport {
     pub utilization: f64,
     /// Whole-box energy over the run, kJ (busy + idle floor).
     pub energy_kj: f64,
+    /// Telemetry of this worker's H2D PCIe link — busy/queued seconds,
+    /// peak backlog, per-traffic-class bytes.
+    pub link: LinkSnapshot,
 }
 
 /// Everything one dispatch pass produces.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub routing: Routing,
+    /// Whether the per-worker PCIe links queued ([`Fleet::set_contention`]).
+    pub contention: bool,
     pub workers: Vec<WorkerReport>,
     /// Worker index per batch, in release order — the dispatch decision
     /// trail (determinism tests compare it across runs).
@@ -536,7 +587,8 @@ impl FleetReport {
                 format!(
                     "{{\"name\":\"{}\",\"role\":\"{}\",\"batches\":{},\"requests\":{},\
                      \"tokens_out\":{},\"busy_secs\":{:.6},\"load_secs\":{:.6},\
-                     \"transfer_secs\":{:.6},\"utilization\":{:.4},\"energy_kj\":{:.6}}}",
+                     \"transfer_secs\":{:.6},\"utilization\":{:.4},\"energy_kj\":{:.6},\
+                     \"link\":{}}}",
                     w.name,
                     w.role.label(),
                     w.batches,
@@ -546,17 +598,19 @@ impl FleetReport {
                     w.load_secs,
                     w.transfer_secs,
                     w.utilization,
-                    w.energy_kj
+                    w.energy_kj,
+                    w.link.to_json()
                 )
             })
             .collect();
         format!(
-            "{{\"routing\":\"{}\",\"workers\":[{}],\"prefill_batches\":{},\
+            "{{\"routing\":\"{}\",\"contention\":{},\"workers\":[{}],\"prefill_batches\":{},\
              \"decode_batches\":{},\"makespan_secs\":{:.6},\"requests\":{},\
              \"tokens_out\":{},\"tokens_per_sec\":{:.3},\"total_kj\":{:.6},\
              \"tokens_per_joule\":{:.6},\"latency\":{{\"mean\":{:.6},\"p50\":{:.6},\
              \"p95\":{:.6},\"p99\":{:.6}}}}}",
             self.routing.label(),
+            self.contention,
             workers.join(","),
             self.prefill_batches,
             self.decode_batches,
@@ -581,6 +635,11 @@ pub struct Fleet {
     workers: Vec<Worker>,
     routing: Routing,
     model: FleetCostModel,
+    /// Whether per-worker H2D links queue (the `--pcie-contention`
+    /// knob). Off: uploads still take wire time, but concurrent
+    /// transfers overlap freely — the pre-refactor optimism, kept as
+    /// the A/B baseline `fig_bus` measures against.
+    contention: bool,
     rr_next: usize,
     /// What [`Fleet::seed_resident`] accumulated: the host-DRAM state
     /// every dispatch starts from.
@@ -614,10 +673,25 @@ impl Fleet {
             workers,
             routing,
             model,
+            contention: true,
             rr_next: 0,
             seed: HashSet::new(),
             host_resident: HashSet::new(),
         }
+    }
+
+    /// Toggle PCIe queueing on every worker's H2D link (default on).
+    /// Off disables the links — reservations become horizon-free, so
+    /// transfers keep their wire time but never wait behind each other.
+    pub fn set_contention(&mut self, on: bool) {
+        self.contention = on;
+        for w in &self.workers {
+            w.link.set_enabled(on);
+        }
+    }
+
+    pub fn contention(&self) -> bool {
+        self.contention
     }
 
     pub fn len(&self) -> usize {
@@ -707,8 +781,18 @@ impl Fleet {
                 let mut best: Option<(usize, BatchCost, f64)> = None;
                 for i in candidates {
                     let cost = cost_on(i);
-                    let finish =
-                        batch.release_secs.max(self.workers[i].free_at) + cost.total_secs();
+                    // Earliest finish on the pipelined timeline,
+                    // including this worker's **link backlog**: the
+                    // upload can't start before the storage load drains
+                    // or the link's horizon clears, and compute waits
+                    // on the later of the upload and the device — a
+                    // wire-granular estimate of what dispatch plays out.
+                    let transfer_start =
+                        (batch.release_secs + cost.load_secs).max(self.workers[i].link.horizon());
+                    let finish = (transfer_start + cost.transfer_secs)
+                        .max(self.workers[i].free_at)
+                        + cost.prefill_secs
+                        + cost.decode_secs;
                     // strict < keeps ties on the lowest index: the
                     // dispatch is deterministic by construction
                     let better = match &best {
@@ -780,8 +864,17 @@ impl Fleet {
             assignments.push(wi);
 
             let w = &mut self.workers[wi];
-            let start = batch.release_secs.max(w.free_at);
-            let done = start + cost.total_secs();
+            // Pipelined timeline: the storage load drains from the
+            // batch's release (host-side work — it never occupies the
+            // device); the upload then crosses this worker's PCIe link
+            // chunk-by-chunk, queueing behind any still-draining
+            // earlier upload; compute starts once the device is free
+            // AND the bytes have landed. Decode of batch *n* hides the
+            // transfer of batch *n+1* up to link saturation.
+            let load_done = batch.release_secs + cost.load_secs;
+            let transfer_done = h2d_upload(&w.link, load_done, &cost, chunk_bytes);
+            let start = transfer_done.max(w.free_at);
+            let done = start + cost.prefill_secs + cost.decode_secs;
             w.free_at = done;
             w.busy_secs += cost.total_secs();
             w.load_secs += cost.load_secs;
@@ -812,9 +905,12 @@ impl Fleet {
             w.meter.record(PhaseKind::HostIdle, (makespan - w.busy_secs).max(0.0));
             let energy_kj = w.meter.system_report().total_kj;
             total_kj += energy_kj;
+            let link = w.link.stats.snapshot();
             metrics.worker_busy_secs.push(w.busy_secs);
             metrics.worker_batches.push(w.batches);
             metrics.worker_transfer_secs.push(w.transfer_secs);
+            metrics.worker_link_queued_secs.push(link.queued_secs);
+            metrics.worker_link_peak_backlog_secs.push(link.peak_backlog_secs);
             workers.push(WorkerReport {
                 name: w.profile.name.clone(),
                 role: w.role,
@@ -826,6 +922,7 @@ impl Fleet {
                 transfer_secs: w.transfer_secs,
                 utilization: if makespan > 0.0 { w.busy_secs / makespan } else { 0.0 },
                 energy_kj,
+                link,
             });
         }
         let requests: usize = workers.iter().map(|w| w.requests).sum();
@@ -836,6 +933,7 @@ impl Fleet {
 
         FleetReport {
             routing: self.routing,
+            contention: self.contention,
             workers,
             assignments,
             prefill_batches,
@@ -1075,38 +1173,122 @@ mod tests {
     #[test]
     fn latency_percentiles_match_hand_computed_completions() {
         // One worker, two single-request batches with disjoint chunk
-        // sets released at t=0: completions are c1 and c1+c2 where the
-        // c's come from the same public cost model — the percentile
-        // machinery must reproduce them exactly.
+        // sets released at t=0, on the pipelined timeline: load from
+        // release, chunked upload across the worker's PCIe link,
+        // compute when both the device and the bytes are ready. The
+        // mirror below replays the dispatcher's exact arithmetic —
+        // same h2d_upload(), scratch link — so the expected
+        // completions are bit-identical, not approximations.
         let m = model();
         let b1 = batch(0, 1, vec![1, 2], 0.0);
         let b2 = batch(10, 1, vec![3, 4], 0.0);
         let dev = DeviceProfile::h100();
         let none = HashSet::new();
-        let c1 = m
-            .batch_cost(&b1.reqs, &b1.retrieved, &dev, &none, &none, &all_materialized)
-            .total_secs();
+        let c1 = m.batch_cost(&b1.reqs, &b1.retrieved, &dev, &none, &none, &all_materialized);
         // batch 2 prices with batch 1's chunks host-resident but its own
         // still cold — disjoint ids keep c2 independent of that state
         let host: HashSet<ChunkId> = [1, 2].into_iter().collect();
         let mut on_device: HashSet<ChunkId> = HashSet::new();
         on_device.extend([1u64, 2]);
-        let c2 = m
-            .batch_cost(&b2.reqs, &b2.retrieved, &dev, &host, &on_device, &all_materialized)
-            .total_secs();
+        let c2 = m.batch_cost(&b2.reqs, &b2.retrieved, &dev, &host, &on_device, &all_materialized);
+
+        let mirror = Link::new("mirror", dev.pcie_bw, 0.0, LinkClock::Virtual);
+        let chunk = m.chunk_kv_bytes();
+        let done1 = h2d_upload(&mirror, 0.0 + c1.load_secs, &c1, chunk).max(0.0)
+            + c1.prefill_secs
+            + c1.decode_secs;
+        let done2 = h2d_upload(&mirror, 0.0 + c2.load_secs, &c2, chunk).max(done1)
+            + c2.prefill_secs
+            + c2.decode_secs;
 
         let mut fleet =
             Fleet::new(&FleetSpec::parse("h100:1").unwrap(), Routing::RoundRobin, m);
         let rep = fleet.dispatch(&[b1, b2], &all_materialized);
         let mut expect = Percentiles::default();
-        expect.record(c1);
-        expect.record(c1 + c2);
+        expect.record(done1);
+        expect.record(done2);
         assert_eq!(rep.latency, expect.summary());
-        assert_eq!(rep.makespan_secs, c1 + c2);
+        assert_eq!(rep.makespan_secs, done2);
         assert!(rep.latency.p50 <= rep.latency.p99);
-        // the metrics shape carries the same samples
+        // batch 2's upload queued behind batch 1's on the single link
+        assert!(rep.workers[0].link.queued_secs > 0.0, "second upload must queue");
+        // the metrics shape carries the same samples + link gauges
         assert_eq!(rep.metrics.request_latency.summary(), rep.latency);
         assert_eq!(rep.metrics.worker_busy_secs, vec![rep.workers[0].busy_secs]);
+        assert_eq!(
+            rep.metrics.worker_link_queued_secs,
+            vec![rep.workers[0].link.queued_secs]
+        );
+    }
+
+    #[test]
+    fn upload_overlaps_prior_compute_on_the_virtual_clock() {
+        // Double buffering: batch 2's load+upload runs while the worker
+        // is still computing batch 1, so the pipelined makespan beats
+        // the serial sum of the two batch costs.
+        let m = model();
+        let b1 = batch(0, 4, vec![1, 2], 0.0);
+        let b2 = batch(10, 4, vec![3, 4], 0.0);
+        let dev = DeviceProfile::h100();
+        let none = HashSet::new();
+        let c1 = m
+            .batch_cost(&b1.reqs, &b1.retrieved, &dev, &none, &none, &all_materialized)
+            .total_secs();
+        let c2 = m
+            .batch_cost(&b2.reqs, &b2.retrieved, &dev, &none, &none, &all_materialized)
+            .total_secs();
+        let mut fleet =
+            Fleet::new(&FleetSpec::parse("h100:1").unwrap(), Routing::RoundRobin, m);
+        let rep = fleet.dispatch(&[b1, b2], &all_materialized);
+        assert!(
+            rep.makespan_secs < c1 + c2 - 1e-9,
+            "batch 2's load+upload must hide under batch 1's compute: {} vs serial {}",
+            rep.makespan_secs,
+            c1 + c2
+        );
+        // the upload rode the link chunk-granularly: 2 chunks x 2 batches
+        let link = &rep.workers[0].link;
+        assert_eq!(link.reserves, 4);
+        assert!(link.bytes_by_class[TrafficClass::H2D.index()] > 0);
+        assert!(link.busy_secs > 0.0);
+    }
+
+    #[test]
+    fn contention_off_grants_horizon_free_uploads() {
+        // Transfer-dominant plan (32 cold chunks, 1 output token per
+        // batch): with queueing on, consecutive uploads wait behind
+        // each other and stretch the makespan; off, the same plan
+        // finishes sooner and reports zero queued seconds — the A/B
+        // fig_bus measures at scale.
+        let mk = |id0: u64| PlannedBatch {
+            reqs: vec![req(id0, 1)],
+            retrieved: vec![(0..32u64).map(|i| id0 * 100 + i).collect()],
+            arrivals: vec![0.0],
+            release_secs: 0.0,
+        };
+        let batches: Vec<PlannedBatch> = (1..=4).map(mk).collect();
+        let run = |on: bool| {
+            let mut fleet =
+                Fleet::new(&FleetSpec::parse("h100:1").unwrap(), Routing::RoundRobin, model());
+            fleet.set_contention(on);
+            fleet.dispatch(&batches, &all_materialized)
+        };
+        let (on, off) = (run(true), run(false));
+        assert!(on.contention && !off.contention);
+        assert!(on.workers[0].link.queued_secs > 0.0, "a 4-deep upload burst must queue");
+        assert_eq!(off.workers[0].link.queued_secs, 0.0, "disabled link never queues");
+        assert!(
+            on.makespan_secs > off.makespan_secs + 1e-9,
+            "queueing must stretch a transfer-bound makespan: {} vs {}",
+            on.makespan_secs,
+            off.makespan_secs
+        );
+        // wire time and work are identical either way — only the
+        // queueing differs
+        assert_eq!(on.workers[0].transfer_secs, off.workers[0].transfer_secs);
+        assert_eq!(on.tokens_out, off.tokens_out);
+        assert!(on.to_json().contains("\"contention\":true"));
+        assert!(off.to_json().contains("\"contention\":false"));
     }
 
     #[test]

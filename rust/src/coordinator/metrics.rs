@@ -13,6 +13,7 @@
 
 use crate::hwsim::profiles::{DeviceProfile, StorageProfile};
 use crate::hwsim::standin::ArchSpec;
+use crate::hwsim::Link;
 
 /// Architecture-independent record of executed transformer work.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -138,6 +139,14 @@ pub struct PhaseBreakdown {
     /// PCIe charge a batch pays when its chunks were loaded by a
     /// different worker (or sit in host DRAM, not on this device).
     pub worker_transfer_secs: Vec<f64>,
+    /// Seconds each fleet worker's H2D uploads spent queued behind
+    /// earlier traffic on its PCIe link — the contention signal (0 when
+    /// the link never saturated, or queueing was switched off).
+    pub worker_link_queued_secs: Vec<f64>,
+    /// High-water backlog each worker's PCIe link saw (seconds of
+    /// traffic ahead of a reservation's completion). A gauge: merged by
+    /// element-wise max, like `shard_peak_queue`.
+    pub worker_link_peak_backlog_secs: Vec<f64>,
     /// Per-request end-to-end latency on the virtual clock (arrival →
     /// batch completion), recorded by the fleet dispatcher. Empty for
     /// wall-clock serve paths, which have no virtual completion times.
@@ -162,6 +171,16 @@ fn merge_max(a: &mut Vec<u64>, b: &[u64]) {
     }
     for (x, &y) in a.iter_mut().zip(b) {
         *x = (*x).max(y);
+    }
+}
+
+/// [`merge_max`] for float gauges (link backlog high-water marks).
+fn merge_max_f64(a: &mut Vec<f64>, b: &[f64]) {
+    if a.len() < b.len() {
+        a.resize(b.len(), 0.0);
+    }
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = x.max(y);
     }
 }
 
@@ -215,6 +234,11 @@ impl PhaseBreakdown {
         merge_add(&mut self.worker_busy_secs, &other.worker_busy_secs);
         merge_add(&mut self.worker_batches, &other.worker_batches);
         merge_add(&mut self.worker_transfer_secs, &other.worker_transfer_secs);
+        merge_add(&mut self.worker_link_queued_secs, &other.worker_link_queued_secs);
+        merge_max_f64(
+            &mut self.worker_link_peak_backlog_secs,
+            &other.worker_link_peak_backlog_secs,
+        );
         self.request_latency.merge(&other.request_latency);
     }
 
@@ -246,9 +270,12 @@ impl PhaseBreakdown {
             + crate::hwsim::q8_quant_secs(arch.kv_bytes(self.warm_admit_tokens) * 0.5)
     }
 
-    /// Simulated host→device upload of the loaded KVs (PCIe).
+    /// Simulated host→device upload of the loaded KVs: PCIe wire time
+    /// through the one [`Link::wire_secs`] definition (queueing on top
+    /// of it belongs to actual links — the fleet's per-worker H2D
+    /// links — not to this aggregate rollup).
     pub fn upload_secs_on(&self, arch: &ArchSpec, dev: &DeviceProfile) -> f64 {
-        arch.kv_bytes(self.loaded_tokens) / dev.pcie_bw
+        Link::wire_secs(dev.pcie_bw, 0.0, arch.kv_bytes(self.loaded_tokens) as usize)
     }
 
     /// Simulated end-to-end, serial composition (no overlap).
@@ -427,6 +454,8 @@ mod tests {
             worker_busy_secs: vec![1.0, 2.0],
             worker_batches: vec![1, 2],
             worker_transfer_secs: vec![0.125],
+            worker_link_queued_secs: vec![0.01, 0.02],
+            worker_link_peak_backlog_secs: vec![0.5, 0.1],
             request_latency: lat_a,
             ..Default::default()
         };
@@ -436,6 +465,8 @@ mod tests {
             worker_busy_secs: vec![0.5, 0.5, 3.0], // sparse worker 2 grows vecs
             worker_batches: vec![0, 1, 4],
             worker_transfer_secs: vec![0.25, 0.5],
+            worker_link_queued_secs: vec![0.01],
+            worker_link_peak_backlog_secs: vec![0.25, 0.75, 0.3],
             request_latency: lat_b,
             ..Default::default()
         };
@@ -443,6 +474,9 @@ mod tests {
         assert_eq!(a.worker_busy_secs, vec![1.5, 2.5, 3.0]);
         assert_eq!(a.worker_batches, vec![1, 3, 4]);
         assert_eq!(a.worker_transfer_secs, vec![0.375, 0.5]);
+        // queued secs are counters (sum); peak backlog is a gauge (max)
+        assert_eq!(a.worker_link_queued_secs, vec![0.02, 0.02]);
+        assert_eq!(a.worker_link_peak_backlog_secs, vec![0.5, 0.75, 0.3]);
         assert_eq!(a.request_latency.len(), 3);
         let s = a.request_latency.summary();
         assert_eq!(s.p50, 0.020);

@@ -68,6 +68,10 @@ pub struct CacheSample {
     /// Modeled seconds spent quantizing chunks *into* the q8 tier
     /// (demotions and direct admissions; symmetric to `dequant_secs`).
     pub quant_secs: f64,
+    /// Seconds this tier's quant/dequant transfers spent queued behind
+    /// other traffic on the shared host bus
+    /// ([`crate::hwsim::Link`]) — 0 for tiers not wired to a bus.
+    pub link_queued_secs: f64,
     pub resident_bytes: u64,
     pub resident_chunks: u64,
 }
@@ -80,8 +84,8 @@ impl CacheSample {
         format!(
             "{{\"tier\":\"{}\",\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
              \"prefetch_inserts\":{},\"prefetch_hits\":{},\"prefetch_rejected\":{},\
-             \"dequant_secs\":{:.6},\"quant_secs\":{:.6},\"resident_bytes\":{},\
-             \"resident_chunks\":{}}}",
+             \"dequant_secs\":{:.6},\"quant_secs\":{:.6},\"link_queued_secs\":{:.6},\
+             \"resident_bytes\":{},\"resident_chunks\":{}}}",
             self.tier.label(),
             self.hits,
             self.misses,
@@ -92,6 +96,7 @@ impl CacheSample {
             self.prefetch_rejected,
             self.dequant_secs,
             self.quant_secs,
+            self.link_queued_secs,
             self.resident_bytes,
             self.resident_chunks
         )
@@ -136,6 +141,10 @@ pub struct CacheStats {
     /// q8 tier — demote-on-evict, direct q8 admissions, and prefetches
     /// parked in warm. The symmetric twin of `dequant_ns`.
     pub quant_ns: AtomicU64,
+    /// Nanoseconds this tier's quant/dequant transfers spent *queued*
+    /// on the shared host bus ([`crate::hwsim::Link`]) — contention
+    /// telemetry on top of the modeled charge, not an extra charge.
+    pub link_queued_ns: AtomicU64,
     /// Sampled cumulative snapshots ([`CacheStats::record_sample`]).
     series: Mutex<Vec<CacheSample>>,
 }
@@ -166,6 +175,16 @@ impl CacheStats {
         self.quant_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Record host-bus queueing delay a quant/dequant transfer saw.
+    pub fn add_link_queued_secs(&self, secs: f64) {
+        self.link_queued_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total host-bus queueing seconds this tier's traffic absorbed.
+    pub fn link_queued_secs(&self) -> f64 {
+        self.link_queued_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
     /// Hits / (hits + misses); 0 when the tier was never consulted.
     pub fn hit_ratio(&self) -> f64 {
         let h = self.hits.load(Ordering::Relaxed) as f64;
@@ -184,6 +203,7 @@ impl CacheStats {
             tier: self.tier,
             dequant_secs: self.dequant_secs(),
             quant_secs: self.quant_secs(),
+            link_queued_secs: self.link_queued_secs(),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             insertions: self.insertions.load(Ordering::Relaxed),

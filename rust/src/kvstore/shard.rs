@@ -2,13 +2,15 @@
 //! [`DeviceThrottle`] per simulated storage device.
 //!
 //! A [`super::KvStore`] is a *set* of shards (a JBOD of independent
-//! SSDs): chunk ids hash to shards with [`route`], every shard charges
-//! its own throttle, and misses to different shards genuinely overlap in
-//! simulated device time — this is how `load_many` bandwidth scales past
-//! a single bus. Routing is a pure function of (id, shard count), so the
-//! same id lands in the same shard directory across process restarts and
-//! store reopens; the shard count itself is pinned by a marker file the
-//! store writes next to the shards (see [`super::KvStore::open_sharded`]).
+//! SSDs): every shard charges its own throttle, and misses to different
+//! shards genuinely overlap in simulated device time — this is how
+//! `load_many` bandwidth scales past a single bus. New chunks are
+//! *placed* by cumulative bytes (the store's persisted placement map,
+//! see [`super::KvStore::shard_index_of`]), so one large-chunk-heavy
+//! shard can't serialize the fan-out; [`route`] remains the pure
+//! (id, shard count) fallback hash for ids no placement record covers.
+//! The shard count itself is pinned by a marker file the store writes
+//! next to the shards (see [`super::KvStore::open_sharded`]).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,7 +20,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::throttle::DeviceThrottle;
-use crate::hwsim::StorageProfile;
+use crate::hwsim::{Link, StorageProfile, TrafficClass};
 use crate::vectordb::ChunkId;
 
 /// Per-device cumulative counters plus live/peak queue-depth gauges
@@ -77,10 +79,14 @@ impl ShardStats {
     }
 }
 
-/// Stable shard routing: a splitmix64 finalizer over the chunk id,
-/// reduced mod the shard count. Purely deterministic — same (id, count)
-/// always maps to the same shard, across reopens and processes — and
-/// well-mixed even for the sequential ids the ingest pipeline assigns.
+/// Stable *fallback* shard routing: a splitmix64 finalizer over the
+/// chunk id, reduced mod the shard count. Purely deterministic — same
+/// (id, count) always maps to the same shard, across reopens and
+/// processes — and well-mixed even for the sequential ids the ingest
+/// pipeline assigns. Count-balancing only: the store's byte-balanced
+/// placement map supersedes this for every chunk it has a record for,
+/// and legacy layouts written before the map existed still resolve
+/// here.
 pub fn route(id: ChunkId, n_shards: usize) -> usize {
     debug_assert!(n_shards > 0);
     let mut z = id.wrapping_add(0x9e37_79b9_7f4a_7c15);
@@ -145,6 +151,12 @@ impl Shard {
         self.throttle.backlog_secs()
     }
 
+    /// The device's contended link — queued/busy seconds and per-class
+    /// (demand vs. prefetch) byte counters for the serve report.
+    pub fn link(&self) -> &Link {
+        self.throttle.link()
+    }
+
     pub(crate) fn path_of(&self, id: ChunkId) -> PathBuf {
         self.dir.join(format!("{id:016x}.kv"))
     }
@@ -154,14 +166,16 @@ impl Shard {
     }
 
     /// Read a chunk's raw file bytes, throttled to this shard's device.
-    /// Returns the bytes plus the simulated device seconds charged.
-    pub(crate) fn read(&self, id: ChunkId) -> Result<(Vec<u8>, f64)> {
+    /// `class` tags the transfer in the link's byte counters (demand
+    /// miss vs. speculative prefetch). Returns the bytes plus the
+    /// simulated device seconds charged.
+    pub(crate) fn read(&self, id: ChunkId, class: TrafficClass) -> Result<(Vec<u8>, f64)> {
         let path = self.path_of(id);
         self.stats.enter_queue();
         let result = (|| {
             let start = Instant::now();
             let data = std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
-            let device_secs = self.throttle.charge_read(data.len(), start.elapsed());
+            let device_secs = self.throttle.charge_read_as(data.len(), start.elapsed(), class);
             Ok((data, device_secs))
         })();
         self.stats.exit_queue();
@@ -257,7 +271,7 @@ mod tests {
         let shard = Shard::open(0, dir.path(), StorageProfile::dram()).unwrap();
         let payload = vec![7u8; 1024];
         shard.write(42, &payload).unwrap();
-        let (back, _secs) = shard.read(42).unwrap();
+        let (back, _secs) = shard.read(42, TrafficClass::Demand).unwrap();
         assert_eq!(back, payload);
         assert_eq!(shard.stats.reads.load(Ordering::Relaxed), 1);
         assert_eq!(shard.stats.writes.load(Ordering::Relaxed), 1);
@@ -267,7 +281,7 @@ mod tests {
         assert!(shard.stats.peak_queue_depth.load(Ordering::Relaxed) >= 1);
         assert!(shard.delete(42).unwrap());
         assert!(!shard.delete(42).unwrap());
-        assert!(shard.read(42).is_err());
+        assert!(shard.read(42, TrafficClass::Demand).is_err());
         assert_eq!(shard.stats.reads.load(Ordering::Relaxed), 1, "failed read not counted");
     }
 
@@ -293,7 +307,7 @@ mod tests {
         let handles: Vec<_> = (0..8u64)
             .map(|id| {
                 let s = shard.clone();
-                std::thread::spawn(move || s.read(id).unwrap())
+                std::thread::spawn(move || s.read(id, TrafficClass::Demand).unwrap())
             })
             .collect();
         for h in handles {

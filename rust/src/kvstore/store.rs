@@ -12,10 +12,11 @@
 //!   write format; decode dispatches on the version word, so stores
 //!   holding a mix of v1 and v2 files serve both transparently.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -23,8 +24,8 @@ use super::cache::{HotTier, Probe};
 use super::quant;
 use super::shard::{route, Shard};
 use super::warm::{WarmProbe, WarmTier};
-use crate::hwsim::profiles::q8_dequant_secs;
-use crate::hwsim::StorageProfile;
+use crate::hwsim::profiles::{q8_dequant_secs, Q8_DEQUANT_BYTES_PER_SEC};
+use crate::hwsim::{Link, LinkClock, StorageProfile, TrafficClass};
 use crate::manifest::ModelConfig;
 use crate::util::aio::{IoPool, Pending};
 use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
@@ -141,15 +142,24 @@ pub struct StoreStats {
 /// [`KvStore::open_sharded`] it models a JBOD of independent SSDs.
 pub struct KvStore {
     root: PathBuf,
-    /// One per simulated device; chunk ids hash across them with
-    /// [`route`]. Always non-empty.
+    /// One per simulated device; new chunks are byte-balance-placed
+    /// across them ([`KvStore::shard_index_of`]). Always non-empty.
     shards: Vec<Arc<Shard>>,
+    /// Persisted byte-balanced placement: id → shard, plus cumulative
+    /// placed bytes per shard (the argmin weights). Ids without a
+    /// record fall back to [`route`].
+    placement: Mutex<PlacementState>,
     pool: IoPool,
     format: KvFormat,
     hot: Option<Arc<HotTier>>,
     /// q8 warm tier between the hot tier and flash (hot-tier budget
     /// evictions demote here; warm hits dequantize and promote back).
     warm: Option<Arc<WarmTier>>,
+    /// The shared host-side bus all DRAM-tier quant traffic crosses:
+    /// warm→hot promotions (dequant) and hot→warm demotions (quant)
+    /// contend here in [`LinkClock::Account`] mode — the charge
+    /// magnitudes are unchanged, the bus adds the queueing telemetry.
+    bus: Arc<Link>,
     pub stats: Arc<StoreStats>,
 }
 
@@ -161,6 +171,22 @@ pub type ShardedKvStore = KvStore;
 /// Shard-count pin, written into the store root so a directory laid out
 /// as N shards is never reopened (and silently mis-routed) as M.
 const SHARD_MARKER: &str = "SHARDS";
+
+/// Append-only placement log in the store root: one `id shard bytes`
+/// line per first-time placement, replayed on open so byte-balanced
+/// placement survives reopens exactly like hash routing did.
+const PLACEMENT_LOG: &str = "PLACEMENT";
+
+/// In-memory form of the placement log. Append-only by design: deletes
+/// keep their records (and their byte weights — conservative for the
+/// ingest-dominated workloads the store models), and re-stores of a
+/// placed id reuse the original shard, so each id appears at most once.
+#[derive(Debug, Default)]
+struct PlacementState {
+    map: HashMap<ChunkId, usize>,
+    /// Cumulative placed bytes per shard — the argmin weights.
+    shard_bytes: Vec<u64>,
+}
 
 /// Result of a load: the chunk plus where it came from and what it cost.
 #[derive(Debug)]
@@ -315,17 +341,62 @@ impl KvStore {
                 Shard::open(i, sdir, profile.clone()).map(Arc::new)
             })
             .collect::<Result<Vec<_>>>()?;
+        let placement = Self::replay_placement(&root, n_shards)?;
         Ok(KvStore {
             root,
             shards,
+            placement: Mutex::new(placement),
             // Enough workers that every simulated device can have I/O in
             // flight at once, bounded so huge JBODs don't spawn armies.
             pool: IoPool::new((2 * n_shards).clamp(4, 16)),
             format: KvFormat::V2,
             hot: None,
             warm: None,
+            bus: Arc::new(Link::new(
+                "host-bus",
+                Q8_DEQUANT_BYTES_PER_SEC,
+                0.0,
+                LinkClock::Account,
+            )),
             stats: Arc::new(StoreStats::default()),
         })
+    }
+
+    /// Rebuild the placement map from the append-only log (absent for
+    /// fresh or pre-placement stores: every id then resolves through
+    /// the [`route`] fallback, which is exactly where the legacy layout
+    /// put its files).
+    fn replay_placement(root: &Path, n_shards: usize) -> Result<PlacementState> {
+        let mut state =
+            PlacementState { map: HashMap::new(), shard_bytes: vec![0; n_shards] };
+        let path = root.join(PLACEMENT_LOG);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(state),
+            Err(e) => return Err(e).with_context(|| format!("reading placement log {path:?}")),
+        };
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let (id, shard, bytes) = match (it.next(), it.next(), it.next()) {
+                (Some(a), Some(b), Some(c)) => (a, b, c),
+                _ => continue, // torn tail line: ignore, the id falls back to route()
+            };
+            let (Ok(id), Ok(shard), Ok(bytes)) =
+                (id.parse::<ChunkId>(), shard.parse::<usize>(), bytes.parse::<u64>())
+            else {
+                continue;
+            };
+            if shard >= n_shards {
+                bail!(
+                    "placement log {path:?} names shard {shard} but the store has \
+                     {n_shards}; the layout is corrupt"
+                );
+            }
+            if state.map.insert(id, shard).is_none() {
+                state.shard_bytes[shard] += bytes;
+            }
+        }
+        Ok(state)
     }
 
     fn has_loose_chunks(root: &Path) -> Result<bool> {
@@ -376,9 +447,56 @@ impl KvStore {
         &self.shards
     }
 
-    /// Which shard `id` routes to (stable across reopens).
+    /// Which shard `id` routes to (stable across reopens): the
+    /// byte-balanced placement record when one exists, else the
+    /// [`route`] hash (legacy layouts and never-stored ids).
     pub fn shard_index_of(&self, id: ChunkId) -> usize {
-        route(id, self.shards.len())
+        let pl = self.placement.lock().unwrap();
+        pl.map.get(&id).copied().unwrap_or_else(|| route(id, self.shards.len()))
+    }
+
+    /// Choose (and persist) the shard a new chunk of `bytes` lands on:
+    /// the shard with the least cumulative placed bytes, ties to the
+    /// lowest index — so equal-size chunks round-robin and a run of
+    /// large chunks can't pile onto one device and serialize the
+    /// `load_many` fan-out the way count-balanced hashing could.
+    /// Re-stores of an already-placed id keep their shard.
+    fn place_shard(&self, id: ChunkId, bytes: usize) -> Result<usize> {
+        let mut pl = self.placement.lock().unwrap();
+        if let Some(&s) = pl.map.get(&id) {
+            return Ok(s);
+        }
+        let mut best = 0;
+        for (i, &b) in pl.shard_bytes.iter().enumerate() {
+            if b < pl.shard_bytes[best] {
+                best = i;
+            }
+        }
+        // Log before mutating: if the append fails, the in-memory state
+        // still matches what a reopen would replay.
+        let path = self.root.join(PLACEMENT_LOG);
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening placement log {path:?}"))?;
+        writeln!(file, "{id} {best} {bytes}")
+            .with_context(|| format!("appending placement log {path:?}"))?;
+        pl.map.insert(id, best);
+        pl.shard_bytes[best] += bytes as u64;
+        Ok(best)
+    }
+
+    /// Cumulative placed bytes per shard (the placement balancer's
+    /// weights — telemetry for the serve report and skew tests).
+    pub fn shard_placed_bytes(&self) -> Vec<u64> {
+        self.placement.lock().unwrap().shard_bytes.clone()
+    }
+
+    /// The shared host-side quant/dequant bus: warm→hot promotion and
+    /// hot→warm demotion traffic contends here (see [`Link`]).
+    pub fn bus(&self) -> &Arc<Link> {
+        &self.bus
     }
 
     fn shard_of(&self, id: ChunkId) -> &Arc<Shard> {
@@ -418,8 +536,15 @@ impl KvStore {
     /// (exclusive placement). Without one, the warm tier is the
     /// first-level cache: misses admit quantized copies directly.
     pub fn set_warm_tier(&mut self, budget_bytes: usize) {
-        self.warm =
-            if budget_bytes > 0 { Some(Arc::new(WarmTier::new(budget_bytes))) } else { None };
+        self.warm = if budget_bytes > 0 {
+            let mut warm = WarmTier::new(budget_bytes);
+            // Quantize traffic entering the tier (demotions, direct
+            // admissions, prefetch parks) contends on the host bus.
+            warm.set_bus(self.bus.clone());
+            Some(Arc::new(warm))
+        } else {
+            None
+        };
         self.wire_demote();
     }
 
@@ -601,7 +726,7 @@ impl KvStore {
         chunk.validate()?;
         self.invalidate_tiers(id);
         let buf = Self::encode(chunk, self.format);
-        let secs = self.shard_of(id).write(id, &buf)?;
+        let secs = self.shards[self.place_shard(id, buf.len())?].write(id, &buf)?;
         self.invalidate_tiers(id);
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
@@ -619,11 +744,17 @@ impl KvStore {
             return self.pool.submit(move || Err(e));
         }
         self.invalidate_tiers(id);
-        let shard = self.shard_of(id).clone();
+        let buf = Self::encode(&chunk, self.format);
+        // Placement is decided (and logged) at submission time, so the
+        // order writes were issued in — not pool scheduling — fixes the
+        // balancer's byte weights deterministically.
+        let shard = match self.place_shard(id, buf.len()) {
+            Ok(idx) => self.shards[idx].clone(),
+            Err(e) => return self.pool.submit(move || Err(e)),
+        };
         let stats = self.stats.clone();
         let hot = self.hot.clone();
         let warm = self.warm.clone();
-        let buf = Self::encode(&chunk, self.format);
         self.pool.submit(move || {
             let secs = shard.write(id, &buf)?;
             // Second invalidation once the write landed: a load that
@@ -675,8 +806,13 @@ impl KvStore {
     ) -> Loaded {
         let chunk = Arc::new(quant::dequantize(q));
         let dequant_secs = q8_dequant_secs(q.q8_bytes() as f64);
+        // The dequant pass crosses the shared host bus: same charge
+        // magnitude, but concurrent promotions/demotions queue behind
+        // each other and the wait lands in the tier's link telemetry.
+        let slot = self.bus.reserve_secs(dequant_secs, q.q8_bytes(), TrafficClass::Promotion);
         if let Some(warm) = &self.warm {
             warm.stats.add_dequant_secs(dequant_secs);
+            warm.stats.add_link_queued_secs(slot.queued_secs);
         }
         if let Some(hot) = &self.hot {
             hot.insert_at(id, chunk.clone(), file_bytes, hot_gen);
@@ -769,7 +905,7 @@ impl KvStore {
                     hot_gen,
                     warm_gen,
                     shard: shard_idx,
-                    read: self.pool.submit(move || shard.read(id)),
+                    read: self.pool.submit(move || shard.read(id, TrafficClass::Demand)),
                 }
             })
             .collect();
@@ -876,7 +1012,12 @@ impl KvStore {
             let hot_gen = hot.as_ref().map(|h| h.generation(id)).unwrap_or(0);
             let warm_gen = warm.as_ref().map(|w| w.generation(id)).unwrap_or(0);
             let shard = self.shard_of(id).clone();
-            pending.push((id, hot_gen, warm_gen, self.pool.submit(move || shard.read(id))));
+            pending.push((
+                id,
+                hot_gen,
+                warm_gen,
+                self.pool.submit(move || shard.read(id, TrafficClass::Prefetch)),
+            ));
         }
         for (id, hot_gen, warm_gen, h) in pending {
             let (data, device_secs) = match h.wait() {
@@ -1806,6 +1947,108 @@ mod tests {
         // rigorous scaling sweep lives in benches/fig_shard_scale.rs.
         let speedup = elapsed[0] / elapsed[1];
         assert!(speedup > 1.5, "4-shard JBOD only {speedup:.2}x over 1 shard ({elapsed:?})");
+    }
+
+    #[test]
+    fn placement_balances_bytes_not_counts() {
+        // Satellite: a 16x size spread across the corpus. Greedy argmin
+        // placement bounds the cumulative byte skew by one max-size
+        // file — count-balanced hashing has no such bound and can stack
+        // the large chunks on one device.
+        let (_d, s) = sharded_store(4);
+        let seqs = [8u32, 128, 8, 8, 128, 8, 128, 128, 8, 64, 32, 8, 128, 16, 8, 128];
+        let mut max_file = 0u64;
+        for (i, &seq) in seqs.iter().enumerate() {
+            let c = chunk(i as u32, seq);
+            max_file = max_file.max(s.encoded_bytes(&c) as u64);
+            s.store_sync(i as u64, &c).unwrap();
+        }
+        let placed = s.shard_placed_bytes();
+        let (lo, hi) = (*placed.iter().min().unwrap(), *placed.iter().max().unwrap());
+        assert!(hi - lo <= max_file, "byte skew {} exceeds one max file {max_file}", hi - lo);
+        // the balancer's weights are the on-disk reality, not a model
+        for (sh, &want) in s.shards().iter().zip(&placed) {
+            assert_eq!(sh.bytes_on_disk().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn unplaced_ids_fall_back_to_hash_routing() {
+        let (_d, s) = sharded_store(4);
+        // never-stored ids resolve exactly where the legacy hash put them
+        for id in [7u64, 1 << 40, u64::MAX] {
+            assert_eq!(s.shard_index_of(id), route(id, 4));
+        }
+        // a placed id resolves through the map, and the file is there
+        s.store_sync(7, &chunk(7, 8)).unwrap();
+        let idx = s.shard_index_of(7);
+        assert!(s.shards()[idx].dir().join(format!("{:016x}.kv", 7u64)).exists());
+        // re-storing keeps the shard (no file orphaned in another dir)
+        s.store_sync(7, &chunk(8, 8)).unwrap();
+        assert_eq!(s.shard_index_of(7), idx);
+        assert_eq!(s.len().unwrap(), 1);
+    }
+
+    #[test]
+    fn byte_balanced_placement_survives_reopen() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-placelog").unwrap();
+        let (placed, weights) = {
+            let mut s = KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+            s.disable_throttle();
+            for i in 0..12u64 {
+                s.store_sync(i, &chunk(i as u32, if i % 3 == 0 { 128 } else { 8 })).unwrap();
+            }
+            let placed: Vec<(u64, usize)> = (0..12u64).map(|i| (i, s.shard_index_of(i))).collect();
+            (placed, s.shard_placed_bytes())
+        };
+        let mut s = KvStore::open_sharded(dir.path(), StorageProfile::dram(), 4).unwrap();
+        s.disable_throttle();
+        for &(id, idx) in &placed {
+            assert_eq!(s.shard_index_of(id), idx, "placement moved for id {id} across reopen");
+            assert_eq!(s.load(id).unwrap().shard, idx);
+        }
+        assert_eq!(s.shard_placed_bytes(), weights, "argmin weights must replay exactly");
+    }
+
+    #[test]
+    fn warm_quant_traffic_contends_on_the_host_bus() {
+        let (_d, s) = warm_store(2 * f32_cost(), 64 << 20);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(127.0 * i as f32, 8)).unwrap();
+            s.load(i).unwrap(); // third load demotes id 1 into warm
+        }
+        let bus = s.bus();
+        assert!(bus.stats.bytes_for(TrafficClass::Demotion) > 0, "demote must cross the bus");
+        assert!(bus.stats.busy_secs() > 0.0);
+        let before = bus.stats.bytes_for(TrafficClass::Promotion);
+        let l = s.load(1).unwrap(); // warm hit: dequant + promote
+        assert!(l.from_warm);
+        assert!(bus.stats.bytes_for(TrafficClass::Promotion) > before);
+        // the bus adds contention telemetry only — charge magnitudes on
+        // the Loaded/CacheStats side are exactly the modeled quant costs
+        let warm = s.warm_tier().unwrap();
+        assert!((l.dequant_secs - warm.stats.dequant_secs()).abs() < 2e-9);
+        assert!(warm.stats.link_queued_secs() >= 0.0, "queued gauge wired, never negative");
+    }
+
+    #[test]
+    fn shard_links_split_demand_and_prefetch_bytes() {
+        // Throttle left ENABLED (DRAM profile: no sleeping) so reads
+        // reach the shard links and tag their traffic class.
+        let dir = crate::util::tempdir::TempDir::new("matkv-kvstore-class").unwrap();
+        let mut s = KvStore::open(dir.path(), StorageProfile::dram()).unwrap();
+        s.set_hot_tier(64 << 20);
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        s.store_sync(2, &chunk(2, 8)).unwrap();
+        assert_eq!(s.prefetch_many(&[1]).warmed, 1);
+        s.load(2).unwrap();
+        let sum = |class: TrafficClass| -> u64 {
+            s.shards().iter().map(|sh| sh.link().stats.bytes_for(class)).sum()
+        };
+        let file = s.encoded_bytes(&chunk(1, 8)) as u64;
+        assert_eq!(sum(TrafficClass::Prefetch), file);
+        assert_eq!(sum(TrafficClass::Demand), file);
+        assert_eq!(sum(TrafficClass::Write), 2 * file);
     }
 
     // --- prefetch -------------------------------------------------------

@@ -1,82 +1,89 @@
 //! Shared-device bandwidth/latency simulation.
+//!
+//! Since the interconnect refactor this is a thin wrapper over
+//! [`Link`] in [`LinkClock::Sleep`] mode: the queued-reservation core
+//! (`busy_until` slotting, backlog gauge, per-class byte counters) was
+//! extracted into the generic link model so flash shards, the host q8
+//! bus, and the fleet's H2D PCIe links all account time identically.
+//! What remains here is the storage-profile pricing (asymmetric
+//! read/write bandwidth) and the already-spent credit for real
+//! filesystem I/O.
 
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::hwsim::StorageProfile;
+use crate::hwsim::{Link, LinkClock, StorageProfile, TrafficClass};
 
 /// Serializes simulated transfer time across concurrent users of one
 /// storage device, like a real SSD's single internal bus.
 ///
 /// Each transfer computes its device time from the profile, reserves a
-/// slot `[start, start+t)` after the device's current `busy_until`, and
-/// sleeps the caller until the slot ends (minus however long the real
-/// filesystem I/O already took). With an unthrottled profile (DRAM tier)
-/// this degenerates to a no-op.
+/// slot `[start, start+t)` on the underlying [`Link`], and sleeps the
+/// caller until the slot ends (minus however long the real filesystem
+/// I/O already took). With an unthrottled profile (DRAM tier) this
+/// degenerates to a no-op.
 #[derive(Debug)]
 pub struct DeviceThrottle {
     profile: StorageProfile,
-    busy_until: Mutex<Option<Instant>>,
+    link: Link,
     /// Disable sleeping entirely (pure-functional tests).
     pub enabled: bool,
 }
 
 impl DeviceThrottle {
     pub fn new(profile: StorageProfile) -> Self {
-        DeviceThrottle { profile, busy_until: Mutex::new(None), enabled: true }
+        Self::with_enabled(profile, true)
     }
 
     /// A throttle with sleeping pre-configured (sharded stores rebuild
     /// one throttle per shard when swapping profiles; see
     /// [`crate::kvstore::Shard`]).
     pub fn with_enabled(profile: StorageProfile, enabled: bool) -> Self {
-        DeviceThrottle { profile, busy_until: Mutex::new(None), enabled }
+        let link = Link::new(profile.name.clone(), profile.read_bw, profile.latency_s, LinkClock::Sleep);
+        DeviceThrottle { profile, link, enabled }
     }
 
     pub fn profile(&self) -> &StorageProfile {
         &self.profile
     }
 
-    /// Seconds until this device would be idle (0 when idle now) — a
-    /// cheap backlog gauge for shard telemetry.
-    pub fn backlog_secs(&self) -> f64 {
-        let now = Instant::now();
-        match *self.busy_until.lock().unwrap() {
-            Some(b) if b > now => (b - now).as_secs_f64(),
-            _ => 0.0,
-        }
+    /// The underlying contended link — queue/busy/byte telemetry for
+    /// the per-shard serve report.
+    pub fn link(&self) -> &Link {
+        &self.link
     }
 
-    fn reserve(&self, device_secs: f64) -> Instant {
-        let now = Instant::now();
-        let mut busy = self.busy_until.lock().unwrap();
-        let start = busy.filter(|b| *b > now).unwrap_or(now);
-        let end = start + Duration::from_secs_f64(device_secs);
-        *busy = Some(end);
-        end
+    /// Seconds until this device would be idle (0 when idle now) — a
+    /// cheap backlog gauge for shard telemetry, read off the link's own
+    /// clock (see [`Link::backlog_secs`]).
+    pub fn backlog_secs(&self) -> f64 {
+        self.link.backlog_secs()
     }
 
     /// Charge a read of `bytes`; returns the simulated device seconds.
     /// `already_spent` is the real I/O time already consumed (subtracted
     /// from the injected sleep so total wall time matches the profile).
     pub fn charge_read(&self, bytes: usize, already_spent: Duration) -> f64 {
-        self.charge(self.profile.read_secs(bytes), already_spent)
+        self.charge_read_as(bytes, already_spent, TrafficClass::Demand)
+    }
+
+    /// [`DeviceThrottle::charge_read`] with an explicit traffic class,
+    /// so demand misses and speculative prefetches stay separable in
+    /// the link's byte counters.
+    pub fn charge_read_as(&self, bytes: usize, already_spent: Duration, class: TrafficClass) -> f64 {
+        self.charge(self.profile.read_secs(bytes), bytes, already_spent, class)
     }
 
     /// Charge a write of `bytes`; returns the simulated device seconds.
     pub fn charge_write(&self, bytes: usize, already_spent: Duration) -> f64 {
-        self.charge(self.profile.write_secs(bytes), already_spent)
+        self.charge(self.profile.write_secs(bytes), bytes, already_spent, TrafficClass::Write)
     }
 
-    fn charge(&self, device_secs: f64, already_spent: Duration) -> f64 {
+    fn charge(&self, device_secs: f64, bytes: usize, already_spent: Duration, class: TrafficClass) -> f64 {
         if !self.enabled || !device_secs.is_finite() {
             return device_secs;
         }
-        let end = self.reserve((device_secs - already_spent.as_secs_f64()).max(0.0));
-        let now = Instant::now();
-        if end > now {
-            std::thread::sleep(end - now);
-        }
+        let secs = (device_secs - already_spent.as_secs_f64()).max(0.0);
+        self.link.reserve_secs(secs, bytes, class);
         device_secs
     }
 }
@@ -85,6 +92,7 @@ impl DeviceThrottle {
 mod tests {
     use super::*;
     use std::sync::Arc;
+    use std::time::Instant;
 
     fn slow_profile(bw: f64) -> StorageProfile {
         StorageProfile {
@@ -166,5 +174,17 @@ mod tests {
             t.charge_read(1 << 30, Duration::ZERO);
         }
         assert!(start.elapsed().as_millis() < 100);
+    }
+
+    #[test]
+    fn traffic_classes_split_the_byte_counters() {
+        let t = DeviceThrottle::new(slow_profile(f64::INFINITY));
+        t.charge_read_as(1024, Duration::ZERO, TrafficClass::Prefetch);
+        t.charge_read(512, Duration::ZERO);
+        t.charge_write(256, Duration::ZERO);
+        let stats = &t.link().stats;
+        assert_eq!(stats.bytes_for(TrafficClass::Prefetch), 1024);
+        assert_eq!(stats.bytes_for(TrafficClass::Demand), 512);
+        assert_eq!(stats.bytes_for(TrafficClass::Write), 256);
     }
 }

@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 use super::cache::{CacheStats, DemoteSink, TierKind};
 use super::quant::{self, QuantChunk};
 use super::store::KvChunk;
+use crate::hwsim::{Link, TrafficClass};
 use crate::vectordb::ChunkId;
 
 struct WarmEntry {
@@ -83,6 +84,10 @@ pub enum WarmProbe {
 pub struct WarmTier {
     budget: usize,
     lru: Mutex<WarmLru>,
+    /// Shared host-side bus quantize traffic crosses on its way into
+    /// the tier ([`TrafficClass::Demotion`]); `None` (standalone tiers,
+    /// unit tests) keeps the pre-interconnect accounting exactly.
+    bus: Option<Arc<Link>>,
     pub stats: CacheStats,
 }
 
@@ -91,8 +96,18 @@ impl WarmTier {
         WarmTier {
             budget: budget_bytes,
             lru: Mutex::new(WarmLru::default()),
+            bus: None,
             stats: CacheStats::for_tier(TierKind::Warm),
         }
+    }
+
+    /// Wire the tier to the store's shared host bus: every quantize
+    /// pass then reserves its modeled seconds there, so demotions
+    /// contend with promotions (and each other) instead of being free
+    /// of queueing. Charge magnitudes are unchanged — the bus only adds
+    /// the queued-time telemetry ([`CacheStats::link_queued_secs`]).
+    pub fn set_bus(&mut self, bus: Arc<Link>) {
+        self.bus = Some(bus);
     }
 
     pub fn budget(&self) -> usize {
@@ -221,6 +236,10 @@ impl WarmTier {
         let q = Arc::new(quant::quantize(chunk));
         let quant_secs = crate::hwsim::profiles::q8_quant_secs(q.q8_bytes() as f64);
         self.stats.add_quant_secs(quant_secs);
+        if let Some(bus) = &self.bus {
+            let slot = bus.reserve_secs(quant_secs, q.q8_bytes(), TrafficClass::Demotion);
+            self.stats.add_link_queued_secs(slot.queued_secs);
+        }
         let admitted = self.admit(id, q, file_bytes, prefetched, seen_gen);
         (admitted, quant_secs)
     }

@@ -50,7 +50,12 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --routing rr|role (with --fleet: round-robin baseline, or
                            role-aware — KV-resident batches to low-end
                            decode workers, cache-miss/prefill-heavy ones
-                           to the high-end card; default rr)";
+                           to the high-end card; default rr)
+               --pcie-contention on|off (with --fleet: queue H2D uploads
+                           on each worker's modeled PCIe link [on], or
+                           grant every transfer its wire time with no
+                           queueing — the pre-interconnect flat charge
+                           [off]; default on)";
 
 fn storage_profile(name: &str) -> Result<StorageProfile> {
     Ok(match name {
@@ -126,6 +131,14 @@ fn serve(args: &Args) -> Result<()> {
     if args.opt("routing").is_some() && fleet_spec.is_none() {
         anyhow::bail!("--routing selects a fleet dispatch policy; it requires --fleet");
     }
+    let pcie_contention = match args.str("pcie-contention", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--pcie-contention takes on|off, got {other}"),
+    };
+    if args.opt("pcie-contention").is_some() && fleet_spec.is_none() {
+        anyhow::bail!("--pcie-contention shapes fleet H2D uploads; it requires --fleet");
+    }
 
     let m = Manifest::load(matkv::artifacts_dir())?;
     let corpus = Corpus::generate(docs, doc_tokens, docs.min(16), 42);
@@ -173,7 +186,7 @@ fn serve(args: &Args) -> Result<()> {
     let arch = ArchSpec::standin_for(&config);
     let storage = storage_profile(&args.str("storage", "9100pro"))?;
     let mut fleet = fleet_spec.as_ref().map(|spec| {
-        Fleet::new(
+        let mut f = Fleet::new(
             spec,
             routing,
             FleetCostModel {
@@ -183,7 +196,9 @@ fn serve(args: &Args) -> Result<()> {
                 query_tokens: 20,
                 chunk_step: engine.opts.chunk_step,
             },
-        )
+        );
+        f.set_contention(pcie_contention);
+        f
     });
 
     // Every serve path goes through the scheduler: a queue of (possibly
@@ -336,16 +351,30 @@ fn serve(args: &Args) -> Result<()> {
             let st = &shard.stats;
             println!(
                 "  shard {:02}: {} reads / {:.1} MB read / {:.3}s device / peak queue {} / \
-                 backlog {:.3}s | {} writes",
+                 backlog {:.3}s / link queued {:.3}s | {} writes",
                 shard.index(),
                 st.reads.load(Relaxed),
                 st.bytes_read.load(Relaxed) as f64 / 1e6,
                 st.read_device_secs(),
                 st.peak_queue_depth.load(Relaxed),
                 shard.backlog_secs(),
+                shard.link().stats.queued_secs(),
                 st.writes.load(Relaxed),
             );
         }
+    }
+    // The shared host-side bus only carries tier traffic (warm-hit
+    // promotion, eviction demotion); quiet runs print nothing.
+    let bus = engine.kv.bus().stats.snapshot();
+    if bus.reserves > 0 {
+        println!(
+            "host bus: {} reserves / {:.1} MB / busy {:.3}s / queued {:.3}s / peak backlog {:.3}s",
+            bus.reserves,
+            bus.bytes_by_class.iter().sum::<u64>() as f64 / 1e6,
+            bus.busy_secs,
+            bus.queued_secs,
+            bus.peak_backlog_secs,
+        );
     }
     println!(
         "simulated H100 @ {} scale: load {:.4}s | prefill {:.4}s | decode {:.4}s | total {:.4}s",
@@ -363,10 +392,11 @@ fn serve(args: &Args) -> Result<()> {
         let materialized = materialized_before.unwrap_or_default();
         let rep = fleet.dispatch(&schedule.batches, &|id| materialized.contains(&id));
         println!(
-            "fleet ({} workers, routing={}): {} prefill-heavy / {} KV-resident batches, \
+            "fleet ({} workers, routing={}, pcie {}): {} prefill-heavy / {} KV-resident batches, \
              makespan {:.2}s (virtual), {:.1} tok/s, {:.2} kJ, {:.4} tok/J",
             rep.workers.len(),
             rep.routing.label(),
+            if rep.contention { "queued" } else { "flat" },
             rep.prefill_batches,
             rep.decode_batches,
             rep.makespan_secs,
@@ -377,7 +407,8 @@ fn serve(args: &Args) -> Result<()> {
         for (i, w) in rep.workers.iter().enumerate() {
             println!(
                 "  worker {i:02} {:8} [{:7}]: {} batches / {} reqs / {} tokens | busy {:.2}s \
-                 ({:.0}% util) | load {:.3}s | transfer {:.3}s | {:.2} kJ",
+                 ({:.0}% util) | load {:.3}s | transfer {:.3}s | link queued {:.3}s \
+                 (peak {:.3}s) | {:.2} kJ",
                 w.name,
                 w.role.label(),
                 w.batches,
@@ -387,6 +418,8 @@ fn serve(args: &Args) -> Result<()> {
                 100.0 * w.utilization,
                 w.load_secs,
                 w.transfer_secs,
+                w.link.queued_secs,
+                w.link.peak_backlog_secs,
                 w.energy_kj,
             );
         }
