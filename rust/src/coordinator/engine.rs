@@ -204,6 +204,16 @@ impl LoaderCtx {
                 // the arch-scale costing charges the symmetric pass.
                 staged.metrics.warm_admit_tokens += l.chunk.seq_len as usize;
             }
+            staged.metrics.retries += l.retries;
+            staged.metrics.retry_backoff_secs += l.retry_backoff_secs;
+            staged.metrics.checksum_failures += l.checksum_failures;
+            if l.recomputed {
+                // Served by the Vanilla recompute safety net: no healthy
+                // flash read backs these tokens.
+                staged.metrics.recomputed_chunks += 1;
+                staged.metrics.recompute_fallback_secs += l.recompute_secs;
+                staged.metrics.degraded_tokens += l.chunk.seq_len as usize;
+            }
             if l.from_warm {
                 staged.metrics.warm_hits += 1;
                 staged.metrics.warm_tokens += l.chunk.seq_len as usize;

@@ -79,8 +79,8 @@ use anyhow::{bail, Context, Result};
 use super::metrics::{LatencySummary, Percentiles, PhaseBreakdown, WorkTrace};
 use super::scheduler::{PlannedBatch, ServiceEstimator};
 use crate::hwsim::{
-    serving_profile, ArchSpec, DeviceProfile, EnergyMeter, Link, LinkClock, LinkSnapshot,
-    PhaseKind, StorageProfile, TrafficClass, SERVING_GPUS,
+    serving_profile, ArchSpec, DeviceProfile, EnergyMeter, FaultPlan, Link, LinkClock,
+    LinkSnapshot, PhaseKind, StorageProfile, TrafficClass, SERVING_GPUS,
 };
 use crate::kvstore::ResidentSet;
 use crate::vectordb::ChunkId;
@@ -607,7 +607,9 @@ impl FleetReport {
             "{{\"routing\":\"{}\",\"contention\":{},\"workers\":[{}],\"prefill_batches\":{},\
              \"decode_batches\":{},\"makespan_secs\":{:.6},\"requests\":{},\
              \"tokens_out\":{},\"tokens_per_sec\":{:.3},\"total_kj\":{:.6},\
-             \"tokens_per_joule\":{:.6},\"latency\":{{\"mean\":{:.6},\"p50\":{:.6},\
+             \"tokens_per_joule\":{:.6},\"requeued_requests\":{},\"recomputed_chunks\":{},\
+             \"degraded_tokens\":{},\"recompute_fallback_secs\":{:.6},\
+             \"latency\":{{\"mean\":{:.6},\"p50\":{:.6},\
              \"p95\":{:.6},\"p99\":{:.6}}}}}",
             self.routing.label(),
             self.contention,
@@ -620,6 +622,10 @@ impl FleetReport {
             self.throughput(),
             self.total_kj,
             self.tokens_per_joule,
+            self.metrics.requeued_requests,
+            self.metrics.recomputed_chunks,
+            self.metrics.degraded_tokens,
+            self.metrics.recompute_fallback_secs,
             self.latency.mean,
             self.latency.p50,
             self.latency.p95,
@@ -649,6 +655,14 @@ pub struct Fleet {
     /// batches load chunks (eviction is not simulated — same
     /// approximation as the scheduler's warm-set window).
     host_resident: HashSet<ChunkId>,
+    /// Optional fault plan ([`Fleet::set_faults`]): worker crashes on
+    /// the dispatch virtual clock. `None` (the default) is the exact
+    /// pre-fault dispatch, bit for bit.
+    faults: Option<Arc<FaultPlan>>,
+    /// Chunks whose flash copy is unreachable (dead shard): they price
+    /// as on-device recompute even though they were materialized
+    /// ([`Fleet::set_lost_chunks`]).
+    lost: Option<Arc<dyn Fn(ChunkId) -> bool + Send + Sync>>,
 }
 
 impl Fleet {
@@ -677,7 +691,27 @@ impl Fleet {
             rr_next: 0,
             seed: HashSet::new(),
             host_resident: HashSet::new(),
+            faults: None,
+            lost: None,
         }
+    }
+
+    /// Install a fault plan: workers crash at their plan-scheduled
+    /// virtual times and their in-flight batches are requeued onto the
+    /// survivors with arrival times preserved. No plan → the exact
+    /// pre-fault dispatch.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// Mark chunks whose flash copy is gone (e.g. a dead shard:
+    /// `plan.shard_dead(kv.shard_index_of(id))`). Dispatch prices them
+    /// as on-device recompute — the Vanilla safety net at fleet scale —
+    /// and the extra prefill seconds land in
+    /// `PhaseBreakdown::recompute_fallback_secs` at the assigned
+    /// worker's rate.
+    pub fn set_lost_chunks(&mut self, lost: Arc<dyn Fn(ChunkId) -> bool + Send + Sync>) {
+        self.lost = Some(lost);
     }
 
     /// Toggle PCIe queueing on every worker's H2D link (default on).
@@ -754,7 +788,32 @@ impl Fleet {
 
     /// Classify + route one batch (its device-independent work already
     /// prepared): the chosen worker index and its modeled cost there.
-    fn route(&self, batch: &PlannedBatch, work: &BatchWork, needs_prefill: bool) -> (usize, BatchCost) {
+    /// `crash` is the per-worker crash time (None on a clean run):
+    /// workers already crashed at the batch's release are excluded, so
+    /// role-aware routing rebalances around a dead card and round-robin
+    /// skips it.
+    fn route(
+        &self,
+        batch: &PlannedBatch,
+        work: &BatchWork,
+        needs_prefill: bool,
+        crash: &[Option<f64>],
+    ) -> (usize, BatchCost) {
+        let dead = |i: usize| crash[i].is_some_and(|t| t <= batch.release_secs);
+        let alive: Vec<usize> = (0..self.workers.len()).filter(|&i| !dead(i)).collect();
+        let pool: Vec<usize> = if alive.is_empty() {
+            // Every worker is down. Real serving would page an operator;
+            // the simulation warns loudly and keeps going (no request is
+            // ever dropped), treating the fleet as restarted.
+            eprintln!(
+                "[fleet] WARNING: every worker has crashed by t={:.3}; \
+                 dispatching on the full pool anyway",
+                batch.release_secs
+            );
+            (0..self.workers.len()).collect()
+        } else {
+            alive
+        };
         let cost_on = |i: usize| {
             self.model.work_cost(
                 work,
@@ -765,18 +824,17 @@ impl Fleet {
         };
         match self.routing {
             Routing::RoundRobin => {
-                let i = self.rr_next % self.workers.len();
+                let i = pool[self.rr_next % pool.len()];
                 (i, cost_on(i))
             }
             Routing::RoleAware => {
                 let want = if needs_prefill { Role::Prefill } else { Role::Decode };
-                let mut candidates: Vec<usize> = (0..self.workers.len())
-                    .filter(|&i| self.workers[i].role == want)
-                    .collect();
+                let mut candidates: Vec<usize> =
+                    pool.iter().copied().filter(|&i| self.workers[i].role == want).collect();
                 if candidates.is_empty() {
-                    // homogeneous fleet (or no card of that class):
-                    // everyone is a candidate
-                    candidates = (0..self.workers.len()).collect();
+                    // homogeneous fleet (or no surviving card of that
+                    // class): every live worker is a candidate
+                    candidates = pool;
                 }
                 let mut best: Option<(usize, BatchCost, f64)> = None;
                 for i in candidates {
@@ -848,18 +906,43 @@ impl Fleet {
         let mut prefill_batches = 0usize;
         let mut decode_batches = 0usize;
 
-        for batch in batches {
+        // Fault wiring. On a clean run (no plan, no lost set) `mat`
+        // delegates straight to `materialized` and `crash` is all-None,
+        // so the loop below replays the pre-fault dispatch bit for bit.
+        let crash: Vec<Option<f64>> = match &self.faults {
+            Some(p) => (0..self.workers.len()).map(|i| p.worker_crash_at(i)).collect(),
+            None => vec![None; self.workers.len()],
+        };
+        let lost = self.lost.clone();
+        let is_lost = |id: ChunkId| lost.as_ref().is_some_and(|f| f(id));
+        let mat = |id: ChunkId| materialized(id) && !is_lost(id);
+        let mut requeued_requests = 0usize;
+        let mut recomputed_chunks = 0usize;
+        let mut recompute_fallback_secs = 0.0f64;
+        let mut degraded_tokens = 0usize;
+
+        // Requeues append behind the planned batches; a requeued batch
+        // keeps its arrivals (latency stays honest about the crash) but
+        // releases at the crash instant, when the loss is detectable.
+        let mut queue: VecDeque<PlannedBatch> = batches.iter().cloned().collect();
+        let mut popped = 0usize;
+        while let Some(batch) = queue.pop_front() {
             // Device-independent work once per batch; classification
             // falls out of it (one materialized() walk), and candidates
             // only pay the residency walk + roofline conversion.
-            let work = self.model.batch_work(&batch.reqs, &batch.retrieved, materialized);
+            let work = self.model.batch_work(&batch.reqs, &batch.retrieved, &mat);
             let needs_prefill = work.needs_prefill();
-            if needs_prefill {
-                prefill_batches += 1;
-            } else {
-                decode_batches += 1;
+            // classify planned batches once; requeued copies (popped
+            // past the original plan) are not double-counted
+            if popped < batches.len() {
+                if needs_prefill {
+                    prefill_batches += 1;
+                } else {
+                    decode_batches += 1;
+                }
             }
-            let (wi, cost) = self.route(batch, &work, needs_prefill);
+            popped += 1;
+            let (wi, cost) = self.route(&batch, &work, needs_prefill, &crash);
             self.rr_next += 1;
             assignments.push(wi);
 
@@ -875,6 +958,26 @@ impl Fleet {
             let transfer_done = h2d_upload(&w.link, load_done, &cost, chunk_bytes);
             let start = transfer_done.max(w.free_at);
             let done = start + cost.prefill_secs + cost.decode_secs;
+
+            // Crash mid-dispatch: the worker dies before this batch
+            // completes. It keeps whatever it burned up to the crash,
+            // then the batch requeues onto the survivors.
+            if let Some(t) = crash[wi] {
+                if t > batch.release_secs && done > t {
+                    let partial = (t - start).max(0.0);
+                    w.free_at = t;
+                    w.busy_secs += cost.load_secs + cost.transfer_secs + partial;
+                    w.load_secs += cost.load_secs;
+                    w.transfer_secs += cost.transfer_secs;
+                    w.meter.record(PhaseKind::StorageIo, cost.load_secs);
+                    w.meter.record(PhaseKind::GpuCompute, cost.transfer_secs + partial);
+                    requeued_requests += batch.reqs.len();
+                    let mut again = batch;
+                    again.release_secs = t;
+                    queue.push_back(again);
+                    continue;
+                }
+            }
             w.free_at = done;
             w.busy_secs += cost.total_secs();
             w.load_secs += cost.load_secs;
@@ -887,6 +990,34 @@ impl Fleet {
             for &arrival in &batch.arrivals {
                 latency.record(done - arrival);
             }
+
+            // Lost-chunk accounting: chunks that *were* materialized but
+            // sit on dead storage were just recomputed on this worker.
+            // The surcharge is exact — this batch's prefill minus what
+            // it would have cost with those chunks loadable, priced on
+            // the assigned device.
+            if lost.is_some() {
+                let mut lost_ids: HashSet<ChunkId> = HashSet::new();
+                let mut lost_elems = 0usize;
+                for ids in &batch.retrieved {
+                    for &id in ids {
+                        if materialized(id) && is_lost(id) {
+                            lost_elems += 1;
+                            lost_ids.insert(id);
+                        }
+                    }
+                }
+                if !lost_ids.is_empty() {
+                    recomputed_chunks += lost_ids.len();
+                    degraded_tokens += lost_elems * self.model.chunk_tokens;
+                    let healthy =
+                        self.model.batch_work(&batch.reqs, &batch.retrieved, materialized);
+                    let healthy_prefill =
+                        self.model.arch.trace_secs(&healthy.prefill, &self.workers[wi].profile);
+                    recompute_fallback_secs += (cost.prefill_secs - healthy_prefill).max(0.0);
+                }
+            }
+
             // Evolve both residency models: the batch's materialized
             // chunks are now in host DRAM and on this worker.
             for &id in &work.unique_chunks {
@@ -930,6 +1061,10 @@ impl Fleet {
         metrics.requests = requests;
         metrics.tokens_out = tokens_out;
         metrics.request_latency = latency.clone();
+        metrics.requeued_requests = requeued_requests;
+        metrics.recomputed_chunks = recomputed_chunks;
+        metrics.recompute_fallback_secs = recompute_fallback_secs;
+        metrics.degraded_tokens = degraded_tokens;
 
         FleetReport {
             routing: self.routing,
@@ -1351,6 +1486,83 @@ mod tests {
             est_miss.batch_secs(&b.reqs, &b.retrieved) > secs,
             "prefill-heavy batches must out-price resident ones"
         );
+    }
+
+    #[test]
+    fn worker_crash_requeues_in_flight_requests_onto_survivors() {
+        // Worker 1 dies almost immediately: the two batches round-robin
+        // would hand it are interrupted mid-dispatch and requeued onto
+        // worker 0 with their arrival times intact — no request is lost.
+        let plan = Arc::new(FaultPlan::parse("worker1:crash@0.0001").unwrap());
+        let batches: Vec<PlannedBatch> =
+            (0..4).map(|i| batch(10 * i, 2, vec![i, i + 100], 0.0)).collect();
+        let mut fleet =
+            Fleet::new(&FleetSpec::parse("rtx4090:2").unwrap(), Routing::RoundRobin, model());
+        fleet.set_faults(plan);
+        let rep = fleet.dispatch(&batches, &all_materialized);
+        assert_eq!(rep.requests, 8, "every request must complete despite the crash");
+        assert_eq!(rep.tokens_out, 8 * 16);
+        assert_eq!(rep.metrics.request_latency.len(), 8, "one latency sample per request");
+        assert!(rep.metrics.requeued_requests > 0, "crash must requeue in-flight work");
+        assert_eq!(rep.workers[0].batches, 4, "the survivor absorbs everything");
+        assert_eq!(rep.workers[1].batches, 0, "the dead card completes nothing");
+        assert!(rep.to_json().contains("\"requeued_requests\":"));
+    }
+
+    #[test]
+    fn faulted_dispatch_is_deterministic_and_reroutes_around_dead_storage() {
+        // A decode card crashes mid-trace and chunk 3's shard is gone:
+        // role-aware routing rebalances onto the survivors, the lost
+        // chunk prices as on-device recompute (billed to the assigned
+        // worker), and the whole faulted run replays bit-identically.
+        let batches: Vec<PlannedBatch> = (0..8)
+            .map(|i| batch(10 * i, 3, vec![i % 4, 50 + i % 3], 0.01 * i as f64))
+            .collect();
+        let run = || {
+            let mut fleet = Fleet::new(
+                &FleetSpec::parse("h100:1,rtx4090:2").unwrap(),
+                Routing::RoleAware,
+                model(),
+            );
+            fleet.set_faults(Arc::new(FaultPlan::parse("seed=3,worker2:crash@0.02").unwrap()));
+            fleet.set_lost_chunks(Arc::new(|id| id == 3));
+            fleet.dispatch(&batches, &all_materialized)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.total_kj, b.total_kj);
+        // zero failed requests: all 24 planned requests completed
+        assert_eq!(a.requests, 8 * 3);
+        // the dead shard's chunk was recomputed — and billed — somewhere
+        assert!(a.metrics.recomputed_chunks > 0);
+        assert!(a.metrics.degraded_tokens > 0);
+        assert!(a.metrics.recompute_fallback_secs > 0.0);
+        // batches retrieving chunk 3 are prefill-heavy now → the H100
+        assert!(a.prefill_batches > 0);
+        assert!(a.to_json().contains("\"recomputed_chunks\":"));
+    }
+
+    #[test]
+    fn fault_free_dispatch_is_unchanged_by_the_fault_plumbing() {
+        // No plan installed: the queue-based loop must replay the
+        // pre-fault dispatch exactly — zeroed recovery counters and the
+        // same decision trail the clean determinism test pins.
+        let batches: Vec<PlannedBatch> =
+            (0..6).map(|i| batch(10 * i, 2, vec![i, i + 100], 0.005 * i as f64)).collect();
+        let mut fleet = Fleet::new(
+            &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+            Routing::RoleAware,
+            model(),
+        );
+        let rep = fleet.dispatch(&batches, &all_materialized);
+        assert_eq!(rep.assignments.len(), batches.len(), "no requeues on a clean run");
+        assert_eq!(rep.metrics.requeued_requests, 0);
+        assert_eq!(rep.metrics.recomputed_chunks, 0);
+        assert_eq!(rep.metrics.degraded_tokens, 0);
+        assert_eq!(rep.metrics.recompute_fallback_secs, 0.0);
+        assert!(rep.to_json().contains("\"requeued_requests\":0"));
     }
 
     #[test]

@@ -151,6 +151,26 @@ pub struct PhaseBreakdown {
     /// batch completion), recorded by the fleet dispatcher. Empty for
     /// wall-clock serve paths, which have no virtual completion times.
     pub request_latency: Percentiles,
+    /// Shard-read retries the degradation ladder spent (fault plans
+    /// only; every counter below is 0 on a clean run).
+    pub retries: usize,
+    /// Simulated seconds spent in retry backoff, charged on shard links.
+    pub retry_backoff_secs: f64,
+    /// Reads whose v3 payload checksum rejected corrupted bytes.
+    pub checksum_failures: usize,
+    /// Chunks served by the Vanilla recompute safety net (flash
+    /// unrecoverable; their tokens were re-prefilled instead of loaded).
+    pub recomputed_chunks: usize,
+    /// Modeled seconds of that fallback recompute (store scale; the
+    /// fleet dispatcher re-prices lost chunks per worker on top).
+    pub recompute_fallback_secs: f64,
+    /// In-flight requests requeued off a crashed fleet worker (their
+    /// arrival times are preserved, so `request_latency` reflects the
+    /// disruption honestly).
+    pub requeued_requests: usize,
+    /// Tokens served in degraded mode — via the recompute fallback
+    /// rather than a healthy load path.
+    pub degraded_tokens: usize,
 }
 
 /// Element-wise `a[i] += b[i]`, growing `a` as needed.
@@ -240,6 +260,13 @@ impl PhaseBreakdown {
             &other.worker_link_peak_backlog_secs,
         );
         self.request_latency.merge(&other.request_latency);
+        self.retries += other.retries;
+        self.retry_backoff_secs += other.retry_backoff_secs;
+        self.checksum_failures += other.checksum_failures;
+        self.recomputed_chunks += other.recomputed_chunks;
+        self.recompute_fallback_secs += other.recompute_fallback_secs;
+        self.requeued_requests += other.requeued_requests;
+        self.degraded_tokens += other.degraded_tokens;
     }
 
     /// Simulated prefill seconds for the trace under an architecture.
@@ -443,6 +470,38 @@ mod tests {
         assert_eq!(a.warm_bytes_saved, 40);
         assert!((a.dequant_secs - 0.75).abs() < 1e-12);
         assert!((a.quant_secs - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_accumulates_fault_recovery_fields() {
+        let mut a = PhaseBreakdown {
+            retries: 1,
+            retry_backoff_secs: 0.004,
+            checksum_failures: 1,
+            recomputed_chunks: 2,
+            recompute_fallback_secs: 0.5,
+            requeued_requests: 1,
+            degraded_tokens: 256,
+            ..Default::default()
+        };
+        let b = PhaseBreakdown {
+            retries: 3,
+            retry_backoff_secs: 0.012,
+            checksum_failures: 0,
+            recomputed_chunks: 1,
+            recompute_fallback_secs: 0.25,
+            requeued_requests: 2,
+            degraded_tokens: 512,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.retries, 4);
+        assert!((a.retry_backoff_secs - 0.016).abs() < 1e-12);
+        assert_eq!(a.checksum_failures, 1);
+        assert_eq!(a.recomputed_chunks, 3);
+        assert!((a.recompute_fallback_secs - 0.75).abs() < 1e-12);
+        assert_eq!(a.requeued_requests, 3);
+        assert_eq!(a.degraded_tokens, 768);
     }
 
     #[test]

@@ -1089,6 +1089,67 @@ mod tests {
     }
 
     #[test]
+    fn faulted_fleet_dispatch_replays_bit_identically_on_poisson_zipf_trace() {
+        // Satellite: same seed + same fault plan ⇒ the same
+        // degradation schedule, bit for bit — the fleet-determinism
+        // contract extended to the failure path. One flash shard is
+        // dead from the start and a decode card crashes mid-trace;
+        // every request still completes, on the recompute safety net
+        // and the surviving workers.
+        use crate::coordinator::fleet::{Fleet, FleetCostModel, FleetSpec, Routing};
+        use crate::hwsim::{ArchSpec, FaultPlan, StorageProfile};
+        let corpus = Corpus::generate(16, 64, 16, 3);
+        let (_d, ctx) = golden_ctx(&corpus, 32 << 20, 2);
+        let mut gen = ArrivalGen::new(
+            TurboRagProfile { top_k: 2, query_tokens: 12.0, output_tokens: 4 },
+            corpus.n_topics,
+            1.1,
+            150.0,
+            9,
+        );
+        let trace = gen.take(&corpus, 32);
+        let mut s = Scheduler::new(
+            ctx.clone(),
+            SchedOptions {
+                batch: BatchPolicy { max_batch: 4, max_wait_secs: 0.02 },
+                policy: SchedPolicy::Fifo,
+                service_estimate_secs: 0.0,
+                estimator: None,
+            },
+        );
+        s.enqueue_timed(trace);
+        let plan = s.plan_with_retrieval();
+        let model = FleetCostModel {
+            arch: ArchSpec::llama_70b(),
+            storage: StorageProfile::ssd_9100pro(),
+            chunk_tokens: DOC_TOKENS,
+            query_tokens: 12,
+            chunk_step: 256,
+        };
+        let fault = Arc::new(FaultPlan::parse("seed=5,shard0:die@0,worker3:crash@0.05").unwrap());
+        let run = || {
+            let mut fleet = Fleet::new(
+                &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+                Routing::RoleAware,
+                model.clone(),
+            );
+            fleet.seed_resident(&ctx.kv.resident_set());
+            fleet.set_faults(fault.clone());
+            let (kv, plan_ref) = (ctx.kv.clone(), fault.clone());
+            fleet.set_lost_chunks(Arc::new(move |id| plan_ref.shard_dead(kv.shard_index_of(id))));
+            fleet.dispatch(&plan.batches, &|id| ctx.kv.contains(id))
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.assignments, b.assignments, "faulted assignment trail must replay");
+        assert_eq!(a.latency, b.latency, "faulted percentiles must replay");
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.requests, 32, "zero failed requests under faults");
+        assert!(a.metrics.recomputed_chunks > 0, "the dead shard's chunks must recompute");
+        assert!(a.metrics.degraded_tokens > 0);
+        assert!(a.metrics.recompute_fallback_secs > 0.0);
+    }
+
+    #[test]
     fn affinity_reads_no_more_than_fifo_on_skewed_replay() {
         // The co-design claim at unit scale: same trace, same store
         // shape, equal batch size — affinity's schedule must touch the

@@ -1,0 +1,401 @@
+//! Deterministic fault injection: a seeded, virtual-clock schedule of
+//! failures the recovery machinery is graded against.
+//!
+//! MatKV trades GPU recompute for a dependency on storage and
+//! interconnect staying healthy. A [`FaultPlan`] makes that dependency
+//! testable: it is a *plan*, not a random process — every injected
+//! event is pinned to a deterministic coordinate, so the same plan
+//! against the same trace replays bit-for-bit (mirroring the fleet's
+//! virtual-clock determinism guarantees):
+//!
+//! * **Shard events** key on the shard's *read sequence number* — the
+//!   flash shards run on wall-clock sleep links, so "the 6th read on
+//!   shard 0" is the reproducible coordinate, not a wall instant.
+//!   Retries advance the sequence, which is exactly what lets a
+//!   windowed stall heal under retry-with-backoff while a permanent
+//!   death falls through to the recompute ladder.
+//! * **Worker events** key on the fleet dispatcher's virtual clock —
+//!   "worker 1 crashes at t = 0.25s" lands between the same two batch
+//!   completions every run.
+//! * **Corruption** flips one payload bit chosen by a splitmix64 hash
+//!   of `(plan seed, shard, read seq)`: silent on the device, caught by
+//!   the v3 record checksum.
+//!
+//! Spec grammar (the CLI's `--faults`), comma-separated events:
+//!
+//! ```text
+//! seed=N                     reseed the corruption hash (default 0x5eed)
+//! shardS:slowFx@A..B         reads A..B on shard S take Fx device time
+//! shardS:stall@A..B          reads A..B on shard S error, then heal
+//! shardS:die@A               shard S dead from read A on (permanent)
+//! shardS:corrupt@A           read A on shard S returns one flipped bit
+//! shardS:wfail@A..B          writes A..B on shard S error
+//! workerW:crash@T            fleet worker W goes offline at virtual T secs
+//! ```
+//!
+//! `@A` with no `..B` means the single-event window `A..A+1`. Example:
+//! `--faults "shard0:die@6,worker1:crash@0.25,shard1:corrupt@3"`.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// One injectable failure. Shard windows are half-open `[from, to)`
+/// over that shard's 0-based read (or write) sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Reads in the window take `factor`× the modeled device time.
+    ShardSlow { shard: usize, factor: f64, from: u64, to: u64 },
+    /// Reads in the window error (a timeout), then the shard heals.
+    ShardStall { shard: usize, from: u64, to: u64 },
+    /// Every read from sequence `from` on errors — the shard is gone.
+    ShardDie { shard: usize, from: u64 },
+    /// Read `read` silently returns a buffer with one flipped payload
+    /// bit (the file on disk stays intact — it is the *transfer* that
+    /// lied, which is what the record checksum exists to catch).
+    ShardCorrupt { shard: usize, read: u64 },
+    /// Writes in the window error (surfaced as `write_errors`).
+    ShardWriteFail { shard: usize, from: u64, to: u64 },
+    /// Fleet worker `worker` goes offline at virtual second `at`.
+    WorkerCrash { worker: usize, at: f64 },
+}
+
+/// The injection decision for one shard read, returned by
+/// [`FaultPlan::on_read`]. Fields compose: a read can be both slowed
+/// and corrupted (fail wins over corrupt — an errored read returns no
+/// buffer to flip).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReadFault {
+    /// Multiplier on the modeled device seconds (1.0 = untouched).
+    pub slow_factor: f64,
+    /// `Some(reason)`: the read errors instead of returning bytes.
+    pub fail: Option<&'static str>,
+    /// `Some(hash)`: flip one payload bit derived from this value.
+    pub corrupt: Option<u64>,
+}
+
+impl ReadFault {
+    const CLEAN: ReadFault = ReadFault { slow_factor: 1.0, fail: None, corrupt: None };
+
+    /// True when this read is delivered untouched.
+    pub fn is_clean(&self) -> bool {
+        *self == Self::CLEAN
+    }
+}
+
+/// A deterministic failure schedule shared (via `Arc`) by the store's
+/// shards and the fleet dispatcher. Interior per-shard sequence
+/// counters make it injectable behind `Arc` without plumbing `&mut`
+/// through the read path.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    events: Vec<FaultEvent>,
+    /// Per-shard read/write sequence counters (keyed `shard`).
+    reads: Mutex<HashMap<usize, u64>>,
+    writes: Mutex<HashMap<usize, u64>>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, events: Vec<FaultEvent>) -> Self {
+        FaultPlan {
+            seed,
+            events,
+            reads: Mutex::new(HashMap::new()),
+            writes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Parse the `--faults` spec grammar (module docs). Empty specs and
+    /// plans with zero events are rejected — a no-op plan is almost
+    /// certainly a typo, and `--faults` absent is the no-op spelling.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0x5eed_u64;
+        let mut events = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(s) = item.strip_prefix("seed=") {
+                seed = s.parse().with_context(|| format!("bad fault seed {s:?}"))?;
+                continue;
+            }
+            let (target, action) = item
+                .split_once(':')
+                .with_context(|| format!("fault event {item:?} missing ':'"))?;
+            if let Some(w) = target.strip_prefix("worker") {
+                let worker: usize =
+                    w.parse().with_context(|| format!("bad worker index in {item:?}"))?;
+                let at = action
+                    .strip_prefix("crash@")
+                    .with_context(|| format!("worker fault {item:?} must be crash@T"))?;
+                let at: f64 = at.parse().with_context(|| format!("bad crash time in {item:?}"))?;
+                if !at.is_finite() || at < 0.0 {
+                    bail!("crash time must be finite and >= 0 in {item:?}");
+                }
+                events.push(FaultEvent::WorkerCrash { worker, at });
+                continue;
+            }
+            let shard: usize = target
+                .strip_prefix("shard")
+                .with_context(|| format!("fault target {target:?} must be shardN or workerN"))?
+                .parse()
+                .with_context(|| format!("bad shard index in {item:?}"))?;
+            let (verb, arg) = action
+                .split_once('@')
+                .with_context(|| format!("shard fault {item:?} missing '@'"))?;
+            events.push(if let Some(f) = verb.strip_prefix("slow") {
+                let factor: f64 = f
+                    .strip_suffix('x')
+                    .with_context(|| format!("slow factor in {item:?} must end in 'x'"))?
+                    .parse()
+                    .with_context(|| format!("bad slow factor in {item:?}"))?;
+                if !factor.is_finite() || factor < 1.0 {
+                    bail!("slow factor must be >= 1 in {item:?}");
+                }
+                let (from, to) = parse_window(arg, item)?;
+                FaultEvent::ShardSlow { shard, factor, from, to }
+            } else {
+                match verb {
+                    "stall" => {
+                        let (from, to) = parse_window(arg, item)?;
+                        FaultEvent::ShardStall { shard, from, to }
+                    }
+                    "die" => FaultEvent::ShardDie {
+                        shard,
+                        from: arg.parse().with_context(|| format!("bad die point in {item:?}"))?,
+                    },
+                    "corrupt" => FaultEvent::ShardCorrupt {
+                        shard,
+                        read: arg
+                            .parse()
+                            .with_context(|| format!("bad corrupt point in {item:?}"))?,
+                    },
+                    "wfail" => {
+                        let (from, to) = parse_window(arg, item)?;
+                        FaultEvent::ShardWriteFail { shard, from, to }
+                    }
+                    other => bail!("unknown shard fault {other:?} in {item:?}"),
+                }
+            });
+        }
+        if events.is_empty() {
+            bail!("fault spec {spec:?} names no events");
+        }
+        Ok(FaultPlan::new(seed, events))
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Advance shard `shard`'s read sequence and fold every matching
+    /// event into one injection decision. Called once per read
+    /// *attempt* — retries advance the sequence, so windowed faults
+    /// heal under backoff while permanent ones don't.
+    pub fn on_read(&self, shard: usize) -> ReadFault {
+        let seq = {
+            let mut reads = self.reads.lock().unwrap();
+            let c = reads.entry(shard).or_insert(0);
+            let seq = *c;
+            *c += 1;
+            seq
+        };
+        let mut fault = ReadFault::CLEAN;
+        for ev in &self.events {
+            match *ev {
+                FaultEvent::ShardSlow { shard: s, factor, from, to }
+                    if s == shard && (from..to).contains(&seq) =>
+                {
+                    fault.slow_factor *= factor;
+                }
+                FaultEvent::ShardStall { shard: s, from, to }
+                    if s == shard && (from..to).contains(&seq) =>
+                {
+                    fault.fail = Some("injected stall");
+                }
+                FaultEvent::ShardDie { shard: s, from } if s == shard && seq >= from => {
+                    fault.fail = Some("shard dead");
+                }
+                FaultEvent::ShardCorrupt { shard: s, read } if s == shard && seq == read => {
+                    fault.corrupt =
+                        Some(splitmix64(self.seed ^ ((shard as u64) << 32) ^ seq));
+                }
+                _ => {}
+            }
+        }
+        fault
+    }
+
+    /// Advance shard `shard`'s write sequence; `Some(reason)` fails it.
+    pub fn on_write(&self, shard: usize) -> Option<&'static str> {
+        let seq = {
+            let mut writes = self.writes.lock().unwrap();
+            let c = writes.entry(shard).or_insert(0);
+            let seq = *c;
+            *c += 1;
+            seq
+        };
+        self.events.iter().find_map(|ev| match *ev {
+            FaultEvent::ShardWriteFail { shard: s, from, to }
+                if s == shard && (from..to).contains(&seq) =>
+            {
+                Some("injected write failure")
+            }
+            _ => None,
+        })
+    }
+
+    /// Earliest virtual second at which fleet worker `worker` crashes.
+    pub fn worker_crash_at(&self, worker: usize) -> Option<f64> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::WorkerCrash { worker: w, at } if w == worker => Some(at),
+                _ => None,
+            })
+            .fold(None, |acc: Option<f64>, at| Some(acc.map_or(at, |a| a.min(at))))
+    }
+
+    /// Whether the plan kills shard `shard` permanently (a
+    /// [`FaultEvent::ShardDie`] exists). The fleet prices chunks placed
+    /// on such a shard as Vanilla recompute at the serving worker.
+    pub fn shard_dead(&self, shard: usize) -> bool {
+        self.events
+            .iter()
+            .any(|ev| matches!(*ev, FaultEvent::ShardDie { shard: s, .. } if s == shard))
+    }
+
+    /// Reset the per-shard sequence counters (fresh replay of the same
+    /// plan — what the determinism tests lean on).
+    pub fn reset(&self) {
+        self.reads.lock().unwrap().clear();
+        self.writes.lock().unwrap().clear();
+    }
+}
+
+/// `A` or `A..B` → half-open `[A, B)` (single point = width-1 window).
+fn parse_window(arg: &str, item: &str) -> Result<(u64, u64)> {
+    let (a, b) = match arg.split_once("..") {
+        Some((a, b)) => (
+            a.parse::<u64>().with_context(|| format!("bad window start in {item:?}"))?,
+            b.parse::<u64>().with_context(|| format!("bad window end in {item:?}"))?,
+        ),
+        None => {
+            let a: u64 = arg.parse().with_context(|| format!("bad window in {item:?}"))?;
+            (a, a + 1)
+        }
+    };
+    if b <= a {
+        bail!("empty fault window in {item:?}");
+    }
+    Ok((a, b))
+}
+
+/// The same splitmix64 the shard router uses — one hash family for
+/// every deterministic decision in the repo.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_event_kind() {
+        let plan = FaultPlan::parse(
+            "seed=7, shard0:slow2.5x@4..12, shard1:stall@5, shard0:die@6, \
+             shard2:corrupt@3, shard1:wfail@0..2, worker1:crash@0.25",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.events.len(), 6);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent::ShardSlow { shard: 0, factor: 2.5, from: 4, to: 12 }
+        );
+        assert_eq!(plan.events[1], FaultEvent::ShardStall { shard: 1, from: 5, to: 6 });
+        assert_eq!(plan.events[2], FaultEvent::ShardDie { shard: 0, from: 6 });
+        assert_eq!(plan.events[3], FaultEvent::ShardCorrupt { shard: 2, read: 3 });
+        assert_eq!(plan.events[4], FaultEvent::ShardWriteFail { shard: 1, from: 0, to: 2 });
+        assert_eq!(plan.events[5], FaultEvent::WorkerCrash { worker: 1, at: 0.25 });
+        assert_eq!(plan.worker_crash_at(1), Some(0.25));
+        assert_eq!(plan.worker_crash_at(0), None);
+        assert!(plan.shard_dead(0));
+        assert!(!plan.shard_dead(1));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "shard0",
+            "shard0:die",
+            "shardX:die@1",
+            "worker0:die@1",
+            "shard0:slow0.5x@0..4", // speedup is not a fault
+            "shard0:stall@4..4",    // empty window
+            "shard0:frob@1",
+            "seed=banana",
+            "worker0:crash@-1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn read_faults_follow_the_sequence_windows() {
+        let plan =
+            FaultPlan::parse("shard0:slow3x@1..3, shard0:stall@2, shard0:corrupt@4").unwrap();
+        // seq 0 clean; 1 slow; 2 slow+stall (fail set); 3 clean; 4 corrupt
+        assert!(plan.on_read(0).is_clean());
+        let f1 = plan.on_read(0);
+        assert_eq!(f1.slow_factor, 3.0);
+        assert!(f1.fail.is_none());
+        let f2 = plan.on_read(0);
+        assert_eq!(f2.slow_factor, 3.0);
+        assert!(f2.fail.is_some());
+        assert!(plan.on_read(0).is_clean());
+        assert!(plan.on_read(0).corrupt.is_some());
+        // other shards never see shard 0's events
+        for _ in 0..8 {
+            assert!(plan.on_read(1).is_clean());
+        }
+    }
+
+    #[test]
+    fn die_is_permanent_stall_heals() {
+        let plan = FaultPlan::parse("shard0:stall@0..2, shard1:die@1").unwrap();
+        assert!(plan.on_read(0).fail.is_some());
+        assert!(plan.on_read(0).fail.is_some());
+        assert!(plan.on_read(0).fail.is_none(), "stall window must heal");
+        assert!(plan.on_read(1).fail.is_none());
+        for _ in 0..4 {
+            assert!(plan.on_read(1).fail.is_some(), "death must be permanent");
+        }
+    }
+
+    #[test]
+    fn write_faults_fail_their_window_only() {
+        let plan = FaultPlan::parse("shard0:wfail@1..2").unwrap();
+        assert!(plan.on_write(0).is_none());
+        assert!(plan.on_write(0).is_some());
+        assert!(plan.on_write(0).is_none());
+        assert!(plan.on_write(1).is_none());
+    }
+
+    #[test]
+    fn same_plan_replays_bit_identically() {
+        let spec = "seed=9, shard0:corrupt@1, shard0:slow2x@0..3, shard1:stall@1..2";
+        let (a, b) = (FaultPlan::parse(spec).unwrap(), FaultPlan::parse(spec).unwrap());
+        let run = |p: &FaultPlan| -> Vec<ReadFault> {
+            (0..6).flat_map(|_| [p.on_read(0), p.on_read(1)]).collect()
+        };
+        let first = run(&a);
+        assert_eq!(first, run(&b), "two parses of one spec must inject identically");
+        a.reset();
+        assert_eq!(first, run(&a), "reset must replay the schedule from the top");
+    }
+}

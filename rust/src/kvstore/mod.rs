@@ -4,8 +4,10 @@
 //! Each document chunk's precomputed KV cache is one file
 //! (`<dir>/<chunk_id>.kv`) holding a fixed header plus contiguous
 //! `[n_layers, n_kv_heads, seq, head_dim]` K then V planes — f32 in the
-//! v1 format, f16 in the (default) v2 format, which halves both flash
-//! bytes and simulated device-read time. The layout matches what the
+//! v1 format, f16 in the v2 format (halving both flash bytes and
+//! simulated device-read time), and f16 plus a payload checksum in the
+//! (default) v3 format, verified on every read so corrupted flash is
+//! caught and retried instead of decoded. The layout matches what the
 //! rust runtime splices into the packed device state, so a load is:
 //! (simulated) flash read → decode → bounce buffer → one
 //! `buffer_from_host` upload.
@@ -25,7 +27,11 @@
 //! hot. At equal total DRAM budget the hot+warm split keeps strictly
 //! more chunks off the device than hot alone; the fidelity price of
 //! serving dequantized planes is measured by `benches/fig_warm_tier.rs`.
-//! The lookup ladder in [`KvStore::load_many`] is hot → warm → flash.
+//! The lookup ladder in [`KvStore::load_many`] is hot → warm → flash;
+//! under an installed [`crate::hwsim::FaultPlan`] failed flash reads
+//! extend it with bounded retry/backoff and a Vanilla-recompute safety
+//! net, so a dead or corrupting shard degrades service instead of
+//! failing it.
 //!
 //! Real SSD hardware is replaced by a [`DeviceThrottle`] (DESIGN.md
 //! "Substitutions"): reads/writes go through the filesystem (page cache —

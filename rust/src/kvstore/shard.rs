@@ -14,13 +14,13 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::throttle::DeviceThrottle;
-use crate::hwsim::{Link, StorageProfile, TrafficClass};
+use crate::hwsim::{FaultPlan, Link, StorageProfile, TrafficClass};
 use crate::vectordb::ChunkId;
 
 /// Per-device cumulative counters plus live/peak queue-depth gauges
@@ -42,6 +42,10 @@ pub struct ShardStats {
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub peak_queue_depth: AtomicU64,
+    /// Writes that errored (filesystem failure or injected fault) —
+    /// async store errors surface here instead of vanishing into a
+    /// skipped stats bump.
+    pub write_errors: AtomicU64,
 }
 
 impl ShardStats {
@@ -106,6 +110,10 @@ pub struct Shard {
     index: usize,
     dir: PathBuf,
     throttle: Arc<DeviceThrottle>,
+    /// Injected failure schedule; `None` (the default) is the fast
+    /// clean path — reads and writes behave exactly as before faults
+    /// existed.
+    faults: Mutex<Option<Arc<FaultPlan>>>,
     pub stats: Arc<ShardStats>,
 }
 
@@ -117,20 +125,32 @@ impl Shard {
             index,
             dir,
             throttle: Arc::new(DeviceThrottle::new(profile)),
+            faults: Mutex::new(None),
             stats: Arc::new(ShardStats::default()),
         })
     }
 
     /// A copy of this shard driving a different (or disabled) simulated
-    /// device; cumulative [`ShardStats`] carry over. In-flight I/O keeps
-    /// the old throttle, exactly like the pre-shard store's profile swap.
+    /// device; cumulative [`ShardStats`] and the fault plan carry over.
+    /// In-flight I/O keeps the old throttle, exactly like the pre-shard
+    /// store's profile swap.
     pub(crate) fn with_profile(&self, profile: StorageProfile, enabled: bool) -> Shard {
         Shard {
             index: self.index,
             dir: self.dir.clone(),
             throttle: Arc::new(DeviceThrottle::with_enabled(profile, enabled)),
+            faults: Mutex::new(self.faults.lock().unwrap().clone()),
             stats: self.stats.clone(),
         }
+    }
+
+    /// Install (or clear) the shared fault plan.
+    pub fn set_faults(&self, plan: Option<Arc<FaultPlan>>) {
+        *self.faults.lock().unwrap() = plan;
+    }
+
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.lock().unwrap().clone()
     }
 
     pub fn index(&self) -> usize {
@@ -169,13 +189,44 @@ impl Shard {
     /// `class` tags the transfer in the link's byte counters (demand
     /// miss vs. speculative prefetch). Returns the bytes plus the
     /// simulated device seconds charged.
+    ///
+    /// With a fault plan installed this is the injection choke point:
+    /// the plan is consulted once per read *attempt* (retries advance
+    /// the shard's fault sequence), and may slow the read, fail it, or
+    /// flip one payload bit in the returned buffer — the file on disk
+    /// is never touched, so the recompute safety net always has intact
+    /// bytes to fall back on.
     pub(crate) fn read(&self, id: ChunkId, class: TrafficClass) -> Result<(Vec<u8>, f64)> {
+        let fault = self.fault_plan().map(|p| p.on_read(self.index));
+        if let Some(reason) = fault.as_ref().and_then(|f| f.fail) {
+            return Err(anyhow::anyhow!("shard {}: {reason} reading KV {id:016x}", self.index));
+        }
         let path = self.path_of(id);
         self.stats.enter_queue();
         let result = (|| {
             let start = Instant::now();
-            let data = std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
-            let device_secs = self.throttle.charge_read_as(data.len(), start.elapsed(), class);
+            let mut data =
+                std::fs::read(&path).with_context(|| format!("loading KV {path:?}"))?;
+            let mut device_secs =
+                self.throttle.charge_read_as(data.len(), start.elapsed(), class);
+            if let Some(f) = &fault {
+                if f.slow_factor > 1.0 {
+                    // The extra latency occupies the device like any
+                    // other transfer (queues behind it, sleeps on a
+                    // wall-clock link).
+                    device_secs +=
+                        self.throttle.charge_penalty((f.slow_factor - 1.0) * device_secs, class);
+                }
+                if let Some(h) = f.corrupt {
+                    // One bit in the back half of the record — always
+                    // payload, never the header, so the lie is silent
+                    // until the checksum looks.
+                    let lo = data.len() / 2;
+                    if lo < data.len() {
+                        data[lo + (h as usize % (data.len() - lo))] ^= 1 << ((h >> 32) % 8);
+                    }
+                }
+            }
             Ok((data, device_secs))
         })();
         self.stats.exit_queue();
@@ -185,12 +236,28 @@ impl Shard {
         result
     }
 
+    /// Charge a retry-backoff wait against this shard's device link so
+    /// recovery costs simulated time (sleeps on a wall-clock link,
+    /// no-op accounting when the throttle is disabled). Returns the
+    /// modeled seconds.
+    pub(crate) fn charge_backoff(&self, secs: f64) -> f64 {
+        self.throttle.charge_penalty(secs, TrafficClass::Demand)
+    }
+
     /// Write a chunk's encoded bytes, throttled; returns simulated
-    /// device seconds. Stats count only successful writes.
+    /// device seconds. Stats count only successful writes; failures
+    /// (filesystem or injected) bump `write_errors`.
     pub(crate) fn write(&self, id: ChunkId, buf: &[u8]) -> Result<f64> {
+        if let Some(reason) = self.fault_plan().and_then(|p| p.on_write(self.index)) {
+            self.stats.write_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::anyhow!("shard {}: {reason} writing KV {id:016x}", self.index));
+        }
         let path = self.path_of(id);
         let start = Instant::now();
-        std::fs::write(&path, buf).with_context(|| format!("writing KV {path:?}"))?;
+        if let Err(e) = std::fs::write(&path, buf) {
+            self.stats.write_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(e).context(format!("writing KV {path:?}")));
+        }
         let device_secs = self.throttle.charge_write(buf.len(), start.elapsed());
         self.stats.count_write(buf.len(), device_secs);
         Ok(device_secs)
@@ -295,6 +362,61 @@ mod tests {
         assert_eq!(swapped.profile().name, "9100Pro");
         assert_eq!(swapped.stats.writes.load(Ordering::Relaxed), 1, "stats must carry over");
         assert_eq!(swapped.len().unwrap(), 1);
+    }
+
+    #[test]
+    fn injected_read_faults_stall_then_heal_and_corrupt_in_memory_only() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-shard-fault").unwrap();
+        let shard = Shard::open(0, dir.path(), StorageProfile::dram()).unwrap();
+        let payload: Vec<u8> = (0..255u8).collect();
+        shard.write(9, &payload).unwrap();
+        shard.set_faults(Some(Arc::new(
+            FaultPlan::parse("shard0:stall@0..2, shard0:corrupt@2").unwrap(),
+        )));
+        // reads 0 and 1 error (no file touched, stats uncounted)...
+        assert!(shard.read(9, TrafficClass::Demand).is_err());
+        assert!(shard.read(9, TrafficClass::Demand).is_err());
+        assert_eq!(shard.stats.reads.load(Ordering::Relaxed), 1, "faulted reads not counted");
+        // ...read 2 heals but returns exactly one flipped bit...
+        let (bad, _) = shard.read(9, TrafficClass::Demand).unwrap();
+        assert_ne!(bad, payload, "corrupt read must differ");
+        let flipped: u32 =
+            bad.iter().zip(&payload).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(flipped, 1, "exactly one bit flips");
+        // ...and the file itself stayed intact: read 3 is clean.
+        let (good, _) = shard.read(9, TrafficClass::Demand).unwrap();
+        assert_eq!(good, payload);
+        // clearing the plan restores the unfaulted path
+        shard.set_faults(None);
+        assert_eq!(shard.read(9, TrafficClass::Demand).unwrap().0, payload);
+    }
+
+    #[test]
+    fn injected_write_failure_counts_write_errors() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-shard-wfail").unwrap();
+        let shard = Shard::open(0, dir.path(), StorageProfile::dram()).unwrap();
+        shard.set_faults(Some(Arc::new(FaultPlan::parse("shard0:wfail@0").unwrap())));
+        assert!(shard.write(1, &[1u8; 64]).is_err());
+        assert_eq!(shard.stats.write_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(shard.stats.writes.load(Ordering::Relaxed), 0, "failed write not counted");
+        assert!(!shard.contains(1), "failed write must not leave a file");
+        // next write (past the window) lands
+        shard.write(1, &[1u8; 64]).unwrap();
+        assert_eq!(shard.stats.writes.load(Ordering::Relaxed), 1);
+        assert_eq!(shard.stats.write_errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn with_profile_carries_the_fault_plan() {
+        let dir = crate::util::tempdir::TempDir::new("matkv-shard-fault-prof").unwrap();
+        let shard = Shard::open(0, dir.path(), StorageProfile::dram()).unwrap();
+        shard.write(2, &[3u8; 32]).unwrap();
+        shard.set_faults(Some(Arc::new(FaultPlan::parse("shard0:die@0").unwrap())));
+        let swapped = shard.with_profile(StorageProfile::dram(), false);
+        assert!(
+            swapped.read(2, TrafficClass::Demand).is_err(),
+            "profile swap must not drop the fault plan"
+        );
     }
 
     #[test]

@@ -86,6 +86,23 @@ impl DeviceThrottle {
         self.link.reserve_secs(secs, bytes, class);
         device_secs
     }
+
+    /// Charge `secs` of pure occupancy (no bytes move): fault-injected
+    /// slowdowns and retry backoffs hold the device exactly like a
+    /// transfer would — queueing behind (and delaying) real traffic,
+    /// sleeping on the wall-clock link. Returns the modeled seconds,
+    /// which the caller still accounts when the throttle is disabled
+    /// (pure-functional tests keep deterministic telemetry without the
+    /// sleep).
+    pub fn charge_penalty(&self, secs: f64, class: TrafficClass) -> f64 {
+        if !secs.is_finite() || secs <= 0.0 {
+            return 0.0;
+        }
+        if self.enabled {
+            self.link.reserve_secs(secs, 0, class);
+        }
+        secs
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +191,25 @@ mod tests {
             t.charge_read(1 << 30, Duration::ZERO);
         }
         assert!(start.elapsed().as_millis() < 100);
+    }
+
+    #[test]
+    fn penalty_occupies_the_device_but_moves_no_bytes() {
+        let t = DeviceThrottle::new(slow_profile(100e6));
+        let start = Instant::now();
+        assert_eq!(t.charge_penalty(0.05, TrafficClass::Demand), 0.05);
+        assert!(start.elapsed().as_secs_f64() >= 0.04, "penalty must sleep the device");
+        assert_eq!(t.link().stats.total_bytes(), 0);
+        assert!(t.link().stats.busy_secs() >= 0.049);
+        // disabled: modeled seconds still returned, nothing reserved
+        let off = DeviceThrottle::with_enabled(slow_profile(100e6), false);
+        let start = Instant::now();
+        assert_eq!(off.charge_penalty(5.0, TrafficClass::Demand), 5.0);
+        assert!(start.elapsed().as_millis() < 100, "disabled penalty must not sleep");
+        assert_eq!(off.link().stats.reserves(), 0);
+        // degenerate inputs are no-ops
+        assert_eq!(t.charge_penalty(0.0, TrafficClass::Demand), 0.0);
+        assert_eq!(t.charge_penalty(f64::NAN, TrafficClass::Demand), 0.0);
     }
 
     #[test]

@@ -28,8 +28,20 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --hot-tier-bytes N (DRAM hot tier in front of flash, 0=off)
                --warm-tier-bytes N (q8 warm tier behind the hot tier:
                            evictions demote, hits dequantize+promote, 0=off)
-               --kv-format v1|v2 (on-disk KV planes: f32|f16, default v2)
+               --kv-format v1|v2|v3 (on-disk KV planes: f32|f16|f16+checksum;
+                           default v3 — v3 verifies a per-chunk payload
+                           checksum on every read, same bytes as v2)
                --shards N (JBOD of N independent simulated devices, default 1)
+               --faults SPEC (deterministic fault plan, e.g.
+                           seed=7,shard0:die@2,worker1:crash@0.5 —
+                           slow/stall/die/corrupt/wfail windows keyed on
+                           per-shard read sequences, worker crashes on the
+                           fleet's virtual clock)
+               --max-retries N (with --faults: flash read retries before
+                           the degradation ladder, default 3)
+               --retry-backoff-ms N (with --faults: base retry backoff,
+                           doubled per attempt and charged on the shard
+                           link, default 2)
                --prefetch (with --overlap: warm the DRAM tiers from upcoming
                            batches' planned retrieval top-K)
                --policy fifo|affinity (batch formation: arrival order, or
@@ -140,6 +152,16 @@ fn serve(args: &Args) -> Result<()> {
         anyhow::bail!("--pcie-contention shapes fleet H2D uploads; it requires --fleet");
     }
 
+    let faults = match args.opt("faults") {
+        Some(spec) => Some(std::sync::Arc::new(matkv::hwsim::FaultPlan::parse(spec)?)),
+        None => None,
+    };
+    if faults.is_none()
+        && (args.opt("max-retries").is_some() || args.opt("retry-backoff-ms").is_some())
+    {
+        anyhow::bail!("--max-retries/--retry-backoff-ms tune fault recovery; they require --faults");
+    }
+
     let m = Manifest::load(matkv::artifacts_dir())?;
     let corpus = Corpus::generate(docs, doc_tokens, docs.min(16), 42);
     let _tmp;
@@ -156,10 +178,20 @@ fn serve(args: &Args) -> Result<()> {
         KvStore::open_sharded(&dir, storage_profile(&args.str("storage", "9100pro"))?, shards)?;
     kv.set_hot_tier(args.usize("hot-tier-bytes", 0));
     kv.set_warm_tier(args.usize("warm-tier-bytes", 0));
-    match args.str("kv-format", "v2").as_str() {
+    match args.str("kv-format", "v3").as_str() {
         "v1" => kv.set_format(KvFormat::V1),
         "v2" => kv.set_format(KvFormat::V2),
+        "v3" => kv.set_format(KvFormat::V3),
         other => anyhow::bail!("unknown kv format {other}"),
+    }
+    if let Some(plan) = &faults {
+        kv.set_faults(Some(plan.clone()));
+        kv.set_retry_policy(args.usize("max-retries", 3), args.f64("retry-backoff-ms", 2.0) / 1e3);
+        // Vanilla safety-net price when flash is unrecoverable: a
+        // modeled ~50µs of prefill per recomputed token at the
+        // stand-in scale (the fleet re-prices lost chunks per worker
+        // through its roofline on top of this store-level charge).
+        kv.set_recompute_model(50e-6);
     }
     let opts = EngineOptions::for_config(&m, &config)?;
     let engine = Engine::new(&m, opts, kv, corpus.texts())?;
@@ -198,6 +230,13 @@ fn serve(args: &Args) -> Result<()> {
             },
         );
         f.set_contention(pcie_contention);
+        if let Some(plan) = &faults {
+            f.set_faults(plan.clone());
+            let (kv, plan) = (engine.kv.clone(), plan.clone());
+            f.set_lost_chunks(std::sync::Arc::new(move |id| {
+                plan.shard_dead(kv.shard_index_of(id))
+            }));
+        }
         f
     });
 
@@ -384,6 +423,18 @@ fn serve(args: &Args) -> Result<()> {
         metrics.decode_secs_on(&arch, &h100),
         metrics.total_secs_on(&arch, &h100, &storage)
     );
+    if faults.is_some() {
+        println!(
+            "fault recovery (store): {} retries ({:.4}s backoff) | {} checksum failures | \
+             {} chunks recomputed ({:.4}s, {} degraded tokens)",
+            metrics.retries,
+            metrics.retry_backoff_secs,
+            metrics.checksum_failures,
+            metrics.recomputed_chunks,
+            metrics.recompute_fallback_secs,
+            metrics.degraded_tokens,
+        );
+    }
 
     // Fleet simulation: dispatch the exact schedule the engine just
     // served across the worker pool on the virtual clock.
@@ -432,6 +483,16 @@ fn serve(args: &Args) -> Result<()> {
             l.p95 * 1e3,
             l.p99 * 1e3,
         );
+        if faults.is_some() {
+            println!(
+                "  fault recovery (fleet): {} requests requeued | {} chunks recomputed \
+                 ({:.4}s surcharge, {} degraded tokens)",
+                rep.metrics.requeued_requests,
+                rep.metrics.recomputed_chunks,
+                rep.metrics.recompute_fallback_secs,
+                rep.metrics.degraded_tokens,
+            );
+        }
     }
 
     for r in responses.iter().take(2) {
