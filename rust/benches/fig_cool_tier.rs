@@ -1,0 +1,409 @@
+//! Cool-path bench — the q4 dial one level deeper, in two A/B pairs,
+//! plus the table-VI fidelity cost of serving q4 chunks.
+//!
+//! 1. **v4 vs v3 flash format** (no artifacts needed): the same
+//!    Poisson-batched Zipf(1.0) trace replayed against two stores that
+//!    materialized the same corpus in the v3 (f16+checksum) and v4
+//!    (q4+checksum) formats. Shape to reproduce: at equal offered load
+//!    v4 moves **strictly fewer flash bytes** and spends **strictly
+//!    fewer simulated device-read seconds**, with the per-load q4
+//!    dequant reported as the price — the trade is priced, not free.
+//! 2. **TinyLFU vs LRU admission** (no artifacts needed): a Zipf demand
+//!    stream interleaved with sequential scan bursts against a small
+//!    hot tier. Shape: the frequency-gated tier holds **strictly more
+//!    demand hits** than plain LRU, because one-pass scan candidates
+//!    (seen once) cannot displace the repeatedly-hit resident set.
+//! 3. **Fidelity** (needs `make artifacts`; skipped otherwise): the
+//!    table-VI harness compares a pure-f32 deployment against one whose
+//!    repeat traffic is served from a **q4 warm tier**. Target: mean
+//!    token-F1 >= 0.90 vs the pure-f32 baseline (looser than the q8
+//!    0.95 target — twice the quantization step).
+//!
+//! `--smoke` shrinks everything for CI; `--json PATH` writes all three
+//! phases as JSON (`cool_smoke.json` is asserted by CI).
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use matkv::coordinator::baselines::fidelity;
+use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
+use matkv::hwsim::StorageProfile;
+use matkv::kvstore::{AdmissionPolicy, KvChunk, KvFormat, KvStore, WarmMode};
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::workload::{Rng, Zipf};
+
+fn chunk(seed: u32, seq: u32) -> KvChunk {
+    let plane = (2 * 2 * seq * 8) as usize;
+    KvChunk {
+        config_id: 0x9a12,
+        n_layers: 2,
+        n_kv_heads: 2,
+        seq_len: seq,
+        head_dim: 8,
+        // off-grid payload: the q4 round trip is genuinely lossy here,
+        // exercising the real codec (bounded by its property tests)
+        k: (0..plane).map(|i| ((i + seed as usize) as f32 * 0.37).sin() * 3.0).collect(),
+        v: (0..plane).map(|i| ((i + seed as usize) as f32 * 0.53).cos() * 3.0).collect(),
+    }
+}
+
+/// Poisson(mean) batch size: count of unit-rate exponential arrivals
+/// inside a `mean`-length service window (at least one, so every batch
+/// carries work).
+fn poisson_batch(rng: &mut Rng, mean: f64) -> usize {
+    let (mut k, mut t) = (0usize, 0.0f64);
+    loop {
+        t += -(1.0 - rng.f64()).ln();
+        if t > mean {
+            break;
+        }
+        k += 1;
+    }
+    k.max(1)
+}
+
+struct FormatRow {
+    format: &'static str,
+    reads: u64,
+    flash_bytes: u64,
+    device_secs: f64,
+    q4_dequant_secs: f64,
+}
+
+/// Replay one shared trace (id stream + batch boundaries) against a
+/// fresh reopen of `dir`, flash-only.
+fn replay_format(
+    dir: &std::path::Path,
+    format: &'static str,
+    trace: &[Vec<u64>],
+) -> anyhow::Result<FormatRow> {
+    let mut store = KvStore::open(dir, StorageProfile::ssd_9100pro())?;
+    store.disable_throttle(); // wall time is irrelevant; device_secs is still computed
+    let (mut device_secs, mut q4_dequant_secs) = (0.0f64, 0.0f64);
+    for group in trace {
+        for l in store.load_many(group)? {
+            device_secs += l.device_secs;
+            q4_dequant_secs += l.q4_dequant_secs;
+        }
+    }
+    Ok(FormatRow {
+        format,
+        reads: store.stats.reads.load(Ordering::Relaxed),
+        flash_bytes: store.stats.bytes_read.load(Ordering::Relaxed),
+        device_secs,
+        q4_dequant_secs,
+    })
+}
+
+struct ScanRow {
+    policy: &'static str,
+    demand_accesses: u64,
+    demand_hits: u64,
+    scan_accesses: u64,
+    admissions_gated: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let smoke = args.flag("smoke");
+    let n_chunks = args.usize("chunks", if smoke { 48 } else { 160 });
+    let accesses = args.usize("accesses", if smoke { 600 } else { 3000 });
+    let seq = args.usize("chunk-tokens", 128) as u32;
+    let mean_batch = args.f64("mean-batch", 8.0);
+    let skew = args.f64("skew", 1.0);
+
+    // ---- phase 1: v4 vs v3 flash format at equal offered load ----------
+    // Materialize the same corpus once per format; replay one shared
+    // Poisson x Zipf trace against both so the only degree of freedom
+    // is the on-disk encoding.
+    let dir_v3 = TempDir::new("matkv-fig-cool-v3")?;
+    let dir_v4 = TempDir::new("matkv-fig-cool-v4")?;
+    for (dir, format) in [(&dir_v3, KvFormat::V3), (&dir_v4, KvFormat::V4)] {
+        let mut w = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
+        w.disable_throttle();
+        w.set_format(format);
+        for i in 0..n_chunks {
+            w.store_sync(i as u64, &chunk(i as u32, seq))?;
+        }
+    }
+    let zipf = Zipf::new(n_chunks, skew);
+    let mut rng = Rng::new(4242);
+    let mut trace: Vec<Vec<u64>> = Vec::new();
+    let mut left = accesses;
+    while left > 0 {
+        let k = poisson_batch(&mut rng, mean_batch).min(left);
+        trace.push((0..k).map(|_| zipf.sample(&mut rng) as u64).collect());
+        left -= k;
+    }
+    eprintln!(
+        "[fig_cool_tier] {n_chunks} chunks x {seq} tokens, {accesses} Zipf({skew}) accesses \
+         in {} Poisson({mean_batch}) batches, v3 vs v4 flash",
+        trace.len()
+    );
+    let v3 = replay_format(dir_v3.path(), "v3 (f16)", &trace)?;
+    let v4 = replay_format(dir_v4.path(), "v4 (q4)", &trace)?;
+
+    let mut table = Table::new(
+        &format!("flash format A/B ({accesses} accesses, same trace)"),
+        &["format", "reads", "flash MB", "device (s)", "q4 dequant (s)", "load total (s)"],
+    );
+    for r in [&v3, &v4] {
+        table.row(&[
+            r.format.to_string(),
+            r.reads.to_string(),
+            format!("{:.2}", r.flash_bytes as f64 / 1e6),
+            format!("{:.4}", r.device_secs),
+            format!("{:.5}", r.q4_dequant_secs),
+            format!("{:.4}", r.device_secs + r.q4_dequant_secs),
+        ]);
+    }
+    table.print();
+    println!(
+        "v4 vs v3 at equal offered load: flash bytes {:.2} MB -> {:.2} MB ({:.2}x), device \
+         {:.4}s -> {:.4}s, dequant price {:.5}s on the load path",
+        v3.flash_bytes as f64 / 1e6,
+        v4.flash_bytes as f64 / 1e6,
+        v3.flash_bytes as f64 / v4.flash_bytes.max(1) as f64,
+        v3.device_secs,
+        v4.device_secs,
+        v4.q4_dequant_secs,
+    );
+    if v4.flash_bytes >= v3.flash_bytes || v4.device_secs >= v3.device_secs {
+        eprintln!(
+            "[fig_cool_tier] WARNING: v4 did not strictly beat v3 on flash bytes and \
+             device seconds ({} vs {} bytes, {:.6}s vs {:.6}s)",
+            v4.flash_bytes, v3.flash_bytes, v4.device_secs, v3.device_secs
+        );
+    }
+    if v4.q4_dequant_secs <= 0.0 {
+        eprintln!("[fig_cool_tier] WARNING: v4 replay charged no q4 dequant — the trade looks free");
+    }
+
+    // ---- phase 2: TinyLFU vs LRU under scan pollution ------------------
+    // Zipf demand over the first `n_demand` ids, interleaved with
+    // sequential scan bursts over fresh ids; the hot tier holds only a
+    // sliver of the demand set, so admission policy decides whether the
+    // scan flushes it.
+    let n_demand = args.usize("demand-ids", if smoke { 24 } else { 64 });
+    let rounds = args.usize("rounds", if smoke { 6 } else { 10 });
+    let demand_per_round = args.usize("demand-per-round", if smoke { 60 } else { 150 });
+    let scan_len = args.usize("scan-len", n_demand);
+    let resident_target = args.usize("resident-chunks", (n_demand / 4).max(4));
+    {
+        // one store dir covering demand + scan ids (v3: format is not
+        // under test here)
+        let dir = TempDir::new("matkv-fig-cool-scan")?;
+        let mut w = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
+        w.disable_throttle();
+        for i in 0..(n_demand + rounds * scan_len) {
+            w.store_sync(i as u64, &chunk(i as u32, seq))?;
+        }
+        let file_bytes = {
+            let mut probe = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
+            probe.disable_throttle();
+            probe.load_many(&[0])?[0].file_bytes
+        };
+        let budget = file_bytes * resident_target;
+        eprintln!(
+            "[fig_cool_tier] scan A/B: {n_demand} demand ids (Zipf {skew}), {rounds} rounds x \
+             ({demand_per_round} demand + {scan_len}-id scan), hot tier holds ~{resident_target}"
+        );
+        let mut scan_rows: Vec<ScanRow> = Vec::new();
+        for (policy, label) in
+            [(AdmissionPolicy::Lru, "lru"), (AdmissionPolicy::TinyLfu, "tinylfu")]
+        {
+            let mut store = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
+            store.disable_throttle();
+            store.set_hot_tier(budget);
+            store.set_admission(policy);
+            let zipf = Zipf::new(n_demand, skew);
+            let mut rng = Rng::new(777); // same demand stream per policy
+            let (mut demand_accesses, mut demand_hits, mut scan_accesses) = (0u64, 0u64, 0u64);
+            let mut next_scan_id = n_demand as u64;
+            for _ in 0..rounds {
+                let mut left = demand_per_round;
+                while left > 0 {
+                    let k = poisson_batch(&mut rng, mean_batch).min(left);
+                    let group: Vec<u64> =
+                        (0..k).map(|_| zipf.sample(&mut rng) as u64).collect();
+                    for l in store.load_many(&group)? {
+                        demand_accesses += 1;
+                        demand_hits += l.from_cache as u64;
+                    }
+                    left -= k;
+                }
+                // the polluting pass: every id fresh, seen exactly once
+                let scan: Vec<u64> =
+                    (0..scan_len).map(|i| next_scan_id + i as u64).collect();
+                next_scan_id += scan_len as u64;
+                scan_accesses += scan.len() as u64;
+                for group in scan.chunks((mean_batch as usize).max(1)) {
+                    store.load_many(group)?;
+                }
+            }
+            scan_rows.push(ScanRow {
+                policy: label,
+                demand_accesses,
+                demand_hits,
+                scan_accesses,
+                admissions_gated: store
+                    .hot_tier()
+                    .map(|t| t.stats.admission_rejected.load(Ordering::Relaxed))
+                    .unwrap_or(0),
+            });
+        }
+        let mut table = Table::new(
+            "hot-tier admission under scan pollution (same demand stream)",
+            &["policy", "demand accesses", "demand hits", "hit %", "scan accesses", "gated"],
+        );
+        for r in &scan_rows {
+            table.row(&[
+                r.policy.to_string(),
+                r.demand_accesses.to_string(),
+                r.demand_hits.to_string(),
+                format!("{:.1}", 100.0 * r.demand_hits as f64 / r.demand_accesses.max(1) as f64),
+                r.scan_accesses.to_string(),
+                r.admissions_gated.to_string(),
+            ]);
+        }
+        table.print();
+        let (lru, tlfu) = (&scan_rows[0], &scan_rows[1]);
+        println!(
+            "tinylfu vs lru under the same scan: demand hits {} -> {} ({:+}), {} scan \
+             admissions gated off",
+            lru.demand_hits,
+            tlfu.demand_hits,
+            tlfu.demand_hits as i64 - lru.demand_hits as i64,
+            tlfu.admissions_gated,
+        );
+        if tlfu.demand_hits <= lru.demand_hits {
+            eprintln!(
+                "[fig_cool_tier] WARNING: TinyLFU did not strictly beat LRU on demand hits \
+                 ({} vs {})",
+                tlfu.demand_hits, lru.demand_hits
+            );
+        }
+
+        // ---- phase 3: table-VI fidelity of q4-served chunks ------------
+        let mut fidelity_json = String::from("null");
+        if matkv::manifest::artifacts_present() {
+            let n_docs = if smoke { 8 } else { 16 };
+            let doc_tokens = 256usize;
+            let n_reqs = if smoke { 12 } else { 32 };
+            // Size the candidate's hot tier to ~2 chunks so repeat
+            // traffic is warm-served (same recipe as fig_warm_tier, on
+            // the q4 codec).
+            let kv_chunk_bytes = {
+                let m = matkv::Manifest::load(matkv::artifacts_dir())?;
+                let cfg = m.config("tiny")?;
+                let plane = cfg.n_layers * cfg.n_kv_heads * doc_tokens * cfg.head_dim;
+                std::mem::size_of::<KvChunk>() + 8 * plane
+            };
+            fn serve_twice(
+                spec: ScenarioSpec,
+                n_reqs: usize,
+            ) -> anyhow::Result<(
+                Vec<matkv::coordinator::Response>,
+                matkv::coordinator::PhaseBreakdown,
+            )> {
+                let sc = Scenario::build(spec)?;
+                let reqs = sc.requests(n_reqs, 2, 8);
+                sc.engine.serve_all(&reqs, 4, ServeMode::MatKv)?; // warm-up pass
+                sc.engine.serve_all(&reqs, 4, ServeMode::MatKv)
+            }
+            let (reference, _) = serve_twice(
+                ScenarioSpec {
+                    n_docs,
+                    doc_tokens,
+                    storage: StorageProfile::ssd_9100pro(),
+                    hot_tier_bytes: 64 << 20, // everything stays f32
+                    seed: 33,
+                    ..ScenarioSpec::default()
+                },
+                n_reqs,
+            )?;
+            let (candidate, cm) = serve_twice(
+                ScenarioSpec {
+                    n_docs,
+                    doc_tokens,
+                    storage: StorageProfile::ssd_9100pro(),
+                    hot_tier_bytes: 2 * kv_chunk_bytes,
+                    warm_tier_bytes: 16 << 20,
+                    warm_mode: WarmMode::Q4,
+                    seed: 33,
+                    ..ScenarioSpec::default()
+                },
+                n_reqs,
+            )?;
+            let f = fidelity(&reference, &candidate);
+            println!(
+                "\nfidelity of q4-served chunks vs pure f32 ({} pairs, {} warm hits in the \
+                 measured pass): token-F1 {:.4}, exact-prefix {:.1} tokens, {} exact matches \
+                 (target: mean F1 >= 0.90)",
+                f.pairs, cm.warm_hits, f.mean_f1, f.mean_prefix, f.exact
+            );
+            if cm.warm_hits == 0 {
+                eprintln!(
+                    "[fig_cool_tier] WARNING: candidate pass served no warm hits — fidelity \
+                     comparison is vacuous"
+                );
+            }
+            if f.mean_f1 < 0.90 {
+                eprintln!(
+                    "[fig_cool_tier] WARNING: mean token-F1 {:.4} below the 0.90 target",
+                    f.mean_f1
+                );
+            }
+            fidelity_json = format!(
+                "{{\"pairs\":{},\"warm_hits\":{},\"mean_f1\":{:.6},\"mean_prefix\":{:.3},\
+                 \"exact\":{},\"q4_dequant_secs\":{:.6}}}",
+                f.pairs, cm.warm_hits, f.mean_f1, f.mean_prefix, f.exact, cm.q4_dequant_secs
+            );
+        } else {
+            println!(
+                "\n[fig_cool_tier] fidelity phase skipped: AOT artifacts not built \
+                 (run `make artifacts`)"
+            );
+        }
+
+        if let Some(path) = args.opt("json") {
+            let mut scan_json = String::new();
+            for r in &scan_rows {
+                let _ = write!(
+                    scan_json,
+                    "{}{{\"policy\":\"{}\",\"demand_accesses\":{},\"demand_hits\":{},\
+                     \"scan_accesses\":{},\"admissions_gated\":{}}}",
+                    if scan_json.is_empty() { "" } else { "," },
+                    r.policy,
+                    r.demand_accesses,
+                    r.demand_hits,
+                    r.scan_accesses,
+                    r.admissions_gated,
+                );
+            }
+            let doc = format!(
+                "{{\"bench\":\"fig_cool_tier\",\"smoke\":{smoke},\"chunks\":{n_chunks},\
+                 \"accesses\":{accesses},\"chunk_tokens\":{seq},\"skew\":{skew},\
+                 \"formats\":{{\
+                 \"v3\":{{\"reads\":{},\"flash_bytes\":{},\"device_secs\":{:.6},\
+                 \"q4_dequant_secs\":{:.6}}},\
+                 \"v4\":{{\"reads\":{},\"flash_bytes\":{},\"device_secs\":{:.6},\
+                 \"q4_dequant_secs\":{:.6}}}}},\
+                 \"scan\":[{scan_json}],\"fidelity\":{fidelity_json}}}",
+                v3.reads,
+                v3.flash_bytes,
+                v3.device_secs,
+                v3.q4_dequant_secs,
+                v4.reads,
+                v4.flash_bytes,
+                v4.device_secs,
+                v4.q4_dequant_secs,
+            );
+            std::fs::write(path, doc)?;
+            eprintln!("[fig_cool_tier] wrote {path}");
+        }
+    }
+    Ok(())
+}

@@ -9,7 +9,9 @@
 //!
 //! 1. **Equal-budget split sweep** (no artifacts needed): the same
 //!    Zipf(1.0) access stream replayed against hot/warm splits of one
-//!    DRAM budget — 100/0, 75/25, 50/50. Shape to reproduce: at equal
+//!    DRAM budget — 100/0, 75/25, 50/50 on the q8 codec, plus 50/50 on
+//!    q4 (same bytes, ~2x the warm chunks, coarser error bound, its own
+//!    dequant rate). Shape to reproduce: at equal
 //!    total bytes, every split with a warm share serves **strictly more
 //!    chunks from DRAM** and issues **strictly fewer device reads** than
 //!    hot-only, with the dequant seconds reported as the price. Emits
@@ -29,7 +31,7 @@ use std::sync::atomic::Ordering;
 use matkv::coordinator::baselines::fidelity;
 use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
 use matkv::hwsim::StorageProfile;
-use matkv::kvstore::{series_to_json, KvChunk, KvStore};
+use matkv::kvstore::{series_to_json, KvChunk, KvStore, WarmMode};
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
@@ -53,6 +55,7 @@ fn chunk(seed: u32, seq: u32) -> KvChunk {
 struct SplitRow {
     hot_pct: usize,
     warm_pct: usize,
+    mode: &'static str,
     dram_served: u64,
     hot_hits: u64,
     warm_hits: u64,
@@ -94,11 +97,20 @@ fn main() -> anyhow::Result<()> {
 
     // ---- phase 1: equal-budget hot/warm split sweep --------------------
     let mut rows: Vec<SplitRow> = Vec::new();
-    for &(hot_pct, warm_pct) in &[(100usize, 0usize), (75, 25), (50, 50)] {
+    // Same splits as before, plus the 50/50 budget on the q4 codec: the
+    // same warm bytes hold ~2x the chunks of q8, at a coarser error
+    // bound and the q4 dequant rate.
+    for &(hot_pct, warm_pct, mode) in &[
+        (100usize, 0usize, WarmMode::Q8),
+        (75, 25, WarmMode::Q8),
+        (50, 50, WarmMode::Q8),
+        (50, 50, WarmMode::Q4),
+    ] {
         let mut store = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
         store.disable_throttle(); // device_secs still computed
         store.set_hot_tier(total_budget * hot_pct / 100);
         store.set_warm_tier(total_budget * warm_pct / 100);
+        store.set_warm_mode(mode);
         let zipf = Zipf::new(n_chunks, skew);
         let mut rng = Rng::new(4242);
         let stream: Vec<u64> = (0..accesses).map(|_| zipf.sample(&mut rng) as u64).collect();
@@ -120,13 +132,18 @@ fn main() -> anyhow::Result<()> {
             .hot_tier()
             .map(|t| t.stats.hits.load(Ordering::Relaxed))
             .unwrap_or(0);
-        let dequant_secs =
-            store.warm_tier().map(|t| t.stats.dequant_secs()).unwrap_or(0.0);
+        // whichever codec clock the mode charged — the rows stay
+        // comparable as "modeled dequant seconds paid for the split"
+        let dequant_secs = store
+            .warm_tier()
+            .map(|t| t.stats.dequant_secs() + t.stats.q4_dequant_secs())
+            .unwrap_or(0.0);
         let resident_chunks = store.hot_tier().map(|t| t.len()).unwrap_or(0)
             + store.warm_tier().map(|t| t.len()).unwrap_or(0);
         rows.push(SplitRow {
             hot_pct,
             warm_pct,
+            mode: mode.label(),
             dram_served,
             hot_hits,
             warm_hits,
@@ -152,6 +169,7 @@ fn main() -> anyhow::Result<()> {
         ),
         &[
             "split h/w",
+            "codec",
             "resident",
             "DRAM-served",
             "hot hits",
@@ -164,6 +182,7 @@ fn main() -> anyhow::Result<()> {
     for r in &rows {
         table.row(&[
             format!("{}/{}", r.hot_pct, r.warm_pct),
+            r.mode.to_string(),
             r.resident_chunks.to_string(),
             r.dram_served.to_string(),
             r.hot_hits.to_string(),
@@ -178,10 +197,11 @@ fn main() -> anyhow::Result<()> {
     let base = &rows[0];
     for r in &rows[1..] {
         println!(
-            "{}/{} vs hot-only at equal DRAM bytes: DRAM-served {} -> {} ({:+}), device reads \
+            "{}/{} {} vs hot-only at equal DRAM bytes: DRAM-served {} -> {} ({:+}), device reads \
              {} -> {} ({:+}), dequant price {:.5}s",
             r.hot_pct,
             r.warm_pct,
+            r.mode,
             base.dram_served,
             r.dram_served,
             r.dram_served as i64 - base.dram_served as i64,
@@ -192,10 +212,10 @@ fn main() -> anyhow::Result<()> {
         );
         if r.dram_served <= base.dram_served || r.device_reads >= base.device_reads {
             eprintln!(
-                "[fig_warm_tier] WARNING: split {}/{} did not strictly beat hot-only \
+                "[fig_warm_tier] WARNING: split {}/{} ({}) did not strictly beat hot-only \
                  (DRAM-served {} vs {}, reads {} vs {})",
-                r.hot_pct, r.warm_pct, r.dram_served, base.dram_served, r.device_reads,
-                base.device_reads
+                r.hot_pct, r.warm_pct, r.mode, r.dram_served, base.dram_served,
+                r.device_reads, base.device_reads
             );
         }
     }
@@ -276,13 +296,15 @@ fn main() -> anyhow::Result<()> {
         for r in &rows {
             let _ = write!(
                 split_rows,
-                "{}{{\"hot_pct\":{},\"warm_pct\":{},\"resident_chunks\":{},\
+                "{}{{\"hot_pct\":{},\"warm_pct\":{},\"warm_mode\":\"{}\",\
+                 \"resident_chunks\":{},\
                  \"dram_served\":{},\"hot_hits\":{},\"warm_hits\":{},\"device_reads\":{},\
                  \"device_secs\":{:.6},\"dequant_secs\":{:.6},\
                  \"hot_series\":{},\"warm_series\":{}}}",
                 if split_rows.is_empty() { "" } else { "," },
                 r.hot_pct,
                 r.warm_pct,
+                r.mode,
                 r.resident_chunks,
                 r.dram_served,
                 r.hot_hits,

@@ -48,6 +48,46 @@ fn main() -> anyhow::Result<()> {
     let s = measure(3, iters, || hot_store.load(1).unwrap());
     println!("kvstore.load (hot-tier hit)       : {s}");
 
+    // --- quantized codecs: measured throughput side by side with the
+    // modeled bytes/sec constants the simulator charges for warm-tier
+    // and v4 cool-path traffic (the constants stand in for an
+    // accelerator-side unpack; this cross-check catches them drifting
+    // absurdly far from what any real code path achieves)
+    {
+        use matkv::hwsim::profiles::{
+            Q4_DEQUANT_BYTES_PER_SEC, Q4_QUANT_BYTES_PER_SEC, Q8_DEQUANT_BYTES_PER_SEC,
+            Q8_QUANT_BYTES_PER_SEC,
+        };
+        use matkv::kvstore::{dequantize, dequantize_q4, quantize, quantize_q4};
+        let q8 = quantize(&chunk);
+        let q4 = quantize_q4(&chunk);
+        let q8_payload = q8.q8_bytes() as f64;
+        let q4_payload = q4.q4_bytes() as f64;
+        let rows: [(&str, f64, f64); 4] = [
+            ("quantize q8", q8_payload / measure(3, iters, || quantize(&chunk)).mean, Q8_QUANT_BYTES_PER_SEC),
+            ("dequantize q8", q8_payload / measure(3, iters, || dequantize(&q8)).mean, Q8_DEQUANT_BYTES_PER_SEC),
+            ("quantize q4", q4_payload / measure(3, iters, || quantize_q4(&chunk)).mean, Q4_QUANT_BYTES_PER_SEC),
+            ("dequantize q4", q4_payload / measure(3, iters, || dequantize_q4(&q4)).mean, Q4_DEQUANT_BYTES_PER_SEC),
+        ];
+        let f32_mb = (chunk.k.len() + chunk.v.len()) as f64 * 4.0 / 1e6;
+        for (name, measured, modeled) in rows {
+            println!(
+                "{name:14} ({f32_mb:.1} MB f32 chunk) : measured {:.2} GB/s payload | modeled {:.1} GB/s",
+                measured / 1e9,
+                modeled / 1e9,
+            );
+            let ratio = modeled / measured;
+            if !(0.25..=4.0).contains(&ratio) {
+                eprintln!(
+                    "[hotpath_micro] WARNING: {name} modeled rate diverges {ratio:.1}x from \
+                     this host's codec ({:.2} vs {:.2} GB/s)",
+                    modeled / 1e9,
+                    measured / 1e9,
+                );
+            }
+        }
+    }
+
     // --- state splice (host memcpy choreography)
     let mut host = HostState::zeros(&cfg, 8, cfg.max_ctx);
     let s = measure(3, iters, || host.splice_chunk(3, 0, &chunk).unwrap());

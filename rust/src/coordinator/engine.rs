@@ -199,6 +199,9 @@ impl LoaderCtx {
             staged.cache_len[*b] += l.chunk.seq_len as i32;
             staged.metrics.loaded_tokens += l.chunk.seq_len as usize;
             staged.metrics.quant_secs += l.quant_secs;
+            // q4 unpack rides on both rungs (v4 flash reads and q4-mode
+            // warm hits), so accumulate it outside the from_warm branch.
+            staged.metrics.q4_dequant_secs += l.q4_dequant_secs;
             if l.quant_secs > 0.0 {
                 // This load quantized its chunk into the warm tier:
                 // the arch-scale costing charges the symmetric pass.

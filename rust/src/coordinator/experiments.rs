@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use super::engine::{Engine, EngineOptions};
 use crate::hwsim::StorageProfile;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvStore, WarmMode};
 use crate::util::tempdir::TempDir;
 use crate::workload::{Corpus, RagRequest, RequestGen, TurboRagProfile};
 use crate::Manifest;
@@ -20,8 +20,10 @@ pub struct Scenario {
     pub doc_tokens: usize,
     /// Hot-tier budget to re-apply when the storage device is swapped.
     hot_tier_bytes: usize,
-    /// Warm-tier (q8) budget to re-apply on the same occasion.
+    /// Warm-tier budget to re-apply on the same occasion.
     warm_tier_bytes: usize,
+    /// Warm-tier codec to re-apply alongside the budget.
+    warm_mode: WarmMode,
     /// Shard count to re-apply on reopen (the on-disk layout pins it).
     shards: usize,
     /// Keep the KV directory alive for the scenario's lifetime.
@@ -38,9 +40,13 @@ pub struct ScenarioSpec {
     pub seed: u64,
     /// DRAM hot-tier budget in bytes (0 = flash only).
     pub hot_tier_bytes: usize,
-    /// q8 warm-tier budget in bytes behind the hot tier (0 = none).
-    /// Hot-tier evictions demote here; warm hits dequantize + promote.
+    /// Quantized warm-tier budget in bytes behind the hot tier
+    /// (0 = none). Hot-tier evictions demote here; warm hits
+    /// dequantize + promote.
     pub warm_tier_bytes: usize,
+    /// Warm-tier codec: q8 (default, ~4x fewer resident bytes than
+    /// f32) or q4 (~8x, at its own modeled dequant rate).
+    pub warm_mode: WarmMode,
     /// Simulated independent storage devices (1 = the classic single
     /// bus; >1 = a JBOD, `profile` describing each member device).
     pub shards: usize,
@@ -56,6 +62,7 @@ impl Default for ScenarioSpec {
             seed: 42,
             hot_tier_bytes: 0,
             warm_tier_bytes: 0,
+            warm_mode: WarmMode::Q8,
             shards: 1,
         }
     }
@@ -71,6 +78,7 @@ impl Scenario {
         let mut kv = KvStore::open_sharded(kv_dir.path(), spec.storage, spec.shards.max(1))?;
         kv.set_hot_tier(spec.hot_tier_bytes);
         kv.set_warm_tier(spec.warm_tier_bytes);
+        kv.set_warm_mode(spec.warm_mode);
         let opts = EngineOptions::for_config(&manifest, &spec.config)?;
         let engine = Engine::new(&manifest, opts, kv, corpus.texts())?;
         engine.ingest_corpus(&corpus, spec.doc_tokens)?;
@@ -80,6 +88,7 @@ impl Scenario {
             doc_tokens: spec.doc_tokens,
             hot_tier_bytes: spec.hot_tier_bytes,
             warm_tier_bytes: spec.warm_tier_bytes,
+            warm_mode: spec.warm_mode,
             shards: spec.shards.max(1),
             _kv_dir: kv_dir,
         })
@@ -109,6 +118,7 @@ impl Scenario {
             KvStore::open_sharded(dir, profile, self.shards).expect("reopen kvstore");
         store.set_hot_tier(self.hot_tier_bytes);
         store.set_warm_tier(self.warm_tier_bytes);
+        store.set_warm_mode(self.warm_mode);
         self.engine.kv = std::sync::Arc::new(store);
     }
 }

@@ -113,6 +113,12 @@ pub struct PhaseBreakdown {
     /// `warm_tokens`' dequant charge; demote-on-evict admissions are
     /// not batch-attributable and live in the tier's `CacheStats` only.
     pub warm_admit_tokens: usize,
+    /// Modeled q4→f32 dequantization seconds charged to this serve
+    /// path's loads — v4 flash records unpacked on read plus q4-mode
+    /// warm hits. Kept apart from the q8 `dequant_secs` so fig JSONs
+    /// can attribute the deeper-compression trade to its own clock
+    /// (store-modeled; [`PhaseBreakdown::load_secs_on`] adds it as-is).
+    pub q4_dequant_secs: f64,
     /// Host→device state upload wall time.
     pub upload_secs: f64,
     /// Prefill (doc recompute and/or query sub-prefill) wall time.
@@ -243,6 +249,7 @@ impl PhaseBreakdown {
         self.dequant_secs += other.dequant_secs;
         self.quant_secs += other.quant_secs;
         self.warm_admit_tokens += other.warm_admit_tokens;
+        self.q4_dequant_secs += other.q4_dequant_secs;
         self.upload_secs += other.upload_secs;
         self.prefill_wall_secs += other.prefill_wall_secs;
         self.prefill_trace.add(&other.prefill_trace);
@@ -288,13 +295,17 @@ impl PhaseBreakdown {
     /// dequant bandwidth. Symmetrically, tokens this path quantized
     /// *into* the warm tier (`warm_admit_tokens`) are charged the
     /// quantize pass at the same scale — the warm tier's round trip is
-    /// never half-priced.
+    /// never half-priced. The q4 unpack clock (`q4_dequant_secs`, v4
+    /// flash reads and q4 warm hits) is added as the store modeled it —
+    /// it is priced on actual payload bytes at record time, not
+    /// rescaled per token here.
     pub fn load_secs_on(&self, arch: &ArchSpec, storage: &StorageProfile) -> f64 {
         let miss_tokens =
             self.loaded_tokens.saturating_sub(self.cache_tokens + self.warm_tokens);
         storage.read_secs_batch(arch.kv_bytes(miss_tokens), self.load_reads)
             + crate::hwsim::q8_dequant_secs(arch.kv_bytes(self.warm_tokens) * 0.5)
             + crate::hwsim::q8_quant_secs(arch.kv_bytes(self.warm_admit_tokens) * 0.5)
+            + self.q4_dequant_secs
     }
 
     /// Simulated host→device upload of the loaded KVs: PCIe wire time
@@ -470,6 +481,23 @@ mod tests {
         assert_eq!(a.warm_bytes_saved, 40);
         assert!((a.dequant_secs - 0.75).abs() < 1e-12);
         assert!((a.quant_secs - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q4_dequant_accumulates_and_prices_the_load() {
+        let mut a = PhaseBreakdown { q4_dequant_secs: 0.5, ..Default::default() };
+        a.add(&PhaseBreakdown { q4_dequant_secs: 0.25, ..Default::default() });
+        assert!((a.q4_dequant_secs - 0.75).abs() < 1e-12);
+        // load_secs_on must carry the store-modeled q4 unpack verbatim:
+        // with no tokens loaded at all, the charge is exactly that clock
+        let arch = ArchSpec::llama_70b();
+        let ssd = StorageProfile::ssd_9100pro();
+        assert!((a.load_secs_on(&arch, &ssd) - 0.75).abs() < 1e-12);
+        // and it stacks on top of a miss-token read charge
+        let mut b = PhaseBreakdown { loaded_tokens: 4096, load_reads: 4, ..Default::default() };
+        let base = b.load_secs_on(&arch, &ssd);
+        b.q4_dequant_secs = 0.125;
+        assert!((b.load_secs_on(&arch, &ssd) - base - 0.125).abs() < 1e-12);
     }
 
     #[test]

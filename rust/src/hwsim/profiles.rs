@@ -243,6 +243,40 @@ pub fn q8_quant_secs(q8_bytes: f64) -> f64 {
     q8_bytes / Q8_QUANT_BYTES_PER_SEC
 }
 
+/// Modeled host-side throughput of the q4 → f32 dequantization pass the
+/// cool paths pay (a v4 flash load, or a warm hit in `--warm-mode q4`),
+/// in **q4 payload bytes per second**.
+///
+/// Still memory-bound, but each packed byte now expands to *two*
+/// elements (nibble unpack + sign-extend + scale-multiply each, 8 f32
+/// output bytes per input byte), so the effective input-byte bandwidth
+/// sits below the q8 constant: per *element* the two codecs are
+/// comparable, per *payload byte* q4 does twice the work. The ordering
+/// the model must preserve is unchanged — dequant is far cheaper than
+/// the flash read it replaces bytes of, and far dearer than a hot hit —
+/// which is exactly the trade the v4 format prices: half the device
+/// bytes of v2/v3, bought with this pass on every load.
+pub const Q4_DEQUANT_BYTES_PER_SEC: f64 = 16e9;
+
+/// Modeled seconds to dequantize `q4_bytes` of packed q4 payload back to
+/// f32 (see [`Q4_DEQUANT_BYTES_PER_SEC`]).
+pub fn q4_dequant_secs(q4_bytes: f64) -> f64 {
+    q4_bytes / Q4_DEQUANT_BYTES_PER_SEC
+}
+
+/// Modeled host-side throughput of the f32 → q4 quantization pass paid
+/// when a chunk is packed for a cool path (a v4 flash write, or entry
+/// into a q4-mode warm tier), in q4 payload bytes/second. Symmetric
+/// with [`Q4_DEQUANT_BYTES_PER_SEC`] for the same reason the q8 pair is
+/// symmetric: the mirrored pass streams the same bytes the other way.
+pub const Q4_QUANT_BYTES_PER_SEC: f64 = Q4_DEQUANT_BYTES_PER_SEC;
+
+/// Modeled seconds to quantize a chunk whose q4 payload is `q4_bytes`
+/// (see [`Q4_QUANT_BYTES_PER_SEC`]).
+pub fn q4_quant_secs(q4_bytes: f64) -> f64 {
+    q4_bytes / Q4_QUANT_BYTES_PER_SEC
+}
+
 /// One row of a GPU catalog: the Fig-1 cost/performance trend
 /// ([`CATALOG_GPUS`]) and the serving simulator's device menu
 /// ([`SERVING_GPUS`]) share this shape.
@@ -381,6 +415,29 @@ mod tests {
         assert!(q8_quant_secs(q8_bytes) > 0.0);
         let flash = StorageProfile::ssd_9100pro().read_secs(4 * q8_bytes as usize / 2);
         assert!(q8_quant_secs(q8_bytes) < flash);
+    }
+
+    #[test]
+    fn q4_dequant_sits_between_hot_and_flash() {
+        // The cool-path ordering: serving a chunk by unpacking its q4
+        // copy must beat re-reading even the *halved* v4 file from
+        // flash, while remaining nonzero (the trade is priced).
+        let f32_bytes = 8 << 20; // one decoded chunk
+        let q4 = q4_dequant_secs(f32_bytes as f64 / 8.0);
+        let v4_flash = StorageProfile::ssd_9100pro().read_secs(f32_bytes / 8); // q4 file
+        assert!(q4 > 0.0);
+        assert!(q4 < v4_flash, "q4 dequant {q4} must undercut the v4 flash read {v4_flash}");
+        // and per payload byte q4 is the slower pass (two elements per byte)
+        assert!(Q4_DEQUANT_BYTES_PER_SEC < Q8_DEQUANT_BYTES_PER_SEC);
+    }
+
+    #[test]
+    fn q4_quant_charges_symmetrically_to_dequant() {
+        let q4_bytes = 1e6;
+        assert_eq!(q4_quant_secs(q4_bytes), q4_dequant_secs(q4_bytes));
+        assert!(q4_quant_secs(q4_bytes) > 0.0);
+        let flash = StorageProfile::ssd_9100pro().read_secs(8 * q4_bytes as usize / 2);
+        assert!(q4_quant_secs(q4_bytes) < flash);
     }
 
     #[test]

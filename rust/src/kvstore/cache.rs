@@ -15,6 +15,14 @@
 //! concurrent `load_many` workers share one tier through the store's
 //! `Arc`.
 //!
+//! Admission is pluggable ([`AdmissionPolicy`]): the default admits
+//! every miss LRU-style; `TinyLfu` consults a compact frequency sketch
+//! ([TinyLFU](https://arxiv.org/abs/1512.00727)-style count-min counters
+//! with periodic halving) and refuses candidates whose estimated access
+//! frequency does not beat the would-be LRU victim's — so one
+//! sequential scan of cold chunks can no longer flush the resident hot
+//! set.
+//!
 //! [`KvStore`]: super::KvStore
 
 use std::collections::{BTreeMap, HashMap};
@@ -132,6 +140,13 @@ pub struct CacheStats {
     pub prefetch_hits: AtomicU64,
     /// Prefetch admissions dropped to protect demand-resident chunks.
     pub prefetch_rejected: AtomicU64,
+    /// Demand admissions refused by the TinyLFU frequency gate (the
+    /// candidate's sketch estimate did not beat the LRU victim's).
+    /// Always 0 under [`AdmissionPolicy::Lru`]. Deliberately *not* part
+    /// of [`CacheSample`]: the telemetry JSON shape is pinned by
+    /// downstream consumers; benches that A/B admission policies read
+    /// this counter directly.
+    pub admission_rejected: AtomicU64,
     /// Modeled dequant nanoseconds charged to q8 hits (warm tier; the
     /// nano granularity keeps the counter an integer atomic — like the
     /// shard stats' device clocks — while staying nonzero even for the
@@ -141,6 +156,14 @@ pub struct CacheStats {
     /// q8 tier — demote-on-evict, direct q8 admissions, and prefetches
     /// parked in warm. The symmetric twin of `dequant_ns`.
     pub quant_ns: AtomicU64,
+    /// Modeled dequant nanoseconds charged to **q4** hits (warm tier in
+    /// q4 mode). Kept apart from `dequant_ns` so fig JSONs can
+    /// attribute the deeper-compression trade to its own clock; not
+    /// part of [`CacheSample`] (that JSON shape is pinned).
+    pub q4_dequant_ns: AtomicU64,
+    /// Modeled quantization nanoseconds charged to chunks entering the
+    /// tier in **q4** mode — the symmetric twin of `q4_dequant_ns`.
+    pub q4_quant_ns: AtomicU64,
     /// Nanoseconds this tier's quant/dequant transfers spent *queued*
     /// on the shared host bus ([`crate::hwsim::Link`]) — contention
     /// telemetry on top of the modeled charge, not an extra charge.
@@ -173,6 +196,26 @@ impl CacheStats {
     /// Total modeled quantization seconds charged so far.
     pub fn quant_secs(&self) -> f64 {
         self.quant_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Charge modeled q4 dequantization time (q4-mode warm hits).
+    pub fn add_q4_dequant_secs(&self, secs: f64) {
+        self.q4_dequant_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total modeled q4 dequantization seconds charged so far.
+    pub fn q4_dequant_secs(&self) -> f64 {
+        self.q4_dequant_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Charge modeled q4 quantization time (chunk entering a q4 tier).
+    pub fn add_q4_quant_secs(&self, secs: f64) {
+        self.q4_quant_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total modeled q4 quantization seconds charged so far.
+    pub fn q4_quant_secs(&self) -> f64 {
+        self.q4_quant_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Record host-bus queueing delay a quant/dequant transfer saw.
@@ -230,6 +273,94 @@ impl CacheStats {
     }
 }
 
+/// How the hot tier decides whether a demand miss may displace a
+/// resident chunk (see [`HotTier::set_admission`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit every miss; recency alone picks victims. The historical
+    /// behavior and the default — existing callers are bit-identical.
+    #[default]
+    Lru,
+    /// Frequency-gated admission: a miss that would evict the LRU
+    /// victim is admitted only when its frequency-sketch estimate
+    /// strictly beats the victim's, so a one-pass scan (every candidate
+    /// seen once) cannot displace the repeatedly-hit resident set.
+    TinyLfu,
+}
+
+impl AdmissionPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Lru => "lru",
+            AdmissionPolicy::TinyLfu => "tinylfu",
+        }
+    }
+}
+
+/// Counters in the TinyLFU frequency sketch. Power of two (the lane
+/// hash masks into it); at one byte per counter the whole sketch is
+/// 16 KiB — noise next to the megabyte-scale chunks whose admission it
+/// arbitrates.
+const SKETCH_COUNTERS: usize = 16_384;
+
+/// Hash lanes per id. The estimate is the minimum over the lanes, so a
+/// colliding increment in one lane never inflates it alone.
+const SKETCH_LANES: u64 = 4;
+
+/// Compact access-frequency sketch backing [`AdmissionPolicy::TinyLfu`]:
+/// count-min over [`SKETCH_LANES`] lanes of saturating `u8` counters.
+/// Every recorded access bumps one counter per lane; once the total
+/// number of recordings reaches [`SKETCH_COUNTERS`] all counters are
+/// halved ("aging"), so the estimate tracks *recent* popularity and a
+/// formerly-hot id decays instead of squatting on its history.
+struct FreqSketch {
+    counters: Vec<u8>,
+    /// Recordings since the last halving pass.
+    ops: u64,
+}
+
+impl Default for FreqSketch {
+    fn default() -> Self {
+        FreqSketch { counters: vec![0; SKETCH_COUNTERS], ops: 0 }
+    }
+}
+
+impl FreqSketch {
+    /// Lane `lane`'s counter index for `id`: a splitmix64-style avalanche
+    /// over the id, salted per lane. Deterministic (no per-process seed)
+    /// so sketch-dependent tests and traces replay exactly.
+    fn index(id: ChunkId, lane: u64) -> usize {
+        let mut x = id ^ lane.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        (x as usize) & (SKETCH_COUNTERS - 1)
+    }
+
+    /// Record one access of `id` (called on every probe, hit or miss).
+    fn record(&mut self, id: ChunkId) {
+        for lane in 0..SKETCH_LANES {
+            let c = &mut self.counters[Self::index(id, lane)];
+            *c = c.saturating_add(1);
+        }
+        self.ops += 1;
+        if self.ops >= SKETCH_COUNTERS as u64 {
+            self.ops = 0;
+            for c in self.counters.iter_mut() {
+                *c >>= 1;
+            }
+        }
+    }
+
+    /// Estimated recent access count of `id` (min over the lanes; an
+    /// upper bound on the true count, never an undercount).
+    fn estimate(&self, id: ChunkId) -> u8 {
+        (0..SKETCH_LANES).map(|lane| self.counters[Self::index(id, lane)]).min().unwrap_or(0)
+    }
+}
+
 /// Outcome of a [`HotTier::probe`].
 pub enum Probe {
     /// Resident: the chunk plus the on-disk bytes the hit avoided.
@@ -267,6 +398,12 @@ struct Lru {
     gens: HashMap<ChunkId, u64>,
     bytes: usize,
     clock: u64,
+    /// Demand-miss admission policy (see [`AdmissionPolicy`]).
+    policy: AdmissionPolicy,
+    /// Access-frequency sketch feeding the TinyLFU gate. Lives under
+    /// the LRU mutex — probes already hold it, so recording adds no
+    /// locking — and is only consulted when `policy` is `TinyLfu`.
+    sketch: FreqSketch,
 }
 
 /// Receiver for chunks the hot tier evicts under *budget pressure* —
@@ -336,6 +473,20 @@ impl HotTier {
         *self.sink.write().unwrap() = sink;
     }
 
+    /// Select the demand-miss admission policy. Default is
+    /// [`AdmissionPolicy::Lru`] (every miss admitted — the historical
+    /// behavior, bit-identical); [`AdmissionPolicy::TinyLfu`] turns on
+    /// the frequency gate in [`HotTier::insert_at`]. Takes `&self` so
+    /// the knob works after the tier is shared behind an `Arc`.
+    pub fn set_admission(&self, policy: AdmissionPolicy) {
+        self.lru.lock().unwrap().policy = policy;
+    }
+
+    /// The currently selected admission policy.
+    pub fn admission(&self) -> AdmissionPolicy {
+        self.lru.lock().unwrap().policy
+    }
+
     pub fn budget(&self) -> usize {
         self.budget
     }
@@ -372,6 +523,11 @@ impl HotTier {
         let lru = &mut *guard;
         lru.clock += 1;
         let tick = lru.clock;
+        if lru.policy == AdmissionPolicy::TinyLfu {
+            // Every demand access — hit or miss — feeds the frequency
+            // sketch; the later insert_at of this same miss consults it.
+            lru.sketch.record(id);
+        }
         let gen = lru.gens.get(&id).copied().unwrap_or(0);
         let Some(e) = lru.map.get_mut(&id) else {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
@@ -462,6 +618,24 @@ impl HotTier {
         let lru = &mut *guard;
         if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
             return; // a write/delete raced this load; don't cache stale bytes
+        }
+        // TinyLFU frequency gate: when admitting `id` would force a
+        // budget eviction, the candidate must *strictly* beat the LRU
+        // victim's sketch estimate. A scan item probed once (estimate 1)
+        // loses to any repeatedly-hit resident, so sequential sweeps
+        // read through the tier instead of flushing it. Gated on the
+        // first victim only — the standard TinyLFU approximation.
+        if lru.policy == AdmissionPolicy::TinyLfu {
+            let freed = lru.map.get(&id).map_or(0, |old| old.cost);
+            if lru.bytes - freed + cost > self.budget {
+                let victim = lru.order.iter().find(|&(_, &vid)| vid != id).map(|(_, &vid)| vid);
+                if let Some(victim) = victim {
+                    if lru.sketch.estimate(id) <= lru.sketch.estimate(victim) {
+                        self.stats.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
         }
         lru.clock += 1;
         let tick = lru.clock;
@@ -870,5 +1044,120 @@ mod tests {
         assert_eq!(tier.bytes(), 0);
         assert!(tier.get(1).is_none());
         tier.invalidate(1); // idempotent on absent entries
+    }
+
+    /// Replay the demand path the store drives: probe (records
+    /// frequency, counts the miss), then insert the loaded chunk.
+    fn miss_and_insert(tier: &HotTier, id: ChunkId) {
+        match tier.probe(id) {
+            Probe::Miss(gen) => tier.insert_at(id, chunk(id as u32), 100, gen),
+            Probe::Hit(..) => {}
+        }
+    }
+
+    #[test]
+    fn tinylfu_scan_cannot_flush_the_hot_set() {
+        let tier = HotTier::new(2 * cost());
+        tier.set_admission(AdmissionPolicy::TinyLfu);
+        assert_eq!(tier.admission(), AdmissionPolicy::TinyLfu);
+        // build frequency: ids 1 and 2 probed repeatedly
+        miss_and_insert(&tier, 1);
+        miss_and_insert(&tier, 2);
+        for _ in 0..3 {
+            tier.get(1).unwrap();
+            tier.get(2).unwrap();
+        }
+        // one sequential scan: each cold id seen exactly once
+        for id in 100..108 {
+            miss_and_insert(&tier, id);
+        }
+        assert!(tier.contains(1) && tier.contains(2), "scan flushed the resident hot set");
+        assert_eq!(tier.len(), 2);
+        assert_eq!(tier.stats.admission_rejected.load(Ordering::Relaxed), 8);
+        // the residents still serve as hits after the scan
+        assert!(tier.get(1).is_some() && tier.get(2).is_some());
+    }
+
+    #[test]
+    fn lru_default_is_flushed_by_the_same_scan() {
+        // The A/B control for the test above: identical trace, default
+        // policy — recency-only admission lets the scan displace both
+        // frequently-hit residents.
+        let tier = HotTier::new(2 * cost());
+        assert_eq!(tier.admission(), AdmissionPolicy::Lru);
+        miss_and_insert(&tier, 1);
+        miss_and_insert(&tier, 2);
+        for _ in 0..3 {
+            tier.get(1).unwrap();
+            tier.get(2).unwrap();
+        }
+        for id in 100..108 {
+            miss_and_insert(&tier, id);
+        }
+        assert!(!tier.contains(1) && !tier.contains(2));
+        assert_eq!(tier.stats.admission_rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn tinylfu_admits_candidate_that_out_frequents_the_victim() {
+        let tier = HotTier::new(cost()); // one slot: every admission evicts
+        tier.set_admission(AdmissionPolicy::TinyLfu);
+        miss_and_insert(&tier, 1);
+        tier.get(1).unwrap();
+        tier.get(1).unwrap(); // estimate(1) = 3
+        // two probes of 5 (estimate 2) lose to the resident...
+        assert!(tier.get(5).is_none());
+        miss_and_insert(&tier, 5);
+        assert!(tier.contains(1) && !tier.contains(5));
+        // ...but further demand keeps raising the estimate until it
+        // strictly beats the victim's, and the candidate displaces it.
+        assert!(tier.get(5).is_none());
+        miss_and_insert(&tier, 5); // estimate(5) = 4 > 3
+        assert!(tier.contains(5), "out-frequented victim kept its slot");
+        assert!(!tier.contains(1));
+    }
+
+    #[test]
+    fn tinylfu_never_gates_admissions_that_fit_without_eviction() {
+        let tier = HotTier::new(4 * cost());
+        tier.set_admission(AdmissionPolicy::TinyLfu);
+        // cold-start fills (no victim to defend) always admit
+        for id in 1..=4 {
+            miss_and_insert(&tier, id);
+        }
+        assert_eq!(tier.len(), 4);
+        assert_eq!(tier.stats.admission_rejected.load(Ordering::Relaxed), 0);
+        // same-id refresh replaces in place: no eviction, no gate
+        tier.insert(1, chunk(9), 100);
+        assert_eq!(tier.get(1).unwrap().0.k, chunk(9).k);
+    }
+
+    #[test]
+    fn sketch_halving_ages_out_stale_frequency() {
+        let tier = HotTier::new(cost()); // one slot
+        tier.set_admission(AdmissionPolicy::TinyLfu);
+        for _ in 0..64 {
+            tier.probe(1); // old hotness: estimate(1) = 64
+        }
+        miss_and_insert(&tier, 1);
+        for _ in 0..8 {
+            tier.probe(5);
+        }
+        miss_and_insert(&tier, 5);
+        assert!(tier.contains(1) && !tier.contains(5), "fresh trickle beat stale hotness too early");
+        // a long stream of unrelated traffic crosses the halving
+        // threshold twice: estimate(1) decays 64 → 16 without id 1 ever
+        // being touched again
+        for _ in 0..(2 * SKETCH_COUNTERS as u64) {
+            tier.probe(2);
+        }
+        // now a moderately demanded candidate (20 recent accesses > 16
+        // decayed ones) wins the slot
+        for _ in 0..20 {
+            tier.probe(5);
+        }
+        miss_and_insert(&tier, 5);
+        assert!(tier.contains(5), "aged-out resident still defending its slot");
+        assert!(!tier.contains(1));
     }
 }

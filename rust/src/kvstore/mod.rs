@@ -19,14 +19,21 @@
 //! through [`CacheStats`] and per-batch through
 //! [`crate::coordinator::metrics::PhaseBreakdown`].
 //!
-//! Between the hot tier and flash sits an optional **q8 warm tier**
+//! Between the hot tier and flash sits an optional **warm tier**
 //! ([`WarmTier`], [`KvStore::set_warm_tier`]): hot-tier budget evictions
 //! demote into it as symmetric per-plane q8 ([`quant`], ~4x fewer
-//! resident bytes), and warm hits dequantize — at a modeled cost
-//! ([`crate::hwsim::profiles::q8_dequant_secs`]) — and promote back to
+//! resident bytes) or — under [`WarmMode::Q4`] — q4 (~8x), and warm hits
+//! dequantize at a modeled cost ([`crate::hwsim::profiles::q8_dequant_secs`]
+//! / [`crate::hwsim::profiles::q4_dequant_secs`]) and promote back to
 //! hot. At equal total DRAM budget the hot+warm split keeps strictly
 //! more chunks off the device than hot alone; the fidelity price of
 //! serving dequantized planes is measured by `benches/fig_warm_tier.rs`.
+//! One rung cooler, the **v4 flash format** stores the same q4 planes
+//! on disk (~4x fewer flash bytes than v1, half of v2/v3), trading a
+//! per-load dequant charge for device-read time, and the hot tier's
+//! eviction choice can be gated by a TinyLFU frequency sketch
+//! ([`AdmissionPolicy::TinyLfu`]) so one sequential scan cannot flush
+//! the resident hot set.
 //! The lookup ladder in [`KvStore::load_many`] is hot → warm → flash;
 //! under an installed [`crate::hwsim::FaultPlan`] failed flash reads
 //! extend it with bounded retry/backoff and a Vanilla-recompute safety
@@ -59,11 +66,13 @@ pub mod store;
 pub mod throttle;
 pub mod warm;
 
-pub use cache::{series_to_json, CacheSample, CacheStats, DemoteSink, HotTier, Probe, TierKind};
-pub use quant::{dequantize, quantize, QuantChunk};
+pub use cache::{
+    series_to_json, AdmissionPolicy, CacheSample, CacheStats, DemoteSink, HotTier, Probe, TierKind,
+};
+pub use quant::{dequantize, dequantize_q4, quantize, quantize_q4, Q4Chunk, QuantChunk};
 pub use shard::{route, Shard, ShardStats};
 pub use store::{
     KvChunk, KvFormat, KvStore, Loaded, PrefetchReport, ResidentSet, ShardedKvStore, StoreStats,
 };
 pub use throttle::DeviceThrottle;
-pub use warm::{WarmProbe, WarmTier};
+pub use warm::{WarmMode, WarmPayload, WarmProbe, WarmTier};

@@ -1,4 +1,5 @@
-//! Symmetric per-plane q8 codec for the DRAM warm tier.
+//! Symmetric per-plane q8 and q4 codecs for the DRAM warm tier and the
+//! v4 flash format.
 //!
 //! The warm tier ([`super::WarmTier`]) holds chunks evicted from the f32
 //! hot tier at ~4x fewer resident bytes: each K/V element is stored as a
@@ -9,18 +10,29 @@
 //! precision; per-plane, each head's error is bounded by *its own*
 //! dynamic range.
 //!
-//! The codec is symmetric (no zero-point): `scale = max|x| / 127`,
-//! `q = round(x / scale)`, `x̂ = q · scale`. Rounding to nearest gives
-//! the error bound the property tests pin:
+//! Both codecs are symmetric (no zero-point): `scale = max|x| / Q`,
+//! `q = round(x / scale)`, `x̂ = q · scale`, with `Q = 127` for q8 and
+//! `Q = 7` for q4. Rounding to nearest gives the error bounds the
+//! property tests pin:
 //!
 //! ```text
-//! |x − x̂| ≤ scale / 2 = max|x| / 254      (per plane)
+//! |x − x̂| ≤ scale / 2 = max|x| / 254      (q8, per plane)
+//! |x − x̂| ≤ scale / 2 = max|x| / 14       (q4, per plane)
 //! ```
+//!
+//! The q4 codec packs **two signed 4-bit values per byte** (range
+//! −7..=7, two's-complement nibbles, low nibble first; each plane packs
+//! independently so an odd `plane_len` pads its last nibble) — half the
+//! q8 payload again, at a 18x looser error bound. It backs the cool
+//! paths: the `--warm-mode q4` DRAM tier and the v4 on-disk format
+//! ([`super::store::KvFormat::V4`]), where the saved flash bytes are
+//! bought with a modeled dequant pass per load.
 //!
 //! An all-zero plane encodes with scale 0 and decodes exactly. Encode
 //! and decode are single memory-bound passes; the modeled serve-time
-//! cost of the decode pass lives in
-//! [`crate::hwsim::profiles::q8_dequant_secs`].
+//! costs of the decode passes live in
+//! [`crate::hwsim::profiles::q8_dequant_secs`] and
+//! [`crate::hwsim::profiles::q4_dequant_secs`].
 
 use super::store::KvChunk;
 
@@ -152,6 +164,156 @@ pub fn dequantize(q: &QuantChunk) -> KvChunk {
     }
 }
 
+/// A [`KvChunk`] with its K/V planes quantized to q4: two
+/// two's-complement nibbles per byte, one f32 scale per layer×head
+/// plane. Half the q8 payload; the error bound is max|plane|/14.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Q4Chunk {
+    pub config_id: u32,
+    pub n_layers: u32,
+    pub n_kv_heads: u32,
+    pub seq_len: u32,
+    pub head_dim: u32,
+    /// One scale per layer×head plane of K (`n_layers * n_kv_heads`).
+    pub k_scales: Vec<f32>,
+    /// One scale per layer×head plane of V.
+    pub v_scales: Vec<f32>,
+    /// Packed K nibbles, plane-major: each plane occupies
+    /// `ceil(plane_len / 2)` bytes, low nibble first.
+    pub k_q: Vec<u8>,
+    /// Packed V nibbles, same layout as `k_q`.
+    pub v_q: Vec<u8>,
+}
+
+impl Q4Chunk {
+    /// Elements in one layer×head plane.
+    pub fn plane_len(&self) -> usize {
+        self.seq_len as usize * self.head_dim as usize
+    }
+
+    /// Number of layer×head planes per tensor (= scales per tensor).
+    pub fn n_planes(&self) -> usize {
+        self.n_layers as usize * self.n_kv_heads as usize
+    }
+
+    /// Total K+V *elements* (not bytes) the planes decode to.
+    pub fn total_elems(&self) -> usize {
+        2 * self.n_planes() * self.plane_len()
+    }
+
+    /// Bytes the q4 payload occupies (what a dequant pass must touch):
+    /// packed nibbles plus the per-plane scales.
+    pub fn q4_bytes(&self) -> usize {
+        self.k_q.len() + self.v_q.len() + 4 * (self.k_scales.len() + self.v_scales.len())
+    }
+
+    /// Resident bytes when held by the DRAM warm tier in q4 mode — the
+    /// ~8x advantage over [`KvChunk::dram_bytes`].
+    pub fn dram_bytes(&self) -> usize {
+        std::mem::size_of::<Q4Chunk>() + self.q4_bytes()
+    }
+
+    /// Resident bytes the *dequantized* f32 chunk would occupy — what a
+    /// promotion into the hot tier would charge (see
+    /// [`QuantChunk::f32_dram_bytes`]).
+    pub fn f32_dram_bytes(&self) -> usize {
+        std::mem::size_of::<KvChunk>() + 4 * self.total_elems()
+    }
+}
+
+/// Bytes one q4-packed plane of `plane_len` elements occupies.
+pub fn q4_plane_bytes(plane_len: usize) -> usize {
+    plane_len.div_ceil(2)
+}
+
+fn quantize_planes_q4(src: &[f32], plane_len: usize) -> (Vec<f32>, Vec<u8>) {
+    let mut scales = Vec::with_capacity(if plane_len > 0 { src.len() / plane_len } else { 0 });
+    let mut q = Vec::new();
+    if plane_len == 0 {
+        return (scales, q);
+    }
+    q.reserve(src.len().div_ceil(plane_len) * q4_plane_bytes(plane_len));
+    for plane in src.chunks(plane_len) {
+        let max_abs = plane.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if max_abs > 0.0 { max_abs / 7.0 } else { 0.0 };
+        scales.push(scale);
+        let quant = |x: f32| -> u8 {
+            if scale == 0.0 {
+                0
+            } else {
+                ((x / scale).round().clamp(-7.0, 7.0) as i8 as u8) & 0x0f
+            }
+        };
+        for pair in plane.chunks(2) {
+            let lo = quant(pair[0]);
+            let hi = if pair.len() == 2 { quant(pair[1]) } else { 0 };
+            q.push(lo | (hi << 4));
+        }
+    }
+    (scales, q)
+}
+
+#[inline]
+fn nibble_to_i8(n: u8) -> i8 {
+    // sign-extend the low 4 bits (two's complement)
+    ((n << 4) as i8) >> 4
+}
+
+fn dequantize_planes_q4(scales: &[f32], q: &[u8], plane_len: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(scales.len() * plane_len);
+    if plane_len == 0 {
+        return out;
+    }
+    let packed = q4_plane_bytes(plane_len);
+    for (plane, &scale) in q.chunks(packed).zip(scales) {
+        let mut left = plane_len;
+        for &b in plane {
+            out.push(nibble_to_i8(b & 0x0f) as f32 * scale);
+            left -= 1;
+            if left == 0 {
+                break; // odd plane_len: the high nibble of the last byte is padding
+            }
+            out.push(nibble_to_i8(b >> 4) as f32 * scale);
+            left -= 1;
+        }
+    }
+    out
+}
+
+/// Quantize a chunk's K/V planes to q4 (one scale per layer×head plane,
+/// two values per byte).
+pub fn quantize_q4(chunk: &KvChunk) -> Q4Chunk {
+    let plane_len = chunk.seq_len as usize * chunk.head_dim as usize;
+    let (k_scales, k_q) = quantize_planes_q4(&chunk.k, plane_len);
+    let (v_scales, v_q) = quantize_planes_q4(&chunk.v, plane_len);
+    Q4Chunk {
+        config_id: chunk.config_id,
+        n_layers: chunk.n_layers,
+        n_kv_heads: chunk.n_kv_heads,
+        seq_len: chunk.seq_len,
+        head_dim: chunk.head_dim,
+        k_scales,
+        v_scales,
+        k_q,
+        v_q,
+    }
+}
+
+/// Reconstruct the f32 chunk a q4 cool-path load serves (lossy: see the
+/// module error bound).
+pub fn dequantize_q4(q: &Q4Chunk) -> KvChunk {
+    let plane_len = q.plane_len();
+    KvChunk {
+        config_id: q.config_id,
+        n_layers: q.n_layers,
+        n_kv_heads: q.n_kv_heads,
+        seq_len: q.seq_len,
+        head_dim: q.head_dim,
+        k: dequantize_planes_q4(&q.k_scales, &q.k_q, plane_len),
+        v: dequantize_planes_q4(&q.v_scales, &q.v_q, plane_len),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +442,138 @@ mod tests {
         let c = chunk_with(2, 3, 8, 4, |i| i as f32, |i| -(i as f32));
         let q = quantize(&c);
         let back = dequantize(&q);
+        assert_eq!(
+            (back.config_id, back.n_layers, back.n_kv_heads, back.seq_len, back.head_dim),
+            (c.config_id, c.n_layers, c.n_kv_heads, c.seq_len, c.head_dim)
+        );
+        assert_eq!(back.k.len(), c.k.len());
+        assert_eq!(back.v.len(), c.v.len());
+    }
+
+    // ---- q4 ------------------------------------------------------------
+
+    #[test]
+    fn q4_roundtrip_error_bounded_per_plane() {
+        // Property: for random payloads, every reconstructed element is
+        // within max|plane| / 14 of the original — the q4 bound.
+        for seed in 1..=8u64 {
+            let mut rnd = lcg(seed);
+            let c = chunk_with(3, 2, 16, 8, |_| rnd(), |_| 0.0);
+            let mut rnd2 = lcg(seed ^ 0xbeef);
+            let c = KvChunk { v: c.k.iter().map(|_| rnd2()).collect(), ..c };
+            let q = quantize_q4(&c);
+            let back = dequantize_q4(&q);
+            assert_eq!(back.plane_elems(), c.plane_elems());
+            let plane_len = q.plane_len();
+            for (src, dst, scales) in
+                [(&c.k, &back.k, &q.k_scales), (&c.v, &back.v, &q.v_scales)]
+            {
+                for (p, (orig, rec)) in
+                    src.chunks(plane_len).zip(dst.chunks(plane_len)).enumerate()
+                {
+                    let bound = max_abs_error(scales[p]) + 1e-7;
+                    for (a, b) in orig.iter().zip(rec) {
+                        assert!(
+                            (a - b).abs() <= bound,
+                            "seed {seed} plane {p}: {a} vs {b} (bound {bound})"
+                        );
+                    }
+                    // and the bound itself is max|plane|/14
+                    let max_abs = orig.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    assert!(max_abs_error(scales[p]) <= max_abs / 14.0 + 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q4_per_plane_scales_isolate_loud_heads() {
+        // Same isolation property as q8: the quiet plane's error is
+        // bounded by ITS dynamic range, not the loud plane's.
+        let plane_len = 16 * 8;
+        let c = chunk_with(
+            2,
+            1,
+            16,
+            8,
+            |i| if i < plane_len { 1000.0 } else { 0.001 * ((i % 7) as f32 - 3.0) },
+            |_| 1.0,
+        );
+        let q = quantize_q4(&c);
+        let back = dequantize_q4(&q);
+        for (a, b) in c.k[plane_len..].iter().zip(&back.k[plane_len..]) {
+            assert!((a - b).abs() <= 0.003 / 14.0 + 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn q4_zero_planes_and_on_grid_values_roundtrip_exactly() {
+        // All-zero planes encode with scale 0; values on the q4 grid
+        // (integers −7..=7 with a ±7 in every plane, so scale = 1)
+        // survive exactly, negatives included.
+        let c = chunk_with(
+            1,
+            2,
+            4,
+            4,
+            |_| 0.0,
+            |i| if i % 16 == 0 { 7.0 } else { (i % 15) as f32 - 7.0 },
+        );
+        let q = quantize_q4(&c);
+        assert!(q.k_scales.iter().all(|&s| s == 0.0));
+        let back = dequantize_q4(&q);
+        assert_eq!(back.k, c.k);
+        assert_eq!(back.v, c.v, "on-grid integers must be exact");
+        assert!(back.v[1] < 0.0);
+    }
+
+    #[test]
+    fn q4_odd_plane_len_pads_the_last_nibble() {
+        // plane_len = 3*3 = 9 (odd): each plane packs to 5 bytes, the
+        // high nibble of the last byte is padding, and the roundtrip
+        // still reconstructs exactly plane_len elements per plane.
+        // every 9-element plane leads with a 7 so its scale is exactly 1
+        let c = chunk_with(
+            2,
+            2,
+            3,
+            3,
+            |i| if i % 9 == 0 { 7.0 } else { ((i % 15) as f32) - 7.0 },
+            |i| (i % 8) as f32,
+        );
+        let q = quantize_q4(&c);
+        assert_eq!(q.plane_len(), 9);
+        assert_eq!(q.k_q.len(), q.n_planes() * q4_plane_bytes(9));
+        assert_eq!(q4_plane_bytes(9), 5);
+        let back = dequantize_q4(&q);
+        assert_eq!(back.k.len(), c.k.len());
+        assert_eq!(back.v.len(), c.v.len());
+        assert_eq!(back.k, c.k, "on-grid odd-plane payload must be exact");
+    }
+
+    #[test]
+    fn q4_is_about_an_eighth_of_f32_residency_and_half_of_q8() {
+        let c = chunk_with(4, 4, 64, 16, |i| (i as f32).sin(), |i| (i as f32).cos());
+        let q8 = quantize(&c);
+        let q4 = quantize_q4(&c);
+        let ratio = q4.dram_bytes() as f64 / c.dram_bytes() as f64;
+        assert!(ratio < 0.16, "q4/f32 residency ratio {ratio}");
+        assert!(
+            (q4.q4_bytes() as f64) < 0.55 * q8.q8_bytes() as f64,
+            "q4 payload {} vs q8 {}",
+            q4.q4_bytes(),
+            q8.q8_bytes()
+        );
+        assert_eq!(q4.total_elems(), 2 * c.plane_elems());
+        assert_eq!(q4.n_planes(), 16);
+        assert_eq!(q4.k_scales.len(), 16);
+    }
+
+    #[test]
+    fn q4_shapes_survive_roundtrip() {
+        let c = chunk_with(2, 3, 8, 4, |i| i as f32, |i| -(i as f32));
+        let q = quantize_q4(&c);
+        let back = dequantize_q4(&q);
         assert_eq!(
             (back.config_id, back.n_layers, back.n_kv_heads, back.seq_len, back.head_dim),
             (c.config_id, c.n_layers, c.n_kv_heads, c.seq_len, c.head_dim)

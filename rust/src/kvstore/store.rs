@@ -2,7 +2,7 @@
 //! an optional DRAM hot tier ([`HotTier`]), and a sharded flash layer
 //! ([`super::Shard`]) so aggregate load bandwidth scales past one bus.
 //!
-//! Three on-disk formats share one header layout (8 little-endian u32
+//! Four on-disk formats share one header layout (8 little-endian u32
 //! words: magic, version, config id, layers, kv-heads, seq, head dim,
 //! reserved/checksum):
 //!
@@ -14,7 +14,14 @@
 //!   on every read — same file size and device timing as v2, but a
 //!   silently corrupted read is detected instead of served. The
 //!   default write format; decode dispatches on the version word, so
-//!   stores holding a mix of v1/v2/v3 files serve all transparently.
+//!   stores holding a mix of v1–v4 files serve all transparently.
+//! * **v4** — the q4 **cool format**: per-plane f32 scales plus packed
+//!   4-bit planes ([`quant::Q4Chunk`]), with the v3 checksum. ~4x fewer
+//!   flash bytes than v1 and about half of v2/v3, which is the paper's
+//!   compute-for-bytes trade one level deeper: the device read is
+//!   priced at the smaller byte count and every load is charged a
+//!   modeled q4→f32 dequant pass ([`Loaded::q4_dequant_secs`]) —
+//!   the saved flash seconds are bought, not free.
 
 use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
@@ -27,8 +34,8 @@ use anyhow::{bail, Context, Result};
 use super::cache::{HotTier, Probe};
 use super::quant;
 use super::shard::{route, Shard};
-use super::warm::{WarmProbe, WarmTier};
-use crate::hwsim::profiles::{q8_dequant_secs, Q8_DEQUANT_BYTES_PER_SEC};
+use super::warm::{WarmMode, WarmProbe, WarmTier};
+use crate::hwsim::profiles::Q8_DEQUANT_BYTES_PER_SEC;
 use crate::hwsim::{FaultPlan, Link, LinkClock, StorageProfile, TrafficClass};
 use crate::manifest::ModelConfig;
 use crate::util::aio::{IoPool, Pending};
@@ -49,7 +56,16 @@ pub enum KvFormat {
     /// f16 planes + payload checksum in the reserved header word
     /// (version word 3) — same bytes and timing as v2.
     V3,
+    /// q4 planes (per-plane f32 scales + two packed elements per byte)
+    /// with the v3 checksum (version word 4) — about half the bytes of
+    /// v2/v3, paid for with a modeled dequant pass on every load.
+    V4,
 }
+
+/// Newest version word this reader decodes. A file declaring a higher
+/// version was written by a newer matkv and is rejected with a
+/// forward-compat message, not a generic decode bail.
+const NEWEST_KV_VERSION: u32 = 4;
 
 impl KvFormat {
     pub fn version(self) -> u32 {
@@ -57,15 +73,26 @@ impl KvFormat {
             KvFormat::V1 => 1,
             KvFormat::V2 => 2,
             KvFormat::V3 => 3,
+            KvFormat::V4 => 4,
         }
     }
 
-    /// Bytes per stored K/V element.
-    pub fn elem_bytes(self) -> usize {
+    /// Bytes per stored K/V element for the flat formats; `None` for
+    /// v4, which packs two elements per byte plus per-plane scales (its
+    /// sizing goes through [`KvChunk::file_bytes`] and the decoder's v4
+    /// arm instead).
+    pub fn elem_bytes(self) -> Option<usize> {
         match self {
-            KvFormat::V1 => 4,
-            KvFormat::V2 | KvFormat::V3 => 2,
+            KvFormat::V1 => Some(4),
+            KvFormat::V2 | KvFormat::V3 => Some(2),
+            KvFormat::V4 => None,
         }
+    }
+
+    /// Does this format carry the payload checksum in the reserved
+    /// header word?
+    fn checksummed(self) -> bool {
+        matches!(self, KvFormat::V3 | KvFormat::V4)
     }
 }
 
@@ -116,9 +143,28 @@ impl KvChunk {
         std::mem::size_of::<KvChunk>() + 8 * self.plane_elems()
     }
 
+    /// Layer×head planes per tensor (the per-plane-scale count of the
+    /// quantized formats).
+    pub fn n_planes(&self) -> usize {
+        self.n_layers as usize * self.n_kv_heads as usize
+    }
+
+    /// Elements in one layer×head plane.
+    pub fn plane_len(&self) -> usize {
+        self.seq_len as usize * self.head_dim as usize
+    }
+
     /// On-disk size when encoded as `format`.
     pub fn file_bytes(&self, format: KvFormat) -> usize {
-        HEADER_BYTES + 2 * format.elem_bytes() * self.plane_elems()
+        match format.elem_bytes() {
+            Some(eb) => HEADER_BYTES + 2 * eb * self.plane_elems(),
+            // v4: per-plane f32 scales + packed nibbles, K and V.
+            None => {
+                HEADER_BYTES
+                    + 2 * (4 * self.n_planes()
+                        + self.n_planes() * quant::q4_plane_bytes(self.plane_len()))
+            }
+        }
     }
 
     fn validate(&self) -> Result<()> {
@@ -233,14 +279,20 @@ pub struct Loaded {
     /// Served without a device read: a DRAM tier hit (hot or warm), or a
     /// reuse of an identical id earlier in the same `load_many` call.
     pub from_cache: bool,
-    /// Served by the q8 warm tier: no device read, but the planes were
-    /// dequantized (lossy within the codec's error bound) and the load
-    /// was charged `dequant_secs` of modeled time.
+    /// Served by the quantized warm tier: no device read, but the
+    /// planes were dequantized (lossy within the codec's error bound)
+    /// and the load was charged `dequant_secs` (q8 mode) or
+    /// `q4_dequant_secs` (q4 mode) of modeled time.
     pub from_warm: bool,
-    /// Modeled q8→f32 dequantization seconds (warm hits only; 0
+    /// Modeled q8→f32 dequantization seconds (q8 warm hits only; 0
     /// elsewhere, including for in-call duplicates of a warm hit — the
     /// dequantized chunk is shared, not re-decoded).
     pub dequant_secs: f64,
+    /// Modeled q4→f32 dequantization seconds: charged on every v4 flash
+    /// load (the priced half of the v4 byte saving) and on warm hits in
+    /// q4 mode. Kept distinct from `dequant_secs` so the fig JSONs can
+    /// attribute the cool-path trade.
+    pub q4_dequant_secs: f64,
     /// Modeled f32→q8 quantization seconds this load paid admitting its
     /// chunk into the warm tier (warm-only stores and chunks oversize
     /// for the hot tier; 0 elsewhere — demote-on-evict quantization is
@@ -286,6 +338,7 @@ impl Loaded {
             from_cache,
             from_warm,
             dequant_secs,
+            q4_dequant_secs: 0.0,
             quant_secs,
             shard,
             retries: 0,
@@ -680,6 +733,27 @@ impl KvStore {
         self.wire_demote();
     }
 
+    /// Select the warm tier's codec for future admissions
+    /// (`--warm-mode q8|q4`; see [`WarmMode`]). No-op without a warm
+    /// tier; call after [`KvStore::set_warm_tier`] — replacing the tier
+    /// resets the mode to the q8 default.
+    pub fn set_warm_mode(&self, mode: WarmMode) {
+        if let Some(warm) = &self.warm {
+            warm.set_mode(mode);
+        }
+    }
+
+    /// Select the hot tier's demand-admission policy
+    /// (`--admission lru|tinylfu`; see
+    /// [`super::cache::AdmissionPolicy`]). No-op without a hot tier;
+    /// call after [`KvStore::set_hot_tier`] — replacing the tier resets
+    /// the policy to the LRU default.
+    pub fn set_admission(&self, policy: super::cache::AdmissionPolicy) {
+        if let Some(hot) = &self.hot {
+            hot.set_admission(policy);
+        }
+    }
+
     /// Point the hot tier's budget evictions at the warm tier (or back
     /// at the void). Called whenever either tier is replaced, so the
     /// demote path survives any `set_hot_tier`/`set_warm_tier` order.
@@ -750,8 +824,7 @@ impl KvStore {
     }
 
     fn encode(chunk: &KvChunk, format: KvFormat) -> Vec<u8> {
-        let plane = chunk.plane_elems();
-        let mut buf = Vec::with_capacity(HEADER_BYTES + 2 * format.elem_bytes() * plane);
+        let mut buf = Vec::with_capacity(chunk.file_bytes(format));
         for word in [
             MAGIC,
             format.version(),
@@ -764,21 +837,36 @@ impl KvStore {
         ] {
             buf.extend_from_slice(&word.to_le_bytes());
         }
-        for plane_data in [&chunk.k, &chunk.v] {
-            match format {
-                KvFormat::V1 => {
-                    for &x in plane_data.iter() {
-                        buf.extend_from_slice(&x.to_le_bytes());
-                    }
-                }
-                KvFormat::V2 | KvFormat::V3 => {
-                    for &x in plane_data.iter() {
-                        buf.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        match format {
+            KvFormat::V1 | KvFormat::V2 | KvFormat::V3 => {
+                for plane_data in [&chunk.k, &chunk.v] {
+                    match format {
+                        KvFormat::V1 => {
+                            for &x in plane_data.iter() {
+                                buf.extend_from_slice(&x.to_le_bytes());
+                            }
+                        }
+                        _ => {
+                            for &x in plane_data.iter() {
+                                buf.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+                            }
+                        }
                     }
                 }
             }
+            KvFormat::V4 => {
+                // Per tensor: the per-plane f32 scales, then the packed
+                // nibble planes (each plane starts on a byte boundary).
+                let q = quant::quantize_q4(chunk);
+                for (scales, packed) in [(&q.k_scales, &q.k_q), (&q.v_scales, &q.v_q)] {
+                    for &s in scales.iter() {
+                        buf.extend_from_slice(&s.to_le_bytes());
+                    }
+                    buf.extend_from_slice(packed);
+                }
+            }
         }
-        if format == KvFormat::V3 {
+        if format.checksummed() {
             // Patch the payload checksum into the reserved header word.
             let sum = fnv1a32(&buf[HEADER_BYTES..]);
             buf[28..32].copy_from_slice(&sum.to_le_bytes());
@@ -786,7 +874,9 @@ impl KvStore {
         buf
     }
 
-    fn decode(data: &[u8]) -> Result<KvChunk> {
+    /// Decode a record, also reporting which on-disk format it carried
+    /// (the load path prices a v4 record's dequant pass from this).
+    fn decode_versioned(data: &[u8]) -> Result<(KvChunk, KvFormat)> {
         if data.len() < HEADER_BYTES {
             bail!("KV file truncated: {} bytes", data.len());
         }
@@ -798,6 +888,11 @@ impl KvStore {
             1 => KvFormat::V1,
             2 => KvFormat::V2,
             3 => KvFormat::V3,
+            4 => KvFormat::V4,
+            v if v > NEWEST_KV_VERSION => bail!(
+                "KV format {v} from a newer writer: this reader decodes up to \
+                 v{NEWEST_KV_VERSION} — upgrade matkv (or re-materialize with --kv-format)"
+            ),
             v => bail!("unsupported KV version {v}"),
         };
         // Header dimensions are untrusted: all size math is checked so a
@@ -807,42 +902,110 @@ impl KvStore {
             .into_iter()
             .try_fold(1u64, |acc, w| acc.checked_mul(w as u64))
             .context("KV header dimensions overflow")?;
-        let elem_bytes = format.elem_bytes() as u64;
-        let expected = plane_u64
-            .checked_mul(2 * elem_bytes)
-            .and_then(|b| b.checked_add(HEADER_BYTES as u64))
+        let n_planes_u64 = (word(3) as u64)
+            .checked_mul(word(4) as u64)
             .context("KV header dimensions overflow")?;
+        let expected = match format.elem_bytes() {
+            Some(eb) => plane_u64
+                .checked_mul(2 * eb as u64)
+                .and_then(|b| b.checked_add(HEADER_BYTES as u64))
+                .context("KV header dimensions overflow")?,
+            None => {
+                // v4: scales + packed nibbles per tensor. plane_len =
+                // seq * head_dim; packed = ceil(plane_len / 2) per plane.
+                let plane_len = (word(5) as u64)
+                    .checked_mul(word(6) as u64)
+                    .context("KV header dimensions overflow")?;
+                let per_tensor = n_planes_u64
+                    .checked_mul(4 + plane_len.div_ceil(2))
+                    .context("KV header dimensions overflow")?;
+                per_tensor
+                    .checked_mul(2)
+                    .and_then(|b| b.checked_add(HEADER_BYTES as u64))
+                    .context("KV header dimensions overflow")?
+            }
+        };
         if data.len() as u64 != expected {
             bail!("KV file size mismatch: {} vs {expected}", data.len());
         }
-        // Size checks can't see a bit flip; the v3 payload checksum can.
-        if format == KvFormat::V3 && fnv1a32(&data[HEADER_BYTES..]) != word(7) {
+        // Size checks can't see a bit flip; the v3/v4 payload checksum can.
+        if format.checksummed() && fnv1a32(&data[HEADER_BYTES..]) != word(7) {
             bail!("KV checksum mismatch: the payload was corrupted");
         }
         let plane = plane_u64 as usize; // fits: expected == data.len()
-        let floats = |idx: usize| -> Vec<f32> {
-            let off = HEADER_BYTES + idx * plane * elem_bytes as usize;
-            let src = &data[off..off + plane * elem_bytes as usize];
-            match format {
-                KvFormat::V1 => src
-                    .chunks_exact(4)
-                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                    .collect(),
-                KvFormat::V2 | KvFormat::V3 => src
-                    .chunks_exact(2)
-                    .map(|b| f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap())))
-                    .collect(),
+        let chunk = match format.elem_bytes() {
+            Some(eb) => {
+                let floats = |idx: usize| -> Vec<f32> {
+                    let off = HEADER_BYTES + idx * plane * eb;
+                    let src = &data[off..off + plane * eb];
+                    match format {
+                        KvFormat::V1 => src
+                            .chunks_exact(4)
+                            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                            .collect(),
+                        _ => src
+                            .chunks_exact(2)
+                            .map(|b| f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap())))
+                            .collect(),
+                    }
+                };
+                KvChunk {
+                    config_id: word(2),
+                    n_layers: word(3),
+                    n_kv_heads: word(4),
+                    seq_len: word(5),
+                    head_dim: word(6),
+                    k: floats(0),
+                    v: floats(1),
+                }
+            }
+            None => {
+                let n_planes = n_planes_u64 as usize;
+                let plane_len = word(5) as usize * word(6) as usize;
+                let packed = quant::q4_plane_bytes(plane_len);
+                let per_tensor = 4 * n_planes + n_planes * packed;
+                let tensor = |idx: usize| -> (Vec<f32>, Vec<u8>) {
+                    let off = HEADER_BYTES + idx * per_tensor;
+                    let scales = data[off..off + 4 * n_planes]
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect();
+                    let q = data[off + 4 * n_planes..off + per_tensor].to_vec();
+                    (scales, q)
+                };
+                let (k_scales, k_q) = tensor(0);
+                let (v_scales, v_q) = tensor(1);
+                quant::dequantize_q4(&quant::Q4Chunk {
+                    config_id: word(2),
+                    n_layers: word(3),
+                    n_kv_heads: word(4),
+                    seq_len: word(5),
+                    head_dim: word(6),
+                    k_scales,
+                    v_scales,
+                    k_q,
+                    v_q,
+                })
             }
         };
-        Ok(KvChunk {
-            config_id: word(2),
-            n_layers: word(3),
-            n_kv_heads: word(4),
-            seq_len: word(5),
-            head_dim: word(6),
-            k: floats(0),
-            v: floats(1),
-        })
+        Ok((chunk, format))
+    }
+
+    fn decode(data: &[u8]) -> Result<KvChunk> {
+        Self::decode_versioned(data).map(|(chunk, _)| chunk)
+    }
+
+    /// Modeled q4→f32 dequant seconds a freshly read record owes: the
+    /// v4 payload priced through
+    /// [`crate::hwsim::profiles::q4_dequant_secs`], 0 for the flat
+    /// formats (their decode is part of the ordinary load path).
+    fn q4_decode_price(format: KvFormat, file_len: usize) -> f64 {
+        match format {
+            KvFormat::V4 => {
+                crate::hwsim::profiles::q4_dequant_secs((file_len - HEADER_BYTES) as f64)
+            }
+            _ => 0.0,
+        }
     }
 
     /// Invalidate `id` in every DRAM tier, **hot first**: the hot-side
@@ -932,34 +1095,57 @@ impl KvStore {
         Ok(loaded.pop().expect("load_many returns one Loaded per id"))
     }
 
-    /// Serve a warm-tier hit: dequantize, charge the modeled dequant
-    /// cost, and — when a hot tier exists — promote the f32 chunk back
-    /// into it (the q8 copy was already taken out of the warm tier, so
-    /// placement stays exclusive). `hot_gen` is the generation the hot
-    /// probe reported; a write/delete that raced the promote bounces off
-    /// the hot tier's guard exactly like a raced device read would.
+    /// Serve a warm-tier hit: dequantize the payload with whichever
+    /// codec it was packed with, charge the modeled dequant cost — the
+    /// q8 charge on `Loaded::dequant_secs`, the q4 charge on the
+    /// separate [`Loaded::q4_dequant_secs`] clock so fig JSONs can
+    /// attribute the deeper-compression trade — and, when a hot tier
+    /// exists, promote the f32 chunk back into it (the quantized copy
+    /// was already taken out of the warm tier, so placement stays
+    /// exclusive). `hot_gen` is the generation the hot probe reported; a
+    /// write/delete that raced the promote bounces off the hot tier's
+    /// guard exactly like a raced device read would.
     fn serve_warm_hit(
         &self,
         id: ChunkId,
-        q: &quant::QuantChunk,
+        payload: &super::warm::WarmPayload,
         file_bytes: usize,
         hot_gen: u64,
         shard: usize,
     ) -> Loaded {
-        let chunk = Arc::new(quant::dequantize(q));
-        let dequant_secs = q8_dequant_secs(q.q8_bytes() as f64);
+        let chunk = Arc::new(payload.dequantize());
+        let dequant_secs = payload.dequant_secs();
+        let is_q4 = payload.mode() == WarmMode::Q4;
         // The dequant pass crosses the shared host bus: same charge
         // magnitude, but concurrent promotions/demotions queue behind
         // each other and the wait lands in the tier's link telemetry.
-        let slot = self.bus.reserve_secs(dequant_secs, q.q8_bytes(), TrafficClass::Promotion);
+        let slot =
+            self.bus.reserve_secs(dequant_secs, payload.quantized_bytes(), TrafficClass::Promotion);
         if let Some(warm) = &self.warm {
-            warm.stats.add_dequant_secs(dequant_secs);
+            if is_q4 {
+                warm.stats.add_q4_dequant_secs(dequant_secs);
+            } else {
+                warm.stats.add_dequant_secs(dequant_secs);
+            }
             warm.stats.add_link_queued_secs(slot.queued_secs);
         }
         if let Some(hot) = &self.hot {
             hot.insert_at(id, chunk.clone(), file_bytes, hot_gen);
         }
-        Loaded::clean(chunk, 0.0, file_bytes, true, true, dequant_secs, 0.0, shard)
+        let mut l = Loaded::clean(
+            chunk,
+            0.0,
+            file_bytes,
+            true,
+            true,
+            if is_q4 { 0.0 } else { dequant_secs },
+            0.0,
+            shard,
+        );
+        if is_q4 {
+            l.q4_dequant_secs = dequant_secs;
+        }
+        l
     }
 
     /// Load many chunks concurrently. The lookup ladder per id is
@@ -1018,9 +1204,9 @@ impl KvStore {
                     // or a chunk oversize for the hot tier — it stays
                     // put and is touched MRU.
                     match warm.probe(id, self.hot.as_ref().map(|h| h.budget())) {
-                        WarmProbe::Hit { q, file_bytes, .. } => {
+                        WarmProbe::Hit { payload, file_bytes, .. } => {
                             return Slot::Hit(self.serve_warm_hit(
-                                id, &q, file_bytes, hot_gen, shard_idx,
+                                id, &payload, file_bytes, hot_gen, shard_idx,
                             ));
                         }
                         WarmProbe::Miss(g) => warm_gen = g,
@@ -1047,13 +1233,16 @@ impl KvStore {
                         let (data, device_secs) = read.wait()?;
                         self.stats.reads.fetch_add(1, Ordering::Relaxed);
                         self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
-                        let chunk = Arc::new(Self::decode(&data)?);
+                        let (chunk, fmt) = Self::decode_versioned(&data)?;
+                        let chunk = Arc::new(chunk);
                         let quant_secs =
                             self.admit_miss(id, &chunk, data.len(), hot_gen, warm_gen);
-                        out.push(Loaded::clean(
+                        let mut l = Loaded::clean(
                             chunk, device_secs, data.len(), false, false, 0.0, quant_secs,
                             shard_idx,
-                        ));
+                        );
+                        l.q4_dequant_secs = Self::q4_decode_price(fmt, data.len());
+                        out.push(l);
                     } else {
                         out.push(self.recover_miss(id, hot_gen, warm_gen, shard_idx, read)?);
                     }
@@ -1137,8 +1326,8 @@ impl KvStore {
                 Ok((data, device_secs)) => {
                     self.stats.reads.fetch_add(1, Ordering::Relaxed);
                     self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
-                    match Self::decode(&data) {
-                        Ok(chunk) => {
+                    match Self::decode_versioned(&data) {
+                        Ok((chunk, fmt)) => {
                             let chunk = Arc::new(chunk);
                             let quant_secs =
                                 self.admit_miss(id, &chunk, data.len(), hot_gen, warm_gen);
@@ -1146,6 +1335,7 @@ impl KvStore {
                                 chunk, device_secs, data.len(), false, false, 0.0, quant_secs,
                                 shard_idx,
                             );
+                            l.q4_dequant_secs = Self::q4_decode_price(fmt, data.len());
                             l.retries = retries;
                             l.retry_backoff_secs = backoff_spent;
                             l.checksum_failures = checksum_failures;
@@ -1184,10 +1374,10 @@ impl KvStore {
         }
         if let Some(warm) = &self.warm {
             let hot_gen = self.hot.as_ref().map(|h| h.generation(id)).unwrap_or(0);
-            if let WarmProbe::Hit { q, file_bytes, .. } =
+            if let WarmProbe::Hit { payload, file_bytes, .. } =
                 warm.probe(id, self.hot.as_ref().map(|h| h.budget()))
             {
-                let mut l = self.serve_warm_hit(id, &q, file_bytes, hot_gen, shard_idx);
+                let mut l = self.serve_warm_hit(id, &payload, file_bytes, hot_gen, shard_idx);
                 l.retries = retries;
                 l.retry_backoff_secs = backoff_spent;
                 l.checksum_failures = checksum_failures;
@@ -1203,6 +1393,8 @@ impl KvStore {
                 let mut l = Loaded::clean(
                     chunk, 0.0, data.len(), false, false, 0.0, quant_secs, shard_idx,
                 );
+                // No q4 price on the recompute rung: the chunk is modeled
+                // as re-prefilled on device, not unpacked from flash.
                 l.retries = retries;
                 l.retry_backoff_secs = backoff_spent;
                 l.checksum_failures = checksum_failures;
@@ -1602,6 +1794,165 @@ mod tests {
         data[28] ^= 0x40; // corrupt the stored checksum
         std::fs::write(&path, &data).unwrap();
         assert!(s.load(9).is_err());
+    }
+
+    // --- v4 / q4 cool path ----------------------------------------------
+
+    #[test]
+    fn v4_files_quarter_of_v1_and_half_of_v3() {
+        let c = chunk(1, 32);
+        let v1 = KvStore::encode(&c, KvFormat::V1).len();
+        let v3 = KvStore::encode(&c, KvFormat::V3).len();
+        let v4 = KvStore::encode(&c, KvFormat::V4).len();
+        assert_eq!(v4, c.file_bytes(KvFormat::V4));
+        assert!((v4 as f64) < 0.3 * v1 as f64, "v4/v1 = {}", v4 as f64 / v1 as f64);
+        assert!((v4 as f64) < 0.6 * v3 as f64, "v4/v3 = {}", v4 as f64 / v3 as f64);
+    }
+
+    #[test]
+    fn v4_roundtrip_and_checksum_detects_corruption() {
+        let (_d, mut s) = store();
+        s.set_format(KvFormat::V4);
+        // constant planes at multiples of 127 are on the q4 grid
+        // (q = ±7), so the round trip is exact
+        let c = flat_chunk(254.0, 16);
+        s.store_sync(9, &c).unwrap();
+        assert_eq!(*s.load(9).unwrap().chunk, c);
+        // v4 carries the v3 FNV-1a checksum: a payload bit flip that
+        // the size check can't see must still be rejected
+        let path = s.path_of(9);
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = HEADER_BYTES + (data.len() - HEADER_BYTES) / 2;
+        data[mid] ^= 1;
+        std::fs::write(&path, &data).unwrap();
+        let err = s.load(9).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn v1_v2_v3_files_still_load_under_v4_writer() {
+        // One directory, four formats: a store switched to v4 writes
+        // must keep decoding every older record transparently.
+        let (_d, mut s) = store();
+        s.set_format(KvFormat::V1);
+        s.store_sync(1, &chunk(1, 8)).unwrap();
+        s.set_format(KvFormat::V2);
+        s.store_sync(2, &chunk(2, 8)).unwrap();
+        s.set_format(KvFormat::V3);
+        s.store_sync(3, &chunk(3, 8)).unwrap();
+        s.set_format(KvFormat::V4);
+        s.store_sync(4, &flat_chunk(127.0, 8)).unwrap();
+        assert_eq!(*s.load(1).unwrap().chunk, chunk(1, 8));
+        assert_eq!(*s.load(2).unwrap().chunk, chunk(2, 8));
+        assert_eq!(*s.load(3).unwrap().chunk, chunk(3, 8));
+        assert_eq!(*s.load(4).unwrap().chunk, flat_chunk(127.0, 8));
+        // only the v4 record pays the modeled q4 unpack
+        assert_eq!(s.load(3).unwrap().q4_dequant_secs, 0.0);
+        assert!(s.load(4).unwrap().q4_dequant_secs > 0.0);
+    }
+
+    #[test]
+    fn future_format_version_names_the_newer_writer() {
+        // A hand-built v9 header must produce the "newer writer"
+        // diagnosis, not a generic decode bail: the operator's fix
+        // (upgrade, or re-materialize) is different from corruption's.
+        let (_d, s) = store();
+        let mut buf = Vec::new();
+        for word in [MAGIC, 9u32, 0xabcd, 2, 2, 8, 4, 0] {
+            buf.extend_from_slice(&word.to_le_bytes());
+        }
+        std::fs::write(s.path_of(77), &buf).unwrap();
+        let err = s.load(77).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("format 9 from a newer writer"), "{msg}");
+        assert!(msg.contains("up to v4"), "{msg}");
+    }
+
+    #[test]
+    fn v4_load_prices_smaller_read_and_charges_dequant() {
+        // The tentpole's trade, end to end at the store: the same chunk
+        // served from a v4 file moves strictly fewer device bytes (and
+        // seconds) than from v3, and pays a nonzero modeled q4 dequant
+        // on every flash load — priced, not free. A hot-tier hit
+        // afterwards pays neither.
+        let c = flat_chunk(127.0, 64);
+        let dir3 = crate::util::tempdir::TempDir::new("matkv-cool-v3").unwrap();
+        let mut s3 = KvStore::open(dir3.path(), StorageProfile::ssd_9100pro()).unwrap();
+        s3.disable_throttle();
+        s3.store_sync(1, &c).unwrap();
+        let l3 = s3.load(1).unwrap();
+
+        let dir4 = crate::util::tempdir::TempDir::new("matkv-cool-v4").unwrap();
+        let mut s4 = KvStore::open(dir4.path(), StorageProfile::ssd_9100pro()).unwrap();
+        s4.disable_throttle();
+        s4.set_format(KvFormat::V4);
+        s4.set_hot_tier(64 << 20);
+        s4.store_sync(1, &c).unwrap();
+        let l4 = s4.load(1).unwrap();
+
+        assert!(l4.file_bytes < l3.file_bytes, "{} !< {}", l4.file_bytes, l3.file_bytes);
+        assert!(l4.device_secs < l3.device_secs, "{} !< {}", l4.device_secs, l3.device_secs);
+        assert!(l4.q4_dequant_secs > 0.0, "v4 flash load must charge the unpack");
+        assert_eq!(l3.q4_dequant_secs, 0.0, "v3 loads must not");
+        assert_eq!(*l4.chunk, c);
+        let hit = s4.load(1).unwrap();
+        assert!(hit.from_cache);
+        assert_eq!(hit.q4_dequant_secs, 0.0, "hot hits are unpacked already");
+    }
+
+    #[test]
+    fn q4_warm_demote_promote_preserves_prefetch_semantics() {
+        // Satellite: the demote→promote cycle of the q8 suite, run
+        // through a q4-mode warm tier — protection semantics identical,
+        // costs on the q4 clock.
+        let (_d, s) = warm_store(f32_cost(), 64 << 20);
+        s.set_warm_mode(WarmMode::Q4);
+        for i in 1..=3u64 {
+            s.store_sync(i, &flat_chunk(127.0 * i as f32, 8)).unwrap();
+        }
+        assert_eq!(s.prefetch_many(&[1]).warmed, 1);
+        assert_eq!(s.prefetch_many(&[2]).warmed, 1); // evicts prefetched 1 → warm (q4)
+        let warm = s.warm_tier().unwrap();
+        assert!(warm.contains(1), "prefetched eviction demotes like any other");
+        assert!(warm.stats.q4_quant_secs() > 0.0, "q4 demotion must charge the q4 clock");
+        assert_eq!(warm.stats.quant_secs(), 0.0);
+
+        // demand load of 1: a q4 warm hit that still counts as a
+        // prefetch conversion, promotes as a demand entry, and carries
+        // its dequant charge on Loaded.q4_dequant_secs
+        let l = s.load(1).unwrap();
+        assert!(l.from_warm);
+        assert_eq!(*l.chunk, flat_chunk(127.0, 8), "on-grid planes survive q4 exactly");
+        assert!(l.q4_dequant_secs > 0.0);
+        assert_eq!(l.dequant_secs, 0.0, "q4 hits must not bill the q8 clock");
+        assert_eq!(warm.stats.prefetch_hits.load(Ordering::Relaxed), 1);
+        assert!(s.hot_tier().unwrap().contains(1));
+
+        // as a demand resident, 1 is protected from prefetch eviction —
+        // the refused prefetch parks in the (q4) warm tier instead
+        let rep = s.prefetch_many(&[3]);
+        assert_eq!(rep.warmed, 1, "refused hot admission must park in warm: {rep:?}");
+        assert_eq!(rep.rejected, 0);
+        assert!(s.hot_tier().unwrap().contains(1));
+        assert!(warm.contains(3));
+    }
+
+    #[test]
+    fn store_knobs_reach_the_tiers() {
+        let (_d, s) = warm_store(f32_cost(), 64 << 20);
+        assert_eq!(s.warm_tier().unwrap().mode(), WarmMode::Q8);
+        s.set_warm_mode(WarmMode::Q4);
+        assert_eq!(s.warm_tier().unwrap().mode(), WarmMode::Q4);
+        assert_eq!(s.hot_tier().unwrap().admission(), super::super::cache::AdmissionPolicy::Lru);
+        s.set_admission(super::super::cache::AdmissionPolicy::TinyLfu);
+        assert_eq!(
+            s.hot_tier().unwrap().admission(),
+            super::super::cache::AdmissionPolicy::TinyLfu
+        );
+        // both knobs are no-ops on stores without the tier
+        let (_d2, plain) = store();
+        plain.set_warm_mode(WarmMode::Q4);
+        plain.set_admission(super::super::cache::AdmissionPolicy::TinyLfu);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The DRAM **warm tier**: a byte-budgeted LRU of q8-quantized chunks
+//! The DRAM **warm tier**: a byte-budgeted LRU of quantized chunks
 //! between the f32 hot tier and the simulated flash.
 //!
 //! MatKV's core trade — recompute vs. storage — recurs *inside* DRAM: a
@@ -10,6 +10,15 @@
 //! (charged a modeled cost, [`crate::hwsim::profiles::q8_dequant_secs`])
 //! and serves planes with bounded quantization error (measured by the
 //! table-VI fidelity harness, `benches/fig_warm_tier.rs`).
+//!
+//! The codec is selectable ([`WarmMode`], `--warm-mode q8|q4`): q4 mode
+//! packs ~8x fewer resident bytes than f32 — twice the reach of q8 per
+//! DRAM dollar — at a coarser error bound (max|plane|/14 vs /254) and a
+//! slower modeled dequant pass per payload byte
+//! ([`crate::hwsim::profiles::q4_dequant_secs`]). The mode picks the
+//! codec for *future* admissions; entries already resident keep the
+//! codec they were quantized with ([`WarmPayload`] carries it per
+//! entry), so a mid-run switch never reinterprets parked bytes.
 //!
 //! Placement in the hierarchy is **exclusive**: chunks enter the warm
 //! tier by *demotion* — the hot tier's budget evictions land here via
@@ -32,20 +41,106 @@
 //! [`DemoteSink`]: super::cache::DemoteSink
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::cache::{CacheStats, DemoteSink, TierKind};
-use super::quant::{self, QuantChunk};
+use super::quant::{self, Q4Chunk, QuantChunk};
 use super::store::KvChunk;
 use crate::hwsim::{Link, TrafficClass};
 use crate::vectordb::ChunkId;
 
+/// Which codec the warm tier quantizes *new* admissions with
+/// (`--warm-mode q8|q4`). Resident entries keep their own codec.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum WarmMode {
+    /// ~4x fewer resident bytes than f32; error ≤ max|plane|/254.
+    #[default]
+    Q8,
+    /// ~8x fewer resident bytes than f32; error ≤ max|plane|/14 and a
+    /// slower modeled dequant per payload byte — the cool-path dial
+    /// turned one level further.
+    Q4,
+}
+
+impl WarmMode {
+    /// CLI / report label (`"q8"` / `"q4"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            WarmMode::Q8 => "q8",
+            WarmMode::Q4 => "q4",
+        }
+    }
+}
+
+/// A resident warm entry's quantized planes, tagged with the codec that
+/// produced them. Cloning is cheap (`Arc` payloads).
+#[derive(Clone)]
+pub enum WarmPayload {
+    Q8(Arc<QuantChunk>),
+    Q4(Arc<Q4Chunk>),
+}
+
+impl WarmPayload {
+    /// Which codec these planes are packed with.
+    pub fn mode(&self) -> WarmMode {
+        match self {
+            WarmPayload::Q8(_) => WarmMode::Q8,
+            WarmPayload::Q4(_) => WarmMode::Q4,
+        }
+    }
+
+    /// Resident DRAM bytes charged against the tier budget.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            WarmPayload::Q8(q) => q.dram_bytes(),
+            WarmPayload::Q4(q) => q.dram_bytes(),
+        }
+    }
+
+    /// Packed payload bytes (scales + quantized planes) — what a
+    /// promote's dequant pass moves across the host bus, and the byte
+    /// count its modeled cost is priced on.
+    pub fn quantized_bytes(&self) -> usize {
+        match self {
+            WarmPayload::Q8(q) => q.q8_bytes(),
+            WarmPayload::Q4(q) => q.q4_bytes(),
+        }
+    }
+
+    /// DRAM footprint of the reconstructed f32 chunk (the promote-to-hot
+    /// admission cost).
+    pub fn f32_dram_bytes(&self) -> usize {
+        match self {
+            WarmPayload::Q8(q) => q.f32_dram_bytes(),
+            WarmPayload::Q4(q) => q.f32_dram_bytes(),
+        }
+    }
+
+    /// Reconstruct the f32 chunk (the real compute a hit performs).
+    pub fn dequantize(&self) -> KvChunk {
+        match self {
+            WarmPayload::Q8(q) => quant::dequantize(q),
+            WarmPayload::Q4(q) => quant::dequantize_q4(q),
+        }
+    }
+
+    /// Modeled seconds a hit on this payload pays to dequantize it —
+    /// priced per *payload* byte by the matching profile constant, so
+    /// the q4 codec's fewer bytes and slower per-byte unpack both show.
+    pub fn dequant_secs(&self) -> f64 {
+        match self {
+            WarmPayload::Q8(q) => crate::hwsim::profiles::q8_dequant_secs(q.q8_bytes() as f64),
+            WarmPayload::Q4(q) => crate::hwsim::profiles::q4_dequant_secs(q.q4_bytes() as f64),
+        }
+    }
+}
+
 struct WarmEntry {
-    q: Arc<QuantChunk>,
+    payload: WarmPayload,
     /// Size of the backing flash file (what a hit avoids reading).
     file_bytes: usize,
-    /// Resident q8 bytes charged against the budget.
+    /// Resident quantized bytes charged against the budget.
     cost: usize,
     /// Recency stamp; key into `WarmLru::order`.
     tick: u64,
@@ -69,16 +164,17 @@ struct WarmLru {
 
 /// Outcome of a [`WarmTier::probe`].
 pub enum WarmProbe {
-    /// Resident: the q8 chunk, the flash bytes the hit avoided, and
-    /// whether the entry was admitted by a prefetch and never read.
-    Hit { q: Arc<QuantChunk>, file_bytes: usize, prefetched: bool },
+    /// Resident: the quantized planes (codec-tagged), the flash bytes
+    /// the hit avoided, and whether the entry was admitted by a
+    /// prefetch and never read.
+    Hit { payload: WarmPayload, file_bytes: usize, prefetched: bool },
     /// Not resident: the id's current invalidation generation (to pass
     /// back to [`WarmTier::admit`] after a device read).
     Miss(u64),
 }
 
-/// The q8 warm tier: an LRU map `ChunkId → Arc<QuantChunk>` holding at
-/// most `budget` resident bytes. Unlike the hot tier there are no
+/// The quantized warm tier: an LRU map `ChunkId → WarmPayload` holding
+/// at most `budget` resident bytes. Unlike the hot tier there are no
 /// protection classes — the warm tier is a victim cache, and everything
 /// in it is already one demotion away from free.
 pub struct WarmTier {
@@ -88,6 +184,9 @@ pub struct WarmTier {
     /// the tier ([`TrafficClass::Demotion`]); `None` (standalone tiers,
     /// unit tests) keeps the pre-interconnect accounting exactly.
     bus: Option<Arc<Link>>,
+    /// Codec for future admissions ([`WarmMode`]); atomic so the
+    /// `--warm-mode` knob works after the tier is shared via `Arc`.
+    q4_mode: AtomicBool,
     pub stats: CacheStats,
 }
 
@@ -97,7 +196,23 @@ impl WarmTier {
             budget: budget_bytes,
             lru: Mutex::new(WarmLru::default()),
             bus: None,
+            q4_mode: AtomicBool::new(false),
             stats: CacheStats::for_tier(TierKind::Warm),
+        }
+    }
+
+    /// Select the codec for future admissions (`--warm-mode q8|q4`).
+    /// Entries already resident keep the codec they were packed with.
+    pub fn set_mode(&self, mode: WarmMode) {
+        self.q4_mode.store(mode == WarmMode::Q4, Ordering::Relaxed);
+    }
+
+    /// The codec new admissions will be quantized with.
+    pub fn mode(&self) -> WarmMode {
+        if self.q4_mode.load(Ordering::Relaxed) {
+            WarmMode::Q4
+        } else {
+            WarmMode::Q8
         }
     }
 
@@ -189,7 +304,7 @@ impl WarmTier {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
             return WarmProbe::Miss(gen);
         };
-        let take = promote_budget.is_some_and(|b| entry.q.f32_dram_bytes() <= b);
+        let take = promote_budget.is_some_and(|b| entry.payload.f32_dram_bytes() <= b);
         self.stats.hits.fetch_add(1, Ordering::Relaxed);
         if take {
             let e = lru.map.remove(&id).expect("presence checked");
@@ -199,32 +314,34 @@ impl WarmTier {
             if e.prefetched {
                 self.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
             }
-            WarmProbe::Hit { q: e.q, file_bytes: e.file_bytes, prefetched: e.prefetched }
+            WarmProbe::Hit { payload: e.payload, file_bytes: e.file_bytes, prefetched: e.prefetched }
         } else {
             lru.clock += 1;
             let tick = lru.clock;
             let e = lru.map.get_mut(&id).expect("presence checked");
             let old_tick = std::mem::replace(&mut e.tick, tick);
             let was_prefetched = std::mem::take(&mut e.prefetched);
-            let (q, file_bytes) = (e.q.clone(), e.file_bytes);
+            let (payload, file_bytes) = (e.payload.clone(), e.file_bytes);
             lru.order.remove(&old_tick);
             lru.order.insert(tick, id);
             self.stats.bytes_saved.fetch_add(file_bytes as u64, Ordering::Relaxed);
             if was_prefetched {
                 self.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
             }
-            WarmProbe::Hit { q, file_bytes, prefetched: was_prefetched }
+            WarmProbe::Hit { payload, file_bytes, prefetched: was_prefetched }
         }
     }
 
-    /// Quantize `chunk`, charge the modeled quantize pass
-    /// ([`crate::hwsim::profiles::q8_quant_secs`], symmetric to the
-    /// dequant a later hit pays) to this tier's clock, and admit the q8
-    /// copy (gen-guarded like [`WarmTier::admit`]). The **one entry
-    /// point** for f32 chunks entering the tier — demotions, direct
-    /// admissions on the load path, and prefetch parks — so the cost
-    /// accounting can never diverge between them. Returns whether `id`
-    /// is resident after the call, plus the charged quantize seconds.
+    /// Quantize `chunk` with the current [`WarmMode`] codec, charge the
+    /// modeled quantize pass (symmetric to the dequant a later hit
+    /// pays) to this tier's clock, and admit the quantized copy
+    /// (gen-guarded like [`WarmTier::admit`]). The **one entry point**
+    /// for f32 chunks entering the tier — demotions, direct admissions
+    /// on the load path, and prefetch parks — so the cost accounting
+    /// can never diverge between them. Returns whether `id` is resident
+    /// after the call, plus the charged quantize seconds. The q8 charge
+    /// lands on the tier's `quant` clock, the q4 charge on its separate
+    /// `q4_quant` clock, so fig JSONs can attribute each codec's cost.
     pub fn quantize_admit(
         &self,
         id: ChunkId,
@@ -233,14 +350,27 @@ impl WarmTier {
         prefetched: bool,
         seen_gen: u64,
     ) -> (bool, f64) {
-        let q = Arc::new(quant::quantize(chunk));
-        let quant_secs = crate::hwsim::profiles::q8_quant_secs(q.q8_bytes() as f64);
-        self.stats.add_quant_secs(quant_secs);
+        let (payload, payload_bytes, quant_secs) = match self.mode() {
+            WarmMode::Q8 => {
+                let q = Arc::new(quant::quantize(chunk));
+                let bytes = q.q8_bytes();
+                let secs = crate::hwsim::profiles::q8_quant_secs(bytes as f64);
+                self.stats.add_quant_secs(secs);
+                (WarmPayload::Q8(q), bytes, secs)
+            }
+            WarmMode::Q4 => {
+                let q = Arc::new(quant::quantize_q4(chunk));
+                let bytes = q.q4_bytes();
+                let secs = crate::hwsim::profiles::q4_quant_secs(bytes as f64);
+                self.stats.add_q4_quant_secs(secs);
+                (WarmPayload::Q4(q), bytes, secs)
+            }
+        };
         if let Some(bus) = &self.bus {
-            let slot = bus.reserve_secs(quant_secs, q.q8_bytes(), TrafficClass::Demotion);
+            let slot = bus.reserve_secs(quant_secs, payload_bytes, TrafficClass::Demotion);
             self.stats.add_link_queued_secs(slot.queued_secs);
         }
-        let admitted = self.admit(id, q, file_bytes, prefetched, seen_gen);
+        let admitted = self.admit(id, payload, file_bytes, prefetched, seen_gen);
         (admitted, quant_secs)
     }
 
@@ -258,12 +388,12 @@ impl WarmTier {
     pub fn admit(
         &self,
         id: ChunkId,
-        q: Arc<QuantChunk>,
+        payload: WarmPayload,
         file_bytes: usize,
         prefetched: bool,
         seen_gen: u64,
     ) -> bool {
-        let cost = q.dram_bytes();
+        let cost = payload.resident_bytes();
         if cost > self.budget {
             if prefetched {
                 self.stats.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
@@ -285,7 +415,7 @@ impl WarmTier {
             lru.bytes -= old.cost;
         }
         lru.bytes += cost;
-        lru.map.insert(id, WarmEntry { q, file_bytes, cost, tick, prefetched });
+        lru.map.insert(id, WarmEntry { payload, file_bytes, cost, tick, prefetched });
         lru.order.insert(tick, id);
         self.stats.insertions.fetch_add(1, Ordering::Relaxed);
         if prefetched {
@@ -335,7 +465,7 @@ impl DemoteSink for WarmTier {
 mod tests {
     use super::*;
 
-    fn qchunk(seed: u32) -> Arc<QuantChunk> {
+    fn qchunk(seed: u32) -> WarmPayload {
         let plane = 2 * 2 * 8 * 4;
         let c = KvChunk {
             config_id: 1,
@@ -346,11 +476,11 @@ mod tests {
             k: (0..plane).map(|i| (i + seed as usize) as f32).collect(),
             v: (0..plane).map(|i| -((i + seed as usize) as f32)).collect(),
         };
-        Arc::new(quant::quantize(&c))
+        WarmPayload::Q8(Arc::new(quant::quantize(&c)))
     }
 
     fn cost() -> usize {
-        qchunk(0).dram_bytes()
+        qchunk(0).resident_bytes()
     }
 
     /// Admit with a freshly captured generation (the common happy path).
@@ -493,12 +623,83 @@ mod tests {
         let quant = tier.stats.quant_secs();
         assert!(quant > 0.0, "demotion must charge the quantize pass");
         match tier.probe(7, Some(usize::MAX)) {
-            WarmProbe::Hit { q, file_bytes, .. } => {
+            WarmProbe::Hit { payload, file_bytes, .. } => {
                 assert_eq!(file_bytes, 512);
-                let back = quant::dequantize(&q);
+                assert_eq!(payload.mode(), WarmMode::Q8, "default mode must stay q8");
+                let back = payload.dequantize();
                 assert_eq!(back.k, chunk.k);
                 assert_eq!(back.v, chunk.v);
             }
+            WarmProbe::Miss(_) => panic!(),
+        }
+    }
+
+    #[test]
+    fn q4_mode_packs_tighter_and_charges_its_own_clock() {
+        let tier = WarmTier::new(64 << 20);
+        assert_eq!(tier.mode(), WarmMode::Q8);
+        tier.set_mode(WarmMode::Q4);
+        assert_eq!(tier.mode(), WarmMode::Q4);
+        // constant planes quantize exactly in q4 too (q = ±7 on grid)
+        let chunk = kvchunk(127.0);
+        tier.demote(7, &chunk, 512, false, tier.prepare(7));
+        assert!(tier.contains(7));
+        // the quantize pass lands on the q4 clock, not the q8 one
+        assert!(tier.stats.q4_quant_secs() > 0.0, "q4 admission must charge the q4 quant clock");
+        assert_eq!(tier.stats.quant_secs(), 0.0);
+        match tier.probe(7, Some(usize::MAX)) {
+            WarmProbe::Hit { payload, file_bytes, .. } => {
+                assert_eq!(file_bytes, 512);
+                assert_eq!(payload.mode(), WarmMode::Q4);
+                assert!(payload.dequant_secs() > 0.0);
+                let back = payload.dequantize();
+                assert_eq!(back.k, chunk.k);
+                assert_eq!(back.v, chunk.v);
+            }
+            WarmProbe::Miss(_) => panic!(),
+        }
+    }
+
+    #[test]
+    fn q4_mode_halves_residency_versus_q8() {
+        // Equal chunks, both codecs: the q4 copy must charge roughly
+        // half the q8 copy's resident bytes against the budget — the
+        // whole point of the cooler rung. Planes big enough that
+        // struct-header overhead doesn't blur the ratio.
+        let plane = 2 * 2 * 128 * 4;
+        let chunk = KvChunk {
+            config_id: 1,
+            n_layers: 2,
+            n_kv_heads: 2,
+            seq_len: 128,
+            head_dim: 4,
+            k: vec![127.0; plane],
+            v: vec![-254.0; plane],
+        };
+        let q8 = WarmPayload::Q8(Arc::new(quant::quantize(&chunk)));
+        let q4 = WarmPayload::Q4(Arc::new(quant::quantize_q4(&chunk)));
+        assert!(
+            (q4.resident_bytes() as f64) < 0.6 * q8.resident_bytes() as f64,
+            "q4 residency {} not about half of q8's {}",
+            q4.resident_bytes(),
+            q8.resident_bytes()
+        );
+        assert_eq!(q4.f32_dram_bytes(), q8.f32_dram_bytes());
+    }
+
+    #[test]
+    fn mode_switch_leaves_resident_entries_on_their_codec() {
+        let tier = WarmTier::new(64 << 20);
+        let chunk = kvchunk(127.0);
+        tier.demote(1, &chunk, 100, false, tier.prepare(1));
+        tier.set_mode(WarmMode::Q4);
+        tier.demote(2, &chunk, 100, false, tier.prepare(2));
+        match tier.probe(1, None) {
+            WarmProbe::Hit { payload, .. } => assert_eq!(payload.mode(), WarmMode::Q8),
+            WarmProbe::Miss(_) => panic!(),
+        }
+        match tier.probe(2, None) {
+            WarmProbe::Hit { payload, .. } => assert_eq!(payload.mode(), WarmMode::Q4),
             WarmProbe::Miss(_) => panic!(),
         }
     }

@@ -15,7 +15,7 @@ use matkv::coordinator::{
 };
 use matkv::hwsim::economics::fig1_trend;
 use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
-use matkv::kvstore::{KvFormat, KvStore};
+use matkv::kvstore::{AdmissionPolicy, KvFormat, KvStore, WarmMode};
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
 use matkv::workload::{ArrivalGen, Corpus, RequestGen, TurboRagProfile};
@@ -26,11 +26,23 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                --doc-tokens N --mode matkv|vanilla|cacheblend --overlap
                --storage 9100pro|raid0|pm9a3|dram --kv-dir PATH
                --hot-tier-bytes N (DRAM hot tier in front of flash, 0=off)
-               --warm-tier-bytes N (q8 warm tier behind the hot tier:
+               --warm-tier-bytes N (quantized warm tier behind the hot tier:
                            evictions demote, hits dequantize+promote, 0=off)
-               --kv-format v1|v2|v3 (on-disk KV planes: f32|f16|f16+checksum;
-                           default v3 — v3 verifies a per-chunk payload
-                           checksum on every read, same bytes as v2)
+               --warm-mode q8|q4 (warm-tier codec: q8 [default], or q4 —
+                           ~8x fewer resident bytes than f32, priced at
+                           its own modeled dequant rate; requires
+                           --warm-tier-bytes)
+               --admission lru|tinylfu (hot-tier admission: plain LRU
+                           [default], or TinyLFU — a frequency sketch
+                           gates evicting admissions so one sequential
+                           scan cannot flush the resident set; requires
+                           --hot-tier-bytes)
+               --kv-format v1|v2|v3|v4 (on-disk KV planes:
+                           f32|f16|f16+checksum|q4+checksum; default v3 —
+                           v3/v4 verify a per-chunk payload checksum on
+                           every read; v4 stores q4 planes, ~4x fewer
+                           flash bytes than v1 and half of v2/v3, and
+                           charges a modeled dequant on every load)
                --shards N (JBOD of N independent simulated devices, default 1)
                --faults SPEC (deterministic fault plan, e.g.
                            seed=7,shard0:die@2,worker1:crash@0.5 —
@@ -182,7 +194,28 @@ fn serve(args: &Args) -> Result<()> {
         "v1" => kv.set_format(KvFormat::V1),
         "v2" => kv.set_format(KvFormat::V2),
         "v3" => kv.set_format(KvFormat::V3),
+        "v4" => kv.set_format(KvFormat::V4),
         other => anyhow::bail!("unknown kv format {other}"),
+    }
+    match args.str("warm-mode", "q8").as_str() {
+        "q8" => kv.set_warm_mode(WarmMode::Q8),
+        "q4" => {
+            if args.usize("warm-tier-bytes", 0) == 0 {
+                anyhow::bail!("--warm-mode picks the warm-tier codec; it requires --warm-tier-bytes");
+            }
+            kv.set_warm_mode(WarmMode::Q4);
+        }
+        other => anyhow::bail!("--warm-mode takes q8|q4, got {other}"),
+    }
+    match args.str("admission", "lru").as_str() {
+        "lru" => kv.set_admission(AdmissionPolicy::Lru),
+        "tinylfu" => {
+            if args.usize("hot-tier-bytes", 0) == 0 {
+                anyhow::bail!("--admission gates the hot tier; it requires --hot-tier-bytes");
+            }
+            kv.set_admission(AdmissionPolicy::TinyLfu);
+        }
+        other => anyhow::bail!("--admission takes lru|tinylfu, got {other}"),
     }
     if let Some(plan) = &faults {
         kv.set_faults(Some(plan.clone()));
@@ -357,22 +390,28 @@ fn serve(args: &Args) -> Result<()> {
     );
     if let Some(tier) = engine.kv.hot_tier() {
         const MIB: f64 = (1 << 20) as f64;
+        use std::sync::atomic::Ordering::Relaxed;
         println!(
-            "hot tier ({:.0} MiB budget): {} hits / {} misses ({:.0}% hit), {:.1} MiB resident, {:.1} MiB device reads saved",
+            "hot tier ({}, {:.0} MiB budget): {} hits / {} misses ({:.0}% hit), {:.1} MiB resident, \
+             {:.1} MiB device reads saved, {} admissions gated off",
+            tier.admission().label(),
             tier.budget() as f64 / MIB,
-            tier.stats.hits.load(std::sync::atomic::Ordering::Relaxed),
-            tier.stats.misses.load(std::sync::atomic::Ordering::Relaxed),
+            tier.stats.hits.load(Relaxed),
+            tier.stats.misses.load(Relaxed),
             100.0 * tier.stats.hit_ratio(),
             tier.bytes() as f64 / MIB,
-            tier.stats.bytes_saved.load(std::sync::atomic::Ordering::Relaxed) as f64 / MIB,
+            tier.stats.bytes_saved.load(Relaxed) as f64 / MIB,
+            tier.stats.admission_rejected.load(Relaxed),
         );
     }
     if let Some(tier) = engine.kv.warm_tier() {
         const MIB: f64 = (1 << 20) as f64;
         use std::sync::atomic::Ordering::Relaxed;
         println!(
-            "warm tier (q8, {:.0} MiB budget): {} hits / {} misses ({:.0}% hit), \
-             {:.1} MiB resident, {:.1} MiB device reads saved, dequant {:.3}s, quant {:.3}s",
+            "warm tier ({}, {:.0} MiB budget): {} hits / {} misses ({:.0}% hit), \
+             {:.1} MiB resident, {:.1} MiB device reads saved, dequant {:.3}s (q4 {:.3}s), \
+             quant {:.3}s (q4 {:.3}s)",
+            tier.mode().label(),
             tier.budget() as f64 / MIB,
             tier.stats.hits.load(Relaxed),
             tier.stats.misses.load(Relaxed),
@@ -380,7 +419,9 @@ fn serve(args: &Args) -> Result<()> {
             tier.bytes() as f64 / MIB,
             tier.stats.bytes_saved.load(Relaxed) as f64 / MIB,
             tier.stats.dequant_secs(),
+            tier.stats.q4_dequant_secs(),
             tier.stats.quant_secs(),
+            tier.stats.q4_quant_secs(),
         );
     }
     if engine.kv.n_shards() > 1 {
@@ -423,6 +464,11 @@ fn serve(args: &Args) -> Result<()> {
         metrics.decode_secs_on(&arch, &h100),
         metrics.total_secs_on(&arch, &h100, &storage)
     );
+    if metrics.q4_dequant_secs > 0.0 {
+        // The q4 trade is priced, not free: fewer flash bytes, but
+        // every v4 record / q4 warm hit pays its unpack on the load path.
+        println!("  of which q4 dequant: {:.4}s", metrics.q4_dequant_secs);
+    }
     if faults.is_some() {
         println!(
             "fault recovery (store): {} retries ({:.4}s backoff) | {} checksum failures | \
