@@ -1,0 +1,259 @@
+//! fig_trace — where did the p99 go? Critical-path attribution from
+//! the deterministic trace, at high offered load.
+//!
+//! The tracing subsystem (`matkv::trace`) records every dispatch
+//! window and link reservation on the virtual clock, and the fleet
+//! attributes each request's end-to-end latency to six components
+//! (queue / storage / bus / PCIe wire / compute / retry) that must sum
+//! back to the latency within epsilon. This bench drives the same
+//! transfer-dominant regime as `fig_bus` — large chunks, high top-k,
+//! 2-token outputs, one mixed fleet — at a single high offered rate,
+//! with PCIe contention on, and asks the trace the tail question
+//! directly: for the **worst-latency request**, which component
+//! dominates?
+//!
+//! Acceptance shape: under contention the answer must be the
+//! interconnect — time *queued* (on the H2D links or behind earlier
+//! batches the links delayed), not storage or compute (WARNING
+//! otherwise — CI asserts the attribution error and span counts via
+//! `trace_smoke.json`). Two independent traced dispatches of the same
+//! plan must export byte-identical files; the bench checks that here
+//! rather than trusting the unit tests alone.
+//!
+//! Pure-rust: golden manifest retrieval, stand-in architecture costs,
+//! virtual clock. `--smoke` shrinks everything; `--json PATH` writes
+//! the assertion document; `--trace PATH` writes the Perfetto file.
+
+use std::sync::Arc;
+
+use matkv::coordinator::engine::{EngineOptions, LoaderCtx, Retrieval};
+use matkv::coordinator::{
+    BatchPolicy, Fleet, FleetCostModel, FleetSpec, Routing, SchedOptions, SchedPolicy, Scheduler,
+};
+use matkv::hwsim::{ArchSpec, StorageProfile};
+use matkv::kvstore::KvStore;
+use matkv::manifest::Manifest;
+use matkv::trace::TraceBus;
+use matkv::util::bench::Table;
+use matkv::util::cli::Args;
+use matkv::util::tempdir::TempDir;
+use matkv::workload::{ArrivalGen, Corpus, TimedRequest, TurboRagProfile};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let smoke = args.flag("smoke");
+    let n_docs = args.usize("docs", if smoke { 32 } else { 64 });
+    let requests = args.usize("requests", if smoke { 48 } else { 160 });
+    let batch = args.usize("batch", 8);
+    let skew = args.f64("skew", 1.1);
+    let rate = args.f64("rate", 400.0);
+    let contention = match args.str("pcie-contention", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--pcie-contention takes on|off, got {other}"),
+    };
+    // The fig_bus transfer-dominant regime: the upload is the batch.
+    let chunk_tokens = 1024usize;
+    let top_k = 8usize;
+    let output_tokens = 2usize;
+    let fleet_spec = "h100:1,rtx4090:3";
+
+    let m = Manifest::load_or_golden()?;
+    let cfg = m.config("tiny")?.clone();
+    let corpus = Corpus::generate(n_docs, 64, n_docs, 42);
+
+    let retrieval = {
+        let opts = EngineOptions::for_config(&m, "tiny")?;
+        Arc::new(Retrieval::for_corpus(corpus.texts(), cfg.vocab as u32, opts.embed_dim))
+    };
+    {
+        let mut ix = retrieval.index.write().unwrap();
+        for d in &corpus.docs {
+            let (ids, _) = retrieval.tokenizer.encode_block(&d.text, chunk_tokens);
+            ix.insert(d.id, retrieval.embedder.embed(&ids));
+        }
+    }
+    let dir = TempDir::new("matkv-fig-trace")?;
+    let mut kv = KvStore::open_sharded(dir.path(), StorageProfile::ssd_9100pro(), 1)?;
+    kv.disable_throttle();
+    let kv = Arc::new(kv);
+
+    let model = FleetCostModel {
+        arch: ArchSpec::llama_70b(),
+        storage: StorageProfile::dram(),
+        chunk_tokens,
+        query_tokens: 20,
+        chunk_step: 256,
+    };
+    let spec = FleetSpec::parse(fleet_spec)?;
+    let estimator = Fleet::new(&spec, Routing::RoleAware, model.clone()).service_estimator();
+
+    eprintln!(
+        "[fig_trace] {requests} reqs Zipf({skew}) @ {rate}/s over {n_docs} docs, top-k {top_k}, \
+         {chunk_tokens}-token chunks, fleet {fleet_spec}, pcie {}",
+        if contention { "queued" } else { "flat" }
+    );
+
+    let trace_reqs: Vec<TimedRequest> = ArrivalGen::new(
+        TurboRagProfile { top_k, query_tokens: 20.0, output_tokens },
+        corpus.n_topics,
+        skew,
+        rate,
+        7,
+    )
+    .take(&corpus, requests);
+    let ctx = LoaderCtx {
+        retrieval: retrieval.clone(),
+        kv: kv.clone(),
+        cfg: cfg.clone(),
+        opts: EngineOptions::for_config(&m, "tiny")?,
+    };
+    let mut sched = Scheduler::new(
+        ctx,
+        SchedOptions {
+            batch: BatchPolicy { max_batch: batch, max_wait_secs: 0.05 },
+            policy: SchedPolicy::Fifo,
+            service_estimate_secs: 0.0,
+            estimator: Some(estimator.clone()),
+        },
+    );
+    let sched_bus = TraceBus::recording();
+    sched.set_trace(sched_bus.clone());
+    sched.enqueue_timed(trace_reqs);
+    let plan = sched.plan_with_retrieval();
+
+    // Same plan, two independently-traced dispatches: the exports must
+    // be byte-identical — the bench-level restatement of the unit test,
+    // over a real planned schedule.
+    let run = |bus: TraceBus| {
+        let mut fleet = Fleet::new(&spec, Routing::RoleAware, model.clone());
+        fleet.set_contention(contention);
+        fleet.set_trace(bus.clone());
+        let rep = fleet.dispatch(&plan.batches, &|_| true);
+        (rep, bus)
+    };
+    let (rep, bus) = run(TraceBus::recording());
+    let (_, bus2) = run(TraceBus::recording());
+    let export = bus.to_chrome_json();
+    let deterministic = export == bus2.to_chrome_json();
+    if !deterministic {
+        eprintln!(
+            "[fig_trace] WARNING: two traced dispatches of the same plan exported \
+             different bytes — the trace is not deterministic"
+        );
+    }
+
+    let paths = bus.paths();
+    let max_err = bus.max_attribution_err();
+    if paths.len() != rep.requests {
+        eprintln!(
+            "[fig_trace] WARNING: {} attribution records for {} requests",
+            paths.len(),
+            rep.requests
+        );
+    }
+    if max_err > 1e-6 {
+        eprintln!(
+            "[fig_trace] WARNING: attribution components miss end-to-end latency by \
+             {max_err:.3e}s (> 1e-6)"
+        );
+    }
+
+    let worst = paths
+        .iter()
+        .max_by(|a, b| a.latency_secs().total_cmp(&b.latency_secs()))
+        .expect("dispatch produced at least one request path");
+    let (dom_name, dom_secs) = worst.dominant();
+
+    // The waterfall: the worst request's latency, component by
+    // component, in path order.
+    let lat = worst.latency_secs();
+    let parts = [
+        ("queue", worst.queue_secs),
+        ("storage", worst.storage_secs),
+        ("bus", worst.bus_secs),
+        ("pcie", worst.pcie_secs),
+        ("compute", worst.compute_secs),
+        ("retry", worst.retry_secs),
+    ];
+    println!(
+        "worst request {} on {} — {:.1}ms arrival→done (attribution err {:.2e}s over {} paths):",
+        worst.request_id,
+        worst.worker,
+        lat * 1e3,
+        max_err,
+        paths.len(),
+    );
+    for (name, secs) in parts {
+        let width = if lat > 0.0 { (40.0 * secs / lat).round() as usize } else { 0 };
+        println!(
+            "  {name:8} {:>9.3}ms {:>5.1}% |{}",
+            secs * 1e3,
+            100.0 * secs / lat.max(1e-12),
+            "#".repeat(width.min(40)),
+        );
+    }
+    println!("  dominant: {dom_name} ({:.1}ms)", dom_secs * 1e3);
+
+    // Under contention the tail must be an interconnect story: the
+    // dominant component is time spent waiting on or behind the links
+    // (queue includes waiting for a worker whose links delayed earlier
+    // batches; bus is this request's own queued link seconds).
+    if contention && !matches!(dom_name, "queue" | "bus") {
+        eprintln!(
+            "[fig_trace] WARNING: with --pcie-contention on the worst request's \
+             dominant component is {dom_name}, not link queueing — the contention \
+             model is not shaping the tail"
+        );
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "p99 attribution — {fleet_spec}, role-aware, {rate:.0} req/s, pcie {}",
+            if contention { "queued" } else { "flat" }
+        ),
+        &["component", "worst req (ms)", "fleet mean (ms)", "share of worst"],
+    );
+    let n = paths.len().max(1) as f64;
+    let means = [
+        ("queue", paths.iter().map(|p| p.queue_secs).sum::<f64>() / n),
+        ("storage", paths.iter().map(|p| p.storage_secs).sum::<f64>() / n),
+        ("bus", paths.iter().map(|p| p.bus_secs).sum::<f64>() / n),
+        ("pcie", paths.iter().map(|p| p.pcie_secs).sum::<f64>() / n),
+        ("compute", paths.iter().map(|p| p.compute_secs).sum::<f64>() / n),
+        ("retry", paths.iter().map(|p| p.retry_secs).sum::<f64>() / n),
+    ];
+    for ((name, secs), (_, mean)) in parts.iter().zip(&means) {
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", secs * 1e3),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.1}%", 100.0 * secs / lat.max(1e-12)),
+        ]);
+    }
+    table.print();
+
+    if let Some(path) = args.opt("trace") {
+        std::fs::write(path, &export)?;
+        eprintln!("[fig_trace] wrote trace ({} events) to {path}", bus.len());
+    }
+    if let Some(path) = args.opt("json") {
+        let doc = format!(
+            "{{\"bench\":\"fig_trace\",\"smoke\":{smoke},\"requests\":{requests},\
+             \"batch\":{batch},\"docs\":{n_docs},\"rate\":{rate},\"skew\":{skew},\
+             \"fleet\":\"{fleet_spec}\",\"contention\":{contention},\
+             \"spans\":{},\"sched_events\":{},\"paths\":{},\
+             \"max_attribution_err_secs\":{:.12},\"deterministic\":{deterministic},\
+             \"worst\":{},\"dominant\":\"{dom_name}\",\"dominant_secs\":{:.9}}}",
+            bus.len(),
+            sched_bus.len(),
+            paths.len(),
+            max_err,
+            worst.to_json(),
+            dom_secs,
+        );
+        std::fs::write(path, doc)?;
+        eprintln!("[fig_trace] wrote {path}");
+    }
+    Ok(())
+}

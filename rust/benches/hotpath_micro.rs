@@ -115,6 +115,50 @@ fn main() -> anyhow::Result<()> {
     let s = measure(3, iters, || sess.read_logits(&state).unwrap());
     println!("read_logits (b=8 x {} vocab)    : {s}", cfg.vocab);
 
+    // --- trace recorder: the disabled path must be free on the
+    // hottest instrumented loop. Per reservation the recorder adds one
+    // relaxed atomic branch; wiring a disabled bus must stay within 2%
+    // of the never-wired link (a recording bus shown for contrast).
+    {
+        use matkv::hwsim::{Link, LinkClock, TrafficClass};
+        use matkv::trace::TraceBus;
+        let inner = 20_000usize;
+        let mut run = |link: &Link, reps: usize| {
+            let mut t = 0.0f64;
+            measure(3, reps, || {
+                for i in 0..inner {
+                    t = link.reserve_at(t, 4096 + (i & 1023), TrafficClass::H2D).end;
+                }
+            })
+        };
+        let bare = Link::new("pcie", 64e9, 0.0, LinkClock::Virtual);
+        let s_bare = run(&bare, iters);
+        println!("link.reserve_at x{inner} (no trace)  : {s_bare}");
+        let wired = Link::new("pcie", 64e9, 0.0, LinkClock::Virtual);
+        wired.set_trace(TraceBus::disabled(), "link:micro");
+        let s_wired = run(&wired, iters);
+        let overhead = s_wired.mean / s_bare.mean - 1.0;
+        println!(
+            "link.reserve_at x{inner} (trace off) : {s_wired}  ({:+.2}% vs no trace)",
+            overhead * 100.0
+        );
+        if overhead > 0.02 {
+            eprintln!(
+                "[hotpath_micro] WARNING: disabled-path trace recorder costs {:.2}% on \
+                 the link hot loop (> 2%) — the trace_on gate is not cheap enough",
+                overhead * 100.0
+            );
+        }
+        let rec = Link::new("pcie", 64e9, 0.0, LinkClock::Virtual);
+        let bus = TraceBus::recording();
+        rec.set_trace(bus.clone(), "link:micro");
+        let s_rec = run(&rec, iters.min(5));
+        println!(
+            "link.reserve_at x{inner} (recording) : {s_rec}  ({} events kept)",
+            bus.len()
+        );
+    }
+
     // --- vector search over 10K docs
     let emb = HashEmbedder::new(128, 7);
     let mut ix = FlatIndex::new(128);

@@ -584,6 +584,14 @@ impl Engine {
         if let Some(tier) = self.kv.warm_tier() {
             tier.sample();
         }
+        // Unclocked batch mark (the engine runs on wall time): payload
+        // only, so the deterministic trace sees the executed batch shape
+        // but never a wall timestamp.
+        self.kv.trace().mark("engine", "batch", &[
+            ("bucket", crate::trace::Arg::U(bucket as u64)),
+            ("n", crate::trace::Arg::U(n as u64)),
+            ("tokens_out", crate::trace::Arg::U(m.tokens_out as u64)),
+        ]);
         Ok((responses, m))
     }
 

@@ -83,6 +83,7 @@ use crate::hwsim::{
     LinkSnapshot, PhaseKind, StorageProfile, TrafficClass, SERVING_GPUS,
 };
 use crate::kvstore::ResidentSet;
+use crate::trace::{Arg, RequestPath, TraceBus};
 use crate::vectordb::ChunkId;
 use crate::workload::RagRequest;
 
@@ -497,21 +498,37 @@ impl Worker {
 /// timeline: [`Fleet::dispatch`] plays it and the hand-computed
 /// latency test mirrors it verbatim, so the two can't drift.
 fn h2d_upload(link: &Link, load_done: f64, cost: &BatchCost, chunk_bytes: f64) -> f64 {
+    h2d_upload_queued(link, load_done, cost, chunk_bytes).0
+}
+
+/// [`h2d_upload`] plus the sum of queued (not-on-the-wire) seconds its
+/// slots spent waiting behind earlier traffic — the dispatch loop's
+/// per-batch *bus* attribution component. Same timeline, same
+/// reservations; `h2d_upload` delegates here so the two can't drift.
+fn h2d_upload_queued(
+    link: &Link,
+    load_done: f64,
+    cost: &BatchCost,
+    chunk_bytes: f64,
+) -> (f64, f64) {
     if cost.transfer_bytes <= 0.0 {
-        return load_done;
+        return (load_done, 0.0);
     }
     let n = (cost.transfer_bytes / chunk_bytes.max(1.0)).round().max(1.0) as usize;
     let per_secs = cost.transfer_secs / n as f64;
     let per_bytes = (cost.transfer_bytes / n as f64) as usize;
     let total_bytes = cost.transfer_bytes as usize;
     let mut cursor = load_done;
+    let mut queued = 0.0f64;
     for i in 0..n {
         // the last chunk carries the integer-division remainder, so the
         // byte counters stay exact
         let bytes = if i + 1 == n { total_bytes - (n - 1) * per_bytes } else { per_bytes };
-        cursor = link.reserve_secs_at(cursor, per_secs, bytes, TrafficClass::H2D).end;
+        let slot = link.reserve_secs_at(cursor, per_secs, bytes, TrafficClass::H2D);
+        queued += slot.queued_secs;
+        cursor = slot.end;
     }
-    cursor
+    (cursor, queued)
 }
 
 /// Per-worker slice of a [`FleetReport`].
@@ -663,6 +680,11 @@ pub struct Fleet {
     /// as on-device recompute even though they were materialized
     /// ([`Fleet::set_lost_chunks`]).
     lost: Option<Arc<dyn Fn(ChunkId) -> bool + Send + Sync>>,
+    /// Trace handle ([`Fleet::set_trace`]). Dispatch runs entirely on
+    /// the virtual clock, so every emission here is *clocked* — real
+    /// trace timestamps — and the per-request [`RequestPath`]
+    /// attribution records land on the same bus.
+    trace: TraceBus,
 }
 
 impl Fleet {
@@ -693,7 +715,21 @@ impl Fleet {
             host_resident: HashSet::new(),
             faults: None,
             lost: None,
+            trace: TraceBus::disabled(),
         }
+    }
+
+    /// Attach a trace bus: per-batch load/upload/prefill/decode spans
+    /// and completion instants on each worker's own track, per-slot
+    /// reservation spans on each worker's H2D link track, and one
+    /// [`RequestPath`] critical-path record per completed request.
+    /// Call after [`Fleet::set_contention`]-style knobs; tracks are
+    /// indexed (`worker0:H100`, …) because profile names repeat.
+    pub fn set_trace(&mut self, trace: TraceBus) {
+        for (i, w) in self.workers.iter().enumerate() {
+            w.link.set_trace(trace.clone(), format!("link:worker{}:{}", i, w.profile.name));
+        }
+        self.trace = trace;
     }
 
     /// Install a fault plan: workers crash at their plan-scheduled
@@ -955,9 +991,14 @@ impl Fleet {
             // AND the bytes have landed. Decode of batch *n* hides the
             // transfer of batch *n+1* up to link saturation.
             let load_done = batch.release_secs + cost.load_secs;
-            let transfer_done = h2d_upload(&w.link, load_done, &cost, chunk_bytes);
+            let (transfer_done, bus_queued) =
+                h2d_upload_queued(&w.link, load_done, &cost, chunk_bytes);
             let start = transfer_done.max(w.free_at);
             let done = start + cost.prefill_secs + cost.decode_secs;
+            let track = self
+                .trace
+                .enabled()
+                .then(|| format!("worker{}:{}", wi, w.profile.name));
 
             // Crash mid-dispatch: the worker dies before this batch
             // completes. It keeps whatever it burned up to the crash,
@@ -972,6 +1013,14 @@ impl Fleet {
                     w.meter.record(PhaseKind::StorageIo, cost.load_secs);
                     w.meter.record(PhaseKind::GpuCompute, cost.transfer_secs + partial);
                     requeued_requests += batch.reqs.len();
+                    if let Some(track) = &track {
+                        self.trace.instant(
+                            track,
+                            "crash_requeue",
+                            t,
+                            &[("n", Arg::U(batch.reqs.len() as u64))],
+                        );
+                    }
                     let mut again = batch;
                     again.release_secs = t;
                     queue.push_back(again);
@@ -996,6 +1045,7 @@ impl Fleet {
             // The surcharge is exact — this batch's prefill minus what
             // it would have cost with those chunks loadable, priced on
             // the assigned device.
+            let mut retry_surcharge = 0.0f64;
             if lost.is_some() {
                 let mut lost_ids: HashSet<ChunkId> = HashSet::new();
                 let mut lost_elems = 0usize;
@@ -1014,7 +1064,62 @@ impl Fleet {
                         self.model.batch_work(&batch.reqs, &batch.retrieved, materialized);
                     let healthy_prefill =
                         self.model.arch.trace_secs(&healthy.prefill, &self.workers[wi].profile);
-                    recompute_fallback_secs += (cost.prefill_secs - healthy_prefill).max(0.0);
+                    retry_surcharge = (cost.prefill_secs - healthy_prefill).max(0.0);
+                    recompute_fallback_secs += retry_surcharge;
+                }
+            }
+
+            // Trace the batch's timeline on this worker's track and
+            // record one critical-path attribution per request. The
+            // components sum to `done - arrival` *algebraically*: queue
+            // absorbs both the pre-release wait and the device-busy gap,
+            // pcie is pure wire time (the queued share is `bus`), and
+            // compute is exec minus the recompute surcharge.
+            if let Some(track) = &track {
+                let bi = Arg::U((popped - 1) as u64);
+                if cost.load_secs > 0.0 {
+                    self.trace.span(track, "load", batch.release_secs, cost.load_secs, &[
+                        ("batch", bi.clone()),
+                    ]);
+                }
+                if transfer_done > load_done {
+                    self.trace.span(track, "upload", load_done, transfer_done - load_done, &[
+                        ("batch", bi.clone()),
+                        ("bytes", Arg::U(cost.transfer_bytes as u64)),
+                        ("queued_secs", Arg::F(bus_queued)),
+                    ]);
+                }
+                if cost.prefill_secs > 0.0 {
+                    self.trace.span(track, "prefill", start, cost.prefill_secs, &[
+                        ("batch", bi.clone()),
+                    ]);
+                }
+                if cost.decode_secs > 0.0 {
+                    self.trace.span(
+                        track,
+                        "decode",
+                        start + cost.prefill_secs,
+                        cost.decode_secs,
+                        &[("batch", bi.clone())],
+                    );
+                }
+                self.trace.instant(track, "done", done, &[
+                    ("batch", bi),
+                    ("n", Arg::U(batch.reqs.len() as u64)),
+                ]);
+                for (r, &arrival) in batch.reqs.iter().zip(&batch.arrivals) {
+                    self.trace.request_path(RequestPath {
+                        request_id: r.id,
+                        worker: track.clone(),
+                        arrival_secs: arrival,
+                        done_secs: done,
+                        queue_secs: (batch.release_secs - arrival) + (start - transfer_done),
+                        storage_secs: cost.load_secs,
+                        bus_secs: bus_queued,
+                        pcie_secs: (transfer_done - load_done) - bus_queued,
+                        compute_secs: (done - start) - retry_surcharge,
+                        retry_secs: retry_surcharge,
+                    });
                 }
             }
 
@@ -1574,5 +1679,111 @@ mod tests {
         assert_eq!(rep.tokens_per_joule, 0.0);
         assert_eq!(rep.workers[0].utilization, 0.0);
         assert!(rep.to_json().contains("\"tokens_out\":0"));
+    }
+
+    /// The schedule the three tracing tests below share: enough batches
+    /// to exercise load, queued uploads, prefill and decode on a mixed
+    /// fleet, with one chunk unmaterialized so prefill-heavy routing
+    /// fires too.
+    fn trace_batches() -> Vec<PlannedBatch> {
+        (0..10).map(|i| batch(10 * i, 3, vec![i % 4, 50 + i % 3], 0.01 * i as f64)).collect()
+    }
+
+    #[test]
+    fn traced_dispatch_exports_byte_identically_across_runs() {
+        // The tentpole's determinism contract at fleet scope: same
+        // schedule + same spec ⇒ the exported trace is the same STRING,
+        // not merely equivalent events.
+        let batches = trace_batches();
+        let run = || {
+            let mut fleet = Fleet::new(
+                &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+                Routing::RoleAware,
+                model(),
+            );
+            let bus = TraceBus::recording();
+            fleet.set_trace(bus.clone());
+            fleet.dispatch(&batches, &|id| id != 2);
+            bus.to_chrome_json()
+        };
+        let (a, b) = (run(), run());
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "trace export must be byte-identical run to run");
+        // worker tracks and link tracks both present and named
+        assert!(a.contains("\"name\":\"thread_name\""));
+        assert!(a.contains("worker0:H100"));
+        assert!(a.contains("link:worker0:H100"));
+        assert!(a.contains("\"name\":\"decode\""));
+    }
+
+    #[test]
+    fn tracing_does_not_change_dispatch_results() {
+        // Bit-identity pin: a recording bus must be write-only — the
+        // dispatch decision trail and every reported number match the
+        // untraced run exactly.
+        let batches = trace_batches();
+        let untraced = {
+            let mut fleet = Fleet::new(
+                &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+                Routing::RoleAware,
+                model(),
+            );
+            fleet.dispatch(&batches, &|id| id != 2)
+        };
+        let traced = {
+            let mut fleet = Fleet::new(
+                &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+                Routing::RoleAware,
+                model(),
+            );
+            fleet.set_trace(TraceBus::recording());
+            fleet.dispatch(&batches, &|id| id != 2)
+        };
+        assert_eq!(untraced.assignments, traced.assignments);
+        assert_eq!(untraced.latency, traced.latency);
+        assert_eq!(untraced.makespan_secs, traced.makespan_secs);
+        assert_eq!(untraced.total_kj, traced.total_kj);
+        assert_eq!(untraced.to_json(), traced.to_json());
+    }
+
+    #[test]
+    fn attribution_components_sum_to_request_latency() {
+        // Acceptance criterion: every traced request's critical-path
+        // components sum to its end-to-end latency within 1e-6 s — on a
+        // clean run AND under faults (crash requeue + lost chunks),
+        // where the queue and retry components do the absorbing.
+        let batches = trace_batches();
+        let bus = TraceBus::recording();
+        let mut fleet = Fleet::new(
+            &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+            Routing::RoleAware,
+            model(),
+        );
+        fleet.set_trace(bus.clone());
+        let rep = fleet.dispatch(&batches, &|id| id != 2);
+        let paths = bus.paths();
+        assert_eq!(paths.len(), rep.requests, "one attribution record per request");
+        assert!(bus.max_attribution_err() < 1e-6, "err {}", bus.max_attribution_err());
+        for p in &paths {
+            assert!(p.latency_secs() > 0.0);
+            assert!(p.queue_secs >= -1e-9 && p.storage_secs >= 0.0 && p.compute_secs >= 0.0);
+        }
+
+        // Faulted: a crashed decode card and a dead-storage chunk.
+        let bus = TraceBus::recording();
+        let mut fleet = Fleet::new(
+            &FleetSpec::parse("h100:1,rtx4090:3").unwrap(),
+            Routing::RoleAware,
+            model(),
+        );
+        fleet.set_faults(Arc::new(FaultPlan::parse("worker3:crash@0.02").unwrap()));
+        fleet.set_lost_chunks(Arc::new(|id| id == 1));
+        fleet.set_trace(bus.clone());
+        let rep = fleet.dispatch(&batches, &|id| id != 2);
+        assert!(rep.metrics.recomputed_chunks > 0, "lost chunk must recompute");
+        assert_eq!(bus.paths().len(), rep.requests);
+        assert!(bus.max_attribution_err() < 1e-6, "err {}", bus.max_attribution_err());
+        let retried: f64 = bus.paths().iter().map(|p| p.retry_secs).sum();
+        assert!(retried > 0.0, "recompute surcharge must land in the retry component");
     }
 }

@@ -50,6 +50,13 @@ impl WorkTrace {
         self.sum_ctx += other.sum_ctx;
         self.steps += other.steps;
     }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"sum_s\":{},\"sum_s_ctx\":{},\"sum_ctx\":{},\"steps\":{}}}",
+            self.sum_s, self.sum_s_ctx, self.sum_ctx, self.steps
+        )
+    }
 }
 
 /// Latency breakdown of one batch (or an aggregate of many).
@@ -337,6 +344,87 @@ impl PhaseBreakdown {
             0.0
         }
     }
+
+    /// Exhaustive JSON of every field, in declaration order. This is
+    /// the `--metrics-json` payload, and doubles as the merge guard's
+    /// equality witness: a field missing here (or from [`add`]) trips
+    /// `exhaustive_merge_guard` below, so neither can silently lag the
+    /// struct. Keep all three in sync when adding a field.
+    ///
+    /// [`add`]: PhaseBreakdown::add
+    pub fn to_json(&self) -> String {
+        fn vec_u64(v: &[u64]) -> String {
+            let rows: Vec<String> = v.iter().map(u64::to_string).collect();
+            format!("[{}]", rows.join(","))
+        }
+        fn vec_f64(v: &[f64]) -> String {
+            let rows: Vec<String> = v.iter().map(|x| format!("{x:.9}")).collect();
+            format!("[{}]", rows.join(","))
+        }
+        format!(
+            "{{\"retrieve_secs\":{:.9},\"load_wall_secs\":{:.9},\
+             \"load_device_secs\":{:.9},\"loaded_bytes\":{},\
+             \"loaded_tokens\":{},\"load_reads\":{},\
+             \"shard_reads\":{},\"shard_bytes\":{},\
+             \"shard_device_secs\":{},\"shard_peak_queue\":{},\
+             \"cache_hits\":{},\"cache_tokens\":{},\"cache_bytes_saved\":{},\
+             \"warm_hits\":{},\"warm_tokens\":{},\"warm_bytes_saved\":{},\
+             \"dequant_secs\":{:.9},\"quant_secs\":{:.9},\
+             \"warm_admit_tokens\":{},\"q4_dequant_secs\":{:.9},\
+             \"upload_secs\":{:.9},\"prefill_wall_secs\":{:.9},\
+             \"prefill_trace\":{},\"decode_wall_secs\":{:.9},\
+             \"decode_trace\":{},\"total_wall_secs\":{:.9},\
+             \"requests\":{},\"tokens_out\":{},\
+             \"worker_busy_secs\":{},\"worker_batches\":{},\
+             \"worker_transfer_secs\":{},\"worker_link_queued_secs\":{},\
+             \"worker_link_peak_backlog_secs\":{},\"request_latency\":{},\
+             \"retries\":{},\"retry_backoff_secs\":{:.9},\
+             \"checksum_failures\":{},\"recomputed_chunks\":{},\
+             \"recompute_fallback_secs\":{:.9},\"requeued_requests\":{},\
+             \"degraded_tokens\":{}}}",
+            self.retrieve_secs,
+            self.load_wall_secs,
+            self.load_device_secs,
+            self.loaded_bytes,
+            self.loaded_tokens,
+            self.load_reads,
+            vec_u64(&self.shard_reads),
+            vec_u64(&self.shard_bytes),
+            vec_f64(&self.shard_device_secs),
+            vec_u64(&self.shard_peak_queue),
+            self.cache_hits,
+            self.cache_tokens,
+            self.cache_bytes_saved,
+            self.warm_hits,
+            self.warm_tokens,
+            self.warm_bytes_saved,
+            self.dequant_secs,
+            self.quant_secs,
+            self.warm_admit_tokens,
+            self.q4_dequant_secs,
+            self.upload_secs,
+            self.prefill_wall_secs,
+            self.prefill_trace.to_json(),
+            self.decode_wall_secs,
+            self.decode_trace.to_json(),
+            self.total_wall_secs,
+            self.requests,
+            self.tokens_out,
+            vec_f64(&self.worker_busy_secs),
+            vec_u64(&self.worker_batches),
+            vec_f64(&self.worker_transfer_secs),
+            vec_f64(&self.worker_link_queued_secs),
+            vec_f64(&self.worker_link_peak_backlog_secs),
+            self.request_latency.to_json(),
+            self.retries,
+            self.retry_backoff_secs,
+            self.checksum_failures,
+            self.recomputed_chunks,
+            self.recompute_fallback_secs,
+            self.requeued_requests,
+            self.degraded_tokens,
+        )
+    }
 }
 
 /// The serving percentiles the fleet bench emits, in one copyable
@@ -411,6 +499,195 @@ impl Percentiles {
         } else {
             self.samples.iter().sum::<f64>() / self.samples.len() as f64
         }
+    }
+
+    /// Fold the per-sample distribution into the mergeable log-bucketed
+    /// form ([`LogHistogram`]). Per-sample fidelity stays here; the
+    /// histogram is what crosses file boundaries (trace documents,
+    /// metrics dumps), where unbounded sample vectors don't belong.
+    pub fn histogram(&self) -> LogHistogram {
+        let mut h = LogHistogram::default();
+        for &v in &self.samples {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Summary bundle plus the mergeable histogram — never the raw
+    /// samples, which are unbounded.
+    pub fn to_json(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{{\"count\":{},\"mean\":{:.9},\"p50\":{:.9},\"p95\":{:.9},\
+             \"p99\":{:.9},\"histogram\":{}}}",
+            self.len(),
+            s.mean,
+            s.p50,
+            s.p95,
+            s.p99,
+            self.histogram().to_json()
+        )
+    }
+}
+
+/// Log-bucketed latency histogram with a fixed, universal bucket
+/// geometry, so any two histograms merge bucket-for-bucket without
+/// resampling — the property [`Percentiles`] (a raw sample vector)
+/// lacks once distributions leave the process as JSON.
+///
+/// Geometry: bucket 0 holds everything at or below [`LogHistogram::LO`]
+/// (1 µs — below the resolution of anything this testbed models);
+/// bucket `i ≥ 1` holds `(LO·G^(i-1), LO·G^i]` with `G =`
+/// [`LogHistogram::GROWTH`]. At 8% growth the relative quantile error
+/// is bounded by one bucket width (~8%), and ~300 buckets span 1 µs to
+/// over an hour; anything beyond clamps into the last bucket.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LogHistogram {
+    /// Per-bucket counts, grown lazily to the highest occupied index.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Lower edge of the geometry: 1 µs.
+    pub const LO: f64 = 1e-6;
+    /// Bucket growth ratio (8% relative quantile error bound).
+    pub const GROWTH: f64 = 1.08;
+    /// Bucket count cap: `LO · GROWTH^320` ≈ 4.8e4 s (~13 h).
+    pub const MAX_BUCKETS: usize = 321;
+
+    /// Bucket index for a value — the one place the geometry lives.
+    fn bucket(v: f64) -> usize {
+        if !(v > Self::LO) {
+            return 0; // ≤ LO, zero, negative, and NaN all floor out
+        }
+        let idx = ((v / Self::LO).ln() / Self::GROWTH.ln()).ceil() as usize;
+        idx.min(Self::MAX_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` — the quantile representative, so
+    /// reported percentiles err conservatively (never under-report).
+    fn upper_edge(i: usize) -> f64 {
+        if i == 0 {
+            Self::LO
+        } else {
+            Self::LO * Self::GROWTH.powi(i as i32)
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let i = Self::bucket(v);
+        if self.counts.len() <= i {
+            self.counts.resize(i + 1, 0);
+        }
+        self.counts[i] += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Fold another histogram in. Exact — both sides share the fixed
+    /// geometry, so this is element-wise addition, and `merge(a, b)`
+    /// reports identical quantiles to having recorded every sample
+    /// into one histogram.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (x, &y) in self.counts.iter_mut().zip(&other.counts) {
+            *x += y;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// p in [0, 100]; nearest-rank over buckets. Returns the matched
+    /// bucket's upper edge clamped into `[min, max]`, so the answer is
+    /// within one bucket width (~8%) of the sample-exact quantile and
+    /// extreme ranks return the exact recorded extremes.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::upper_edge(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Sparse JSON: fixed geometry constants plus `index:count` pairs
+    /// for occupied buckets only. Floats print at fixed precision so
+    /// the same distribution always serializes to the same bytes.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut buckets = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                if !buckets.is_empty() {
+                    buckets.push(',');
+                }
+                let _ = write!(buckets, "\"{i}\":{c}");
+            }
+        }
+        format!(
+            "{{\"lo\":{:e},\"growth\":{},\"count\":{},\"sum\":{:.9},\
+             \"min\":{:.9},\"max\":{:.9},\"buckets\":{{{}}}}}",
+            Self::LO,
+            Self::GROWTH,
+            self.count,
+            self.sum,
+            self.min,
+            self.max,
+            buckets,
+        )
     }
 }
 
@@ -740,5 +1017,180 @@ mod tests {
     fn throughput() {
         let b = PhaseBreakdown { total_wall_secs: 2.0, tokens_out: 100, ..Default::default() };
         assert_eq!(b.throughput(), 50.0);
+    }
+
+    /// Every field, distinct and nonzero, with **no** `..Default::default()`:
+    /// adding a field to [`PhaseBreakdown`] breaks this literal at compile
+    /// time, forcing this test (and so [`PhaseBreakdown::add`] and
+    /// [`PhaseBreakdown::to_json`]) to be revisited.
+    fn filled_breakdown() -> PhaseBreakdown {
+        let mut lat = Percentiles::default();
+        lat.record(0.040);
+        lat.record(0.020);
+        PhaseBreakdown {
+            retrieve_secs: 0.001,
+            load_wall_secs: 0.002,
+            load_device_secs: 0.003,
+            loaded_bytes: 11,
+            loaded_tokens: 12,
+            load_reads: 13,
+            shard_reads: vec![1, 2],
+            shard_bytes: vec![100, 200],
+            shard_device_secs: vec![0.25, 0.5],
+            shard_peak_queue: vec![3, 1],
+            cache_hits: 14,
+            cache_tokens: 15,
+            cache_bytes_saved: 16,
+            warm_hits: 17,
+            warm_tokens: 18,
+            warm_bytes_saved: 19,
+            dequant_secs: 0.004,
+            quant_secs: 0.005,
+            warm_admit_tokens: 20,
+            q4_dequant_secs: 0.006,
+            upload_secs: 0.007,
+            prefill_wall_secs: 0.008,
+            prefill_trace: WorkTrace { sum_s: 1.0, sum_s_ctx: 2.0, sum_ctx: 3.0, steps: 4.0 },
+            decode_wall_secs: 0.009,
+            decode_trace: WorkTrace { sum_s: 5.0, sum_s_ctx: 6.0, sum_ctx: 7.0, steps: 8.0 },
+            total_wall_secs: 0.010,
+            requests: 21,
+            tokens_out: 22,
+            worker_busy_secs: vec![0.75],
+            worker_batches: vec![4],
+            worker_transfer_secs: vec![0.125],
+            worker_link_queued_secs: vec![0.0625],
+            worker_link_peak_backlog_secs: vec![0.375],
+            request_latency: lat,
+            retries: 23,
+            retry_backoff_secs: 0.011,
+            checksum_failures: 24,
+            recomputed_chunks: 25,
+            recompute_fallback_secs: 0.012,
+            requeued_requests: 26,
+            degraded_tokens: 27,
+        }
+    }
+
+    #[test]
+    fn exhaustive_merge_guard() {
+        let filled = filled_breakdown();
+        // add-identity: merging the fully-populated breakdown into a
+        // default one must reproduce it exactly. A field [`add`] fails
+        // to carry stays at its default and diverges in the exhaustive
+        // serialization (all values above are chosen nonzero and
+        // distinct, so no omission can cancel out).
+        let mut merged = PhaseBreakdown::default();
+        merged.add(&filled);
+        assert_eq!(merged.to_json(), filled.to_json());
+        // double-add doubles counters but leaves gauges at their max
+        let mut twice = PhaseBreakdown::default();
+        twice.add(&filled);
+        twice.add(&filled);
+        assert_eq!(twice.requests, 42);
+        assert!((twice.retrieve_secs - 0.002).abs() < 1e-12);
+        assert_eq!(twice.shard_peak_queue, vec![3, 1]);
+        assert_eq!(twice.worker_link_peak_backlog_secs, vec![0.375]);
+        assert_eq!(twice.request_latency.len(), 4);
+    }
+
+    #[test]
+    fn breakdown_json_is_exhaustive_and_deterministic() {
+        let filled = filled_breakdown();
+        let j = filled.to_json();
+        assert_eq!(j, filled_breakdown().to_json());
+        // spot-check shape: a scalar, a rollup vector, and both nested
+        // structures made it into the document
+        assert!(j.contains("\"degraded_tokens\":27"), "{j}");
+        assert!(j.contains("\"shard_reads\":[1,2]"), "{j}");
+        assert!(j.contains("\"prefill_trace\":{\"sum_s\":1"), "{j}");
+        assert!(j.contains("\"request_latency\":{\"count\":2"), "{j}");
+        assert!(j.contains("\"histogram\":{\"lo\":1e-6"), "{j}");
+    }
+
+    #[test]
+    fn log_histogram_percentiles_track_samples_within_bucket_width() {
+        let mut h = LogHistogram::default();
+        let mut p = Percentiles::default();
+        for i in 1..=1000 {
+            let v = i as f64 * 1e-3;
+            h.record(v);
+            p.record(v);
+        }
+        assert_eq!(h.len(), 1000);
+        assert!((h.mean() - p.mean()).abs() < 1e-9, "sum is exact, not bucketed");
+        for q in [10.0, 50.0, 90.0, 99.0] {
+            let exact = p.percentile(q);
+            let approx = h.percentile(q);
+            assert!(
+                approx >= exact * 0.999 && approx <= exact * LogHistogram::GROWTH * 1.001,
+                "q{q}: {approx} vs exact {exact}"
+            );
+        }
+        // extremes clamp to the recorded min/max, not bucket edges
+        assert_eq!(h.percentile(100.0), 1.0);
+        assert!(h.percentile(0.0) >= 1e-3 - 1e-12);
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_single_recording() {
+        let vals: Vec<f64> = (0..200).map(|i| 1e-5 * 1.07f64.powi(i % 37)).collect();
+        let mut whole = LogHistogram::default();
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        for (i, &v) in vals.iter().enumerate() {
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        // fixed geometry makes the merge exact bucket-for-bucket (the
+        // float `sum` can differ by an ulp from a different addition
+        // order, which the fixed-precision serialization absorbs)
+        assert_eq!(a.to_json(), whole.to_json());
+        for q in [1.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(a.percentile(q), whole.percentile(q), "q{q}");
+        }
+        // merging an empty histogram is a no-op either way
+        a.merge(&LogHistogram::default());
+        assert_eq!(a.to_json(), whole.to_json());
+        let mut e = LogHistogram::default();
+        e.merge(&whole);
+        assert_eq!(e, whole);
+    }
+
+    #[test]
+    fn log_histogram_floors_tiny_values_and_clamps_huge_ones() {
+        let mut h = LogHistogram::default();
+        h.record(0.0);
+        h.record(1e-9);
+        h.record(1e12); // far past the last bucket edge
+        assert_eq!(h.len(), 3);
+        // sub-resolution values floor into bucket 0 and report at its
+        // 1 µs edge — never above it
+        assert!(h.percentile(1.0) <= LogHistogram::LO, "{}", h.percentile(1.0));
+        assert_eq!(h.percentile(100.0), 1e12, "p-high clamps to recorded max");
+        let empty = LogHistogram::default();
+        assert_eq!(empty.percentile(99.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        assert!(empty.to_json().contains("\"count\":0"));
+    }
+
+    #[test]
+    fn percentiles_histogram_bridge_preserves_the_distribution() {
+        let mut p = Percentiles::default();
+        for i in (0..200).rev() {
+            p.record(0.001 + i as f64 / 1000.0);
+        }
+        let h = p.histogram();
+        assert_eq!(h.len(), p.len());
+        assert!((h.mean() - p.mean()).abs() < 1e-9);
+        let (hp, pp) = (h.percentile(99.0), p.percentile(99.0));
+        assert!(hp >= pp && hp <= pp * LogHistogram::GROWTH, "{hp} vs {pp}");
     }
 }

@@ -40,7 +40,7 @@ pub use fleet::{
     WorkerReport,
 };
 pub use ingest::{IngestStats, Ingestor};
-pub use metrics::{LatencySummary, PhaseBreakdown, Percentiles};
+pub use metrics::{LatencySummary, LogHistogram, PhaseBreakdown, Percentiles};
 pub use experiments::{Scenario, ScenarioSpec};
 pub use overlap::{serve_overlapped, serve_overlapped_with, OverlapOptions, OverlapReport};
 pub use scheduler::{

@@ -234,6 +234,13 @@ pub(crate) fn run_pipeline(
                     let staged =
                         loader_ctx.stage_matkv_with(&batch.reqs, batch.planned_retrieval());
                     let busy = t0.elapsed().as_secs_f64();
+                    // Unclocked (wall-clock thread): payload only, and
+                    // the batch index keys the mark uniquely, so the
+                    // export stays deterministic under any interleave.
+                    loader_ctx.kv.trace().mark("pipeline", "staged", &[
+                        ("batch", crate::trace::Arg::U(i as u64)),
+                        ("n", crate::trace::Arg::U(batch.reqs.len() as u64)),
+                    ]);
                     if tx.send(staged.map(|s| (s, busy))).is_err() {
                         return; // executor hung up (error path)
                     }
@@ -251,6 +258,10 @@ pub(crate) fn run_pipeline(
                 let t0 = Instant::now();
                 let (r, m) = engine.exec_staged(staged, mode)?;
                 report.exec_busy_secs += t0.elapsed().as_secs_f64();
+                engine.kv.trace().mark("pipeline", "executed", &[
+                    ("batch", crate::trace::Arg::U(i as u64)),
+                    ("n", crate::trace::Arg::U(r.len() as u64)),
+                ]);
                 responses.extend(r);
                 agg.add(&m);
                 executed.store(i + 1, Ordering::Release);

@@ -42,6 +42,7 @@ use anyhow::Result;
 use super::engine::{Engine, LoaderCtx, Response, ServeMode};
 use super::metrics::PhaseBreakdown;
 use super::overlap::{run_pipeline, OverlapOptions, OverlapReport};
+use crate::trace::{Arg, TraceBus};
 use crate::vectordb::ChunkId;
 use crate::workload::{RagRequest, TimedRequest};
 
@@ -231,11 +232,21 @@ pub struct Scheduler {
     ctx: LoaderCtx,
     opts: SchedOptions,
     queue: Vec<Queued>,
+    /// Trace handle; planning runs entirely on the virtual clock, so
+    /// its lifecycle instants are *clocked* (real trace timestamps).
+    trace: TraceBus,
 }
 
 impl Scheduler {
     pub fn new(ctx: LoaderCtx, opts: SchedOptions) -> Self {
-        Scheduler { ctx, opts, queue: Vec::new() }
+        Scheduler { ctx, opts, queue: Vec::new(), trace: TraceBus::disabled() }
+    }
+
+    /// Attach a trace bus: each planned request gets a `queued` instant
+    /// at its virtual arrival and each batch a `release` instant at the
+    /// time the release condition fired, on the `sched` track.
+    pub fn set_trace(&mut self, trace: TraceBus) {
+        self.trace = trace;
     }
 
     /// The batch-replay shape the serve wrappers use: FIFO policy,
@@ -434,6 +445,20 @@ impl Scheduler {
                 Some(est) => est.batch_secs(&reqs, &retrieved).max(0.0),
                 None => service,
             };
+            if self.trace.enabled() {
+                for (r, &a) in reqs.iter().zip(&arrivals) {
+                    self.trace.instant("sched", "queued", a, &[("req", Arg::U(r.id))]);
+                }
+                self.trace.instant(
+                    "sched",
+                    "release",
+                    t,
+                    &[
+                        ("batch", Arg::U(batches.len() as u64)),
+                        ("n", Arg::U(reqs.len() as u64)),
+                    ],
+                );
+            }
             batches.push(PlannedBatch { reqs, retrieved, arrivals, release_secs: t });
             t_free = t + batch_service;
         }

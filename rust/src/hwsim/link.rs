@@ -36,6 +36,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::trace::{Arg, TraceBus};
+
 /// How a [`Link`] obtains "now" and whether reservations block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinkClock {
@@ -253,6 +255,14 @@ pub struct Link {
     enabled: AtomicBool,
     birth: Instant,
     state: Mutex<LinkState>,
+    /// Tracing gate, checked with one relaxed load in [`Link::admit`]
+    /// before the trace mutex is ever touched — the untraced hot path
+    /// pays a single branch.
+    trace_on: AtomicBool,
+    /// Trace handle plus the track this link records under. Link
+    /// *names* repeat (every shard of one profile shares one), so the
+    /// caller — who knows the topology — names the track.
+    trace: Mutex<Option<(TraceBus, String)>>,
     pub stats: LinkStats,
 }
 
@@ -266,7 +276,49 @@ impl Link {
             enabled: AtomicBool::new(true),
             birth: Instant::now(),
             state: Mutex::new(LinkState::default()),
+            trace_on: AtomicBool::new(false),
+            trace: Mutex::new(None),
             stats: LinkStats::default(),
+        }
+    }
+
+    /// Wire this link to a trace bus under an explicit `track` name.
+    /// Interior-mutable — links are shared behind `Arc` by the time the
+    /// CLI knows whether tracing is on. A disabled bus un-wires.
+    pub fn set_trace(&self, trace: TraceBus, track: impl Into<String>) {
+        self.trace_on.store(trace.enabled(), Ordering::Relaxed);
+        *self.trace.lock().unwrap() =
+            if trace.enabled() { Some((trace, track.into())) } else { None };
+    }
+
+    /// Record one granted reservation. Virtual-clock slots carry their
+    /// real (deterministic) timestamps and queued split; wall-clock
+    /// modes record the modeled duration and bytes only — wall times
+    /// would break the exporter's byte-identity contract (see
+    /// [`crate::trace`]).
+    fn trace_slot(&self, slot: &Slot, bytes: usize, class: TrafficClass) {
+        if !self.trace_on.load(Ordering::Relaxed) {
+            return;
+        }
+        let guard = self.trace.lock().unwrap();
+        let Some((bus, track)) = guard.as_ref() else { return };
+        match self.clock {
+            LinkClock::Virtual => bus.span(
+                track,
+                class.label(),
+                slot.start,
+                slot.duration(),
+                &[
+                    ("bytes", Arg::U(bytes as u64)),
+                    ("queued_secs", Arg::F(slot.queued_secs)),
+                ],
+            ),
+            _ => bus.event(
+                track,
+                class.label(),
+                slot.duration(),
+                &[("bytes", Arg::U(bytes as u64))],
+            ),
         }
     }
 
@@ -351,7 +403,9 @@ impl Link {
             // the caller's own accounting, but never occupies the
             // horizon — concurrent transfers overlap freely.
             self.stats.count_bypass(bytes, class);
-            return Slot { start: now, end: now + secs, queued_secs: 0.0 };
+            let slot = Slot { start: now, end: now + secs, queued_secs: 0.0 };
+            self.trace_slot(&slot, bytes, class);
+            return slot;
         }
         let (start, end) = {
             let mut st = self.state.lock().unwrap();
@@ -363,13 +417,15 @@ impl Link {
         };
         let queued = start - now;
         self.stats.record(secs, queued, end - now, bytes, class);
+        let slot = Slot { start, end, queued_secs: queued };
+        self.trace_slot(&slot, bytes, class);
         if self.clock == LinkClock::Sleep {
             let wall = self.wall_now();
             if end > wall {
                 std::thread::sleep(Duration::from_secs_f64(end - wall));
             }
         }
-        Slot { start, end, queued_secs: queued }
+        slot
     }
 
     /// Seconds until the link drains, measured on the link's own clock:
@@ -517,6 +573,30 @@ mod tests {
         assert_eq!(busy_a, busy_b);
         let wire = Link::wire_secs(55e9, 0.0, total);
         assert!((end_a - 0.25 - wire).abs() < 1e-9, "chunked sum ≈ single wire time");
+    }
+
+    #[test]
+    fn traced_reservations_land_on_the_named_track() {
+        let link = vlink(100e6);
+        let bus = TraceBus::recording();
+        link.set_trace(bus.clone(), "link:test0");
+        link.reserve_at(0.0, 10 << 20, TrafficClass::H2D);
+        link.reserve_at(0.0, 10 << 20, TrafficClass::Demand);
+        assert_eq!(bus.len(), 2);
+        // zero-byte no-op reservations emit nothing
+        link.reserve_at(5.0, 0, TrafficClass::H2D);
+        assert_eq!(bus.len(), 2);
+        let doc = bus.to_chrome_json();
+        assert!(doc.contains("link:test0"), "{doc}");
+        assert!(doc.contains("\"name\":\"h2d\""), "{doc}");
+        // the demand slot queued behind the h2d slot for its wire time
+        assert!(doc.contains("\"queued_secs\":0.104857600"), "{doc}");
+        // an un-wired link records nothing; wiring a disabled bus un-wires
+        let quiet = vlink(100e6);
+        quiet.reserve_at(0.0, 1024, TrafficClass::H2D);
+        link.set_trace(TraceBus::disabled(), "link:test0");
+        link.reserve_at(9.0, 1024, TrafficClass::H2D);
+        assert_eq!(bus.len(), 2);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use super::store::KvChunk;
+use crate::trace::{Arg, TraceBus};
 use crate::vectordb::ChunkId;
 
 /// Which DRAM tier a stats object / telemetry sample belongs to, so the
@@ -453,6 +454,10 @@ pub struct HotTier {
     lru: Mutex<Lru>,
     /// Where budget evictions demote to (the warm tier), if anywhere.
     sink: RwLock<Option<Arc<dyn DemoteSink>>>,
+    /// Trace handle (disabled by default; the store wires it). Only the
+    /// *mutation* paths emit — probes stay untouched so the hot path
+    /// costs nothing extra.
+    trace: Mutex<TraceBus>,
     pub stats: CacheStats,
 }
 
@@ -462,8 +467,15 @@ impl HotTier {
             budget: budget_bytes,
             lru: Mutex::new(Lru::default()),
             sink: RwLock::new(None),
+            trace: Mutex::new(TraceBus::disabled()),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Attach a trace bus; eviction and admission-rejection marks land
+    /// on the `tier:hot` track.
+    pub fn set_trace(&self, trace: TraceBus) {
+        *self.trace.lock().unwrap() = trace;
     }
 
     /// Install (or clear) the demotion sink budget evictions feed. The
@@ -614,6 +626,7 @@ impl HotTier {
             return;
         }
         let sink = self.sink.read().unwrap().clone();
+        let bus = self.trace.lock().unwrap().clone();
         let mut guard = self.lru.lock().unwrap();
         let lru = &mut *guard;
         if lru.gens.get(&id).copied().unwrap_or(0) != seen_gen {
@@ -632,6 +645,8 @@ impl HotTier {
                 if let Some(victim) = victim {
                     if lru.sketch.estimate(id) <= lru.sketch.estimate(victim) {
                         self.stats.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                        drop(guard);
+                        bus.mark("tier:hot", "admit_reject", &[("id", Arg::U(id))]);
                         return;
                     }
                 }
@@ -652,12 +667,16 @@ impl HotTier {
         // until after it drops (see the DemoteSink contract): only the
         // cheap generation snapshot happens in the critical section.
         let mut demotions: Vec<(ChunkId, Arc<KvChunk>, usize, bool, u64)> = Vec::new();
+        let mut evicted: Vec<(ChunkId, usize)> = Vec::new();
         while lru.bytes > self.budget {
             let Some((&oldest, &evict)) = lru.order.iter().next() else { break };
             lru.order.remove(&oldest);
             if let Some(e) = lru.map.remove(&evict) {
                 lru.bytes -= e.cost;
                 self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                if bus.enabled() {
+                    evicted.push((evict, e.cost));
+                }
                 if let Some(sink) = &sink {
                     let gen = sink.prepare(evict);
                     demotions.push((evict, e.chunk, e.file_bytes, e.prefetched, gen));
@@ -665,6 +684,14 @@ impl HotTier {
             }
         }
         drop(guard);
+        // Trace marks only after the LRU lock drops, like the sink work.
+        for (evict, cost) in evicted {
+            bus.mark(
+                "tier:hot",
+                "evict",
+                &[("id", Arg::U(evict)), ("bytes", Arg::U(cost as u64))],
+            );
+        }
         if let Some(sink) = &sink {
             for (evict, chunk, file_bytes, prefetched, gen) in demotions {
                 sink.demote(evict, &chunk, file_bytes, prefetched, gen);

@@ -21,6 +21,7 @@ use anyhow::{Context, Result};
 
 use super::throttle::DeviceThrottle;
 use crate::hwsim::{FaultPlan, Link, StorageProfile, TrafficClass};
+use crate::trace::{Arg, TraceBus};
 use crate::vectordb::ChunkId;
 
 /// Per-device cumulative counters plus live/peak queue-depth gauges
@@ -114,6 +115,11 @@ pub struct Shard {
     /// clean path — reads and writes behave exactly as before faults
     /// existed.
     faults: Mutex<Option<Arc<FaultPlan>>>,
+    /// Trace handle, post-construction like `faults` (the store wires
+    /// it after the shard set exists). Disabled by default; the device
+    /// link carries its own copy with an explicit per-shard track name
+    /// because profile names repeat across shards.
+    trace: Mutex<TraceBus>,
     pub stats: Arc<ShardStats>,
 }
 
@@ -126,6 +132,7 @@ impl Shard {
             dir,
             throttle: Arc::new(DeviceThrottle::new(profile)),
             faults: Mutex::new(None),
+            trace: Mutex::new(TraceBus::disabled()),
             stats: Arc::new(ShardStats::default()),
         })
     }
@@ -135,18 +142,35 @@ impl Shard {
     /// In-flight I/O keeps the old throttle, exactly like the pre-shard
     /// store's profile swap.
     pub(crate) fn with_profile(&self, profile: StorageProfile, enabled: bool) -> Shard {
-        Shard {
+        let shard = Shard {
             index: self.index,
             dir: self.dir.clone(),
             throttle: Arc::new(DeviceThrottle::with_enabled(profile, enabled)),
             faults: Mutex::new(self.faults.lock().unwrap().clone()),
+            trace: Mutex::new(TraceBus::disabled()),
             stats: self.stats.clone(),
-        }
+        };
+        // The fresh throttle owns a fresh, untraced link — rewire it
+        // (and the shard handle) so a profile swap can't silence an
+        // already-attached trace.
+        shard.set_trace(self.trace.lock().unwrap().clone());
+        shard
     }
 
     /// Install (or clear) the shared fault plan.
     pub fn set_faults(&self, plan: Option<Arc<FaultPlan>>) {
         *self.faults.lock().unwrap() = plan;
+    }
+
+    /// Attach a trace bus: shard-level read events plus this device
+    /// link's reservations, on tracks named by shard index (profile
+    /// names repeat across a JBOD of identical devices).
+    pub fn set_trace(&self, trace: TraceBus) {
+        self.throttle.link().set_trace(
+            trace.clone(),
+            format!("link:shard{}:{}", self.index, self.throttle.profile().name),
+        );
+        *self.trace.lock().unwrap() = trace;
     }
 
     fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
@@ -232,6 +256,17 @@ impl Shard {
         self.stats.exit_queue();
         if let Ok((data, device_secs)) = &result {
             self.stats.count_read(data.len(), *device_secs);
+            let bus = self.trace.lock().unwrap().clone();
+            if bus.enabled() {
+                // Unclocked: shard reads run on wall/sleep clocks, so
+                // only the modeled duration and payload are recorded.
+                bus.event(
+                    &format!("shard{}", self.index),
+                    "read",
+                    *device_secs,
+                    &[("id", Arg::U(id)), ("bytes", Arg::U(data.len() as u64))],
+                );
+            }
         }
         result
     }

@@ -38,6 +38,7 @@ use super::warm::{WarmMode, WarmProbe, WarmTier};
 use crate::hwsim::profiles::Q8_DEQUANT_BYTES_PER_SEC;
 use crate::hwsim::{FaultPlan, Link, LinkClock, StorageProfile, TrafficClass};
 use crate::manifest::ModelConfig;
+use crate::trace::{Arg, TraceBus};
 use crate::util::aio::{IoPool, Pending};
 use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
 use crate::vectordb::ChunkId;
@@ -240,6 +241,11 @@ pub struct KvStore {
     /// rung of the degradation ladder. 0 prices recompute as free; the
     /// fleet layer re-prices it per worker either way.
     recompute_secs_per_token: f64,
+    /// Trace handle ([`crate::trace::TraceBus`]); disabled by default.
+    /// [`KvStore::set_trace`] fans it out to the shards, the host bus,
+    /// and both DRAM tiers, and the engine/overlap layers reach it via
+    /// [`KvStore::trace`] — so `LoaderCtx` needs no extra field.
+    trace: TraceBus,
     pub stats: Arc<StoreStats>,
 }
 
@@ -494,8 +500,35 @@ impl KvStore {
             max_retries: 3,
             retry_backoff_secs: 0.002,
             recompute_secs_per_token: 0.0,
+            trace: TraceBus::disabled(),
             stats: Arc::new(StoreStats::default()),
         })
+    }
+
+    /// Wire the whole storage stack to a trace bus: per-chunk tier
+    /// outcomes at store level, per-shard device-link reservations, the
+    /// shared host bus, and both DRAM tiers' eviction traffic. Call
+    /// after the tier/profile setters — replacing a tier or profile
+    /// builds untraced components.
+    pub fn set_trace(&mut self, trace: TraceBus) {
+        self.bus.set_trace(trace.clone(), "link:host-bus");
+        for shard in &self.shards {
+            shard.set_trace(trace.clone());
+        }
+        if let Some(hot) = &self.hot {
+            hot.set_trace(trace.clone());
+        }
+        if let Some(warm) = &self.warm {
+            warm.set_trace(trace.clone());
+        }
+        self.trace = trace;
+    }
+
+    /// The store's trace handle (disabled unless [`KvStore::set_trace`]
+    /// wired a recording bus) — how the engine and overlap layers reach
+    /// the one shared bus.
+    pub fn trace(&self) -> &TraceBus {
+        &self.trace
     }
 
     /// Install (or clear) a deterministic fault plan. The plan is
@@ -1257,6 +1290,40 @@ impl KvStore {
                     };
                     out.push(Loaded::clean(chunk, 0.0, file_bytes, true, false, 0.0, 0.0, shard));
                 }
+            }
+        }
+        if self.trace.enabled() {
+            // One unclocked event per chunk outcome, named by ladder
+            // rung (precedence mirrors the degradation order). Modeled
+            // durations only — the store runs on wall clocks, so a real
+            // timestamp here would break trace byte-identity.
+            for (l, &id) in out.iter().zip(ids) {
+                let name = if l.recomputed {
+                    "recompute"
+                } else if l.retries > 0 {
+                    "flash_retry"
+                } else if l.from_warm {
+                    "warm_hit"
+                } else if l.from_cache {
+                    "hot_hit"
+                } else {
+                    "flash_read"
+                };
+                let dur = l.device_secs
+                    + l.dequant_secs
+                    + l.q4_dequant_secs
+                    + l.recompute_secs
+                    + l.retry_backoff_secs;
+                self.trace.event(
+                    "store",
+                    name,
+                    dur,
+                    &[
+                        ("id", Arg::U(id)),
+                        ("shard", Arg::U(l.shard as u64)),
+                        ("bytes", Arg::U(l.file_bytes as u64)),
+                    ],
+                );
             }
         }
         Ok(out)

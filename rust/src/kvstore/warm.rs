@@ -48,6 +48,7 @@ use super::cache::{CacheStats, DemoteSink, TierKind};
 use super::quant::{self, Q4Chunk, QuantChunk};
 use super::store::KvChunk;
 use crate::hwsim::{Link, TrafficClass};
+use crate::trace::{Arg, TraceBus};
 use crate::vectordb::ChunkId;
 
 /// Which codec the warm tier quantizes *new* admissions with
@@ -187,6 +188,9 @@ pub struct WarmTier {
     /// Codec for future admissions ([`WarmMode`]); atomic so the
     /// `--warm-mode` knob works after the tier is shared via `Arc`.
     q4_mode: AtomicBool,
+    /// Trace handle (disabled by default; the store wires it). Only the
+    /// admission/eviction paths emit — probes stay untouched.
+    trace: Mutex<TraceBus>,
     pub stats: CacheStats,
 }
 
@@ -197,8 +201,15 @@ impl WarmTier {
             lru: Mutex::new(WarmLru::default()),
             bus: None,
             q4_mode: AtomicBool::new(false),
+            trace: Mutex::new(TraceBus::disabled()),
             stats: CacheStats::for_tier(TierKind::Warm),
         }
+    }
+
+    /// Attach a trace bus; quantize-admission and eviction marks land
+    /// on the `tier:warm` track.
+    pub fn set_trace(&self, trace: TraceBus) {
+        *self.trace.lock().unwrap() = trace;
     }
 
     /// Select the codec for future admissions (`--warm-mode q8|q4`).
@@ -371,6 +382,15 @@ impl WarmTier {
             self.stats.add_link_queued_secs(slot.queued_secs);
         }
         let admitted = self.admit(id, payload, file_bytes, prefetched, seen_gen);
+        if admitted {
+            let bus = self.trace.lock().unwrap().clone();
+            bus.event(
+                "tier:warm",
+                "demote_admit",
+                quant_secs,
+                &[("id", Arg::U(id)), ("bytes", Arg::U(payload_bytes as u64))],
+            );
+        }
         (admitted, quant_secs)
     }
 
@@ -421,12 +441,25 @@ impl WarmTier {
         if prefetched {
             self.stats.prefetch_inserts.fetch_add(1, Ordering::Relaxed);
         }
+        let mut evicted: Vec<(ChunkId, usize)> = Vec::new();
         while lru.bytes > self.budget {
             let Some((&oldest, &evict)) = lru.order.iter().next() else { break };
             lru.order.remove(&oldest);
             if let Some(e) = lru.map.remove(&evict) {
                 lru.bytes -= e.cost;
                 self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                evicted.push((evict, e.cost));
+            }
+        }
+        drop(guard);
+        if !evicted.is_empty() {
+            let bus = self.trace.lock().unwrap().clone();
+            for (evict, cost) in evicted {
+                bus.mark(
+                    "tier:warm",
+                    "evict",
+                    &[("id", Arg::U(evict)), ("bytes", Arg::U(cost as u64))],
+                );
             }
         }
         true

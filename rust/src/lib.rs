@@ -29,6 +29,7 @@ pub mod kvstore;
 pub mod manifest;
 pub mod runtime;
 pub mod tokenizer;
+pub mod trace;
 pub mod vectordb;
 pub mod workload;
 

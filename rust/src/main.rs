@@ -79,7 +79,18 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                            on each worker's modeled PCIe link [on], or
                            grant every transfer its wire time with no
                            queueing — the pre-interconnect flat charge
-                           [off]; default on)";
+                           [off]; default on)
+               --trace PATH (write a Chrome/Perfetto trace-event JSON:
+                           scheduler queueing, per-chunk tier outcomes,
+                           link reservations with their queued-vs-wire
+                           split, per-worker dispatch windows, and a
+                           per-request critical-path attribution report;
+                           same seed + config => byte-identical file)
+               --metrics-json PATH (dump the run's full PhaseBreakdown,
+                           per-shard stats, host-bus/link snapshots and
+                           fleet worker reports as one JSON document)
+               --smoke (CI-sized defaults: 8 requests over 8 docs of
+                           256 tokens, unless overridden explicitly)";
 
 fn storage_profile(name: &str) -> Result<StorageProfile> {
     Ok(match name {
@@ -125,10 +136,11 @@ fn info() -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let config = args.str("config", "tiny");
-    let requests = args.usize("requests", 16);
+    let smoke = args.flag("smoke");
+    let requests = args.usize("requests", if smoke { 8 } else { 16 });
     let batch = args.usize("batch", 4);
-    let docs = args.usize("docs", 24);
-    let doc_tokens = args.usize("doc-tokens", 512);
+    let docs = args.usize("docs", if smoke { 8 } else { 24 });
+    let doc_tokens = args.usize("doc-tokens", if smoke { 256 } else { 512 });
     let mode_name = args.str("mode", "matkv");
     let overlap = args.flag("overlap");
     let shards = args.usize("shards", 1);
@@ -226,6 +238,16 @@ fn serve(args: &Args) -> Result<()> {
         // through its roofline on top of this store-level charge).
         kv.set_recompute_model(50e-6);
     }
+    // The trace handle threads through every layer; wired LAST so the
+    // tiers/links it fans out to are the ones this run actually uses.
+    let trace_path = args.opt("trace").map(std::path::PathBuf::from);
+    let metrics_path = args.opt("metrics-json").map(std::path::PathBuf::from);
+    let bus = if trace_path.is_some() {
+        matkv::trace::TraceBus::recording()
+    } else {
+        matkv::trace::TraceBus::disabled()
+    };
+    kv.set_trace(bus.clone());
     let opts = EngineOptions::for_config(&m, &config)?;
     let engine = Engine::new(&m, opts, kv, corpus.texts())?;
 
@@ -263,6 +285,7 @@ fn serve(args: &Args) -> Result<()> {
             },
         );
         f.set_contention(pcie_contention);
+        f.set_trace(bus.clone());
         if let Some(plan) = &faults {
             f.set_faults(plan.clone());
             let (kv, plan) = (engine.kv.clone(), plan.clone());
@@ -309,6 +332,7 @@ fn serve(args: &Args) -> Result<()> {
             estimator,
         },
     );
+    sched.set_trace(bus.clone());
     if rate > 0.0 {
         let mut gen =
             ArrivalGen::new(TurboRagProfile::default(), corpus.n_topics, 1.0, rate, 7);
@@ -484,6 +508,7 @@ fn serve(args: &Args) -> Result<()> {
 
     // Fleet simulation: dispatch the exact schedule the engine just
     // served across the worker pool on the virtual clock.
+    let mut fleet_report = None;
     if let Some(fleet) = fleet.as_mut() {
         fleet.seed_resident(&resident_before.unwrap_or_default());
         let materialized = materialized_before.unwrap_or_default();
@@ -539,10 +564,53 @@ fn serve(args: &Args) -> Result<()> {
                 rep.metrics.degraded_tokens,
             );
         }
+        fleet_report = Some(rep);
     }
 
     for r in responses.iter().take(2) {
         println!("  req {} -> {:?} (docs {:?})", r.request_id, r.text, r.retrieved);
+    }
+
+    if let Some(path) = &trace_path {
+        std::fs::write(path, bus.to_chrome_json())?;
+        eprintln!("[trace] {} events, {} request paths -> {}", bus.len(), bus.paths().len(), path.display());
+    }
+    if let Some(path) = &metrics_path {
+        // One document: the exhaustive PhaseBreakdown, per-shard device
+        // stats, the shared host bus, and (when a fleet dispatched) the
+        // full fleet report with per-worker link snapshots.
+        use std::sync::atomic::Ordering::Relaxed;
+        let shard_rows: Vec<String> = engine
+            .kv
+            .shards()
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"shard\":{},\"reads\":{},\"bytes_read\":{},\"device_secs\":{:.9},\
+                     \"peak_queue\":{},\"backlog_secs\":{:.9},\"writes\":{},\"link\":{}}}",
+                    s.index(),
+                    s.stats.reads.load(Relaxed),
+                    s.stats.bytes_read.load(Relaxed),
+                    s.stats.read_device_secs(),
+                    s.stats.peak_queue_depth.load(Relaxed),
+                    s.backlog_secs(),
+                    s.stats.writes.load(Relaxed),
+                    s.link().stats.snapshot().to_json(),
+                )
+            })
+            .collect();
+        let doc = format!(
+            "{{\"mode\":\"{}\",\"config\":\"{}\",\"phases\":{},\"shards\":[{}],\
+             \"host_bus\":{},\"fleet\":{}}}",
+            mode_name,
+            config,
+            metrics.to_json(),
+            shard_rows.join(","),
+            engine.kv.bus().stats.snapshot().to_json(),
+            fleet_report.as_ref().map_or_else(|| "null".to_string(), |r| r.to_json()),
+        );
+        std::fs::write(path, doc)?;
+        eprintln!("[metrics] -> {}", path.display());
     }
     Ok(())
 }

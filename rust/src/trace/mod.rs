@@ -1,0 +1,615 @@
+//! Deterministic tracing subsystem — the serving stack's flight
+//! recorder.
+//!
+//! Every aggregate the simulator reports ([`PhaseBreakdown`] counters,
+//! per-link telemetry) answers *how much*; this module answers *when*
+//! and *why*: a [`TraceBus`] collects typed spans and instant events
+//! from every layer — request lifecycle on the scheduler's virtual
+//! clock, per-chunk tier outcomes in the store, link reservations with
+//! their queued-vs-wire split, per-worker load/upload/prefill/decode
+//! windows in the fleet — and exports them as Chrome trace-event JSON
+//! that Perfetto / `chrome://tracing` loads directly, plus a
+//! per-request **critical-path attribution** report (each request's
+//! latency decomposed into queue / storage / bus / PCIe / compute /
+//! retry seconds that sum to its end-to-end latency exactly).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero behavior change.** The handle is an `Option<Arc<..>>`;
+//!    disabled it records nothing, allocates nothing, and every
+//!    instrumented path is pinned bit-identical to the pre-trace code
+//!    by the existing replay tests. Callers that must build args or
+//!    track names check [`TraceBus::enabled`] first, so the disabled
+//!    path is one branch.
+//! 2. **Byte-identical exports.** Two runs with the same seed + config
+//!    must produce the same file. Events from *virtual-clock* contexts
+//!    (scheduler, fleet dispatch, Virtual-clock links) carry their real
+//!    timestamps. Events from *wall-clock* contexts (store tier
+//!    outcomes, Sleep/Account links, the overlap pipeline) are
+//!    recorded **unclocked** — deterministic payload only, no wall
+//!    timestamps — and the exporter lays each unclocked track out
+//!    sequentially (cursor += duration) after sorting its events by
+//!    their serialized body, so thread interleaving can never reorder
+//!    the file. Timestamps are monotone per track by construction
+//!    either way.
+//! 3. **Cheap when recording.** One mutex push per event; formatting
+//!    happens once, at export.
+//!
+//! [`PhaseBreakdown`]: crate::coordinator::PhaseBreakdown
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::LogHistogram;
+
+/// One argument value on a trace event. Floats format at fixed
+/// precision so the exported bytes are stable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl Arg {
+    fn write_json(&self, out: &mut String) {
+        match self {
+            Arg::U(v) => {
+                let _ = write!(out, "{v}");
+            }
+            Arg::F(v) => {
+                let _ = write!(out, "{v:.9}");
+            }
+            Arg::S(v) => {
+                out.push('"');
+                escape_into(v, out);
+                out.push('"');
+            }
+        }
+    }
+}
+
+/// Minimal JSON string escaping (track/event names are code-controlled;
+/// this keeps user-ish strings like queries safe anyway).
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// One recorded event. `start` is `Some(virtual_secs)` for clocked
+/// events; `None` marks an unclocked event whose timestamp the exporter
+/// synthesizes (sequential layout per track).
+#[derive(Debug, Clone)]
+struct TraceEvent {
+    track: String,
+    name: &'static str,
+    start: Option<f64>,
+    dur_secs: f64,
+    instant: bool,
+    args: Vec<(&'static str, Arg)>,
+}
+
+impl TraceEvent {
+    /// The event body without any timestamp — the exporter's
+    /// deterministic sort key for unclocked events, and the tail of the
+    /// emitted JSON either way.
+    fn body(&self) -> String {
+        let mut out = String::with_capacity(64);
+        let _ = write!(out, "\"name\":\"{}\"", self.name);
+        if self.instant {
+            out.push_str(",\"ph\":\"i\",\"s\":\"t\"");
+        } else {
+            let _ = write!(out, ",\"ph\":\"X\",\"dur\":{:.3}", self.dur_secs * 1e6);
+        }
+        if !self.args.is_empty() {
+            out.push_str(",\"args\":{");
+            for (i, (k, v)) in self.args.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{k}\":");
+                v.write_json(&mut out);
+            }
+            out.push('}');
+        }
+        out
+    }
+}
+
+/// A traced request's end-to-end latency, decomposed along its critical
+/// path. The six components are constructed from the dispatch
+/// timeline's own arithmetic, so they sum to `done - arrival` exactly
+/// (modulo float rounding — see [`RequestPath::sum_abs_err`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestPath {
+    pub request_id: u64,
+    /// Worker track name the request executed on.
+    pub worker: String,
+    pub arrival_secs: f64,
+    pub done_secs: f64,
+    /// Waiting: in the scheduler queue before release, plus at the
+    /// device behind an earlier batch's compute.
+    pub queue_secs: f64,
+    /// Storage-tier load (flash read / dequant path, host side).
+    pub storage_secs: f64,
+    /// Seconds the H2D upload spent *queued* behind earlier traffic on
+    /// the worker's PCIe link — the contention share.
+    pub bus_secs: f64,
+    /// H2D wire time (the upload's un-queued share).
+    pub pcie_secs: f64,
+    /// Prefill + decode on the device.
+    pub compute_secs: f64,
+    /// Degradation surcharge: recompute of lost chunks, retry backoff.
+    pub retry_secs: f64,
+}
+
+impl RequestPath {
+    pub fn latency_secs(&self) -> f64 {
+        self.done_secs - self.arrival_secs
+    }
+
+    /// Sum of the six attributed components.
+    pub fn components_sum(&self) -> f64 {
+        self.queue_secs
+            + self.storage_secs
+            + self.bus_secs
+            + self.pcie_secs
+            + self.compute_secs
+            + self.retry_secs
+    }
+
+    /// |components − latency| — the acceptance criterion is < 1e-6 s.
+    pub fn sum_abs_err(&self) -> f64 {
+        (self.components_sum() - self.latency_secs()).abs()
+    }
+
+    /// The component carrying the largest share — what the waterfall
+    /// calls the bottleneck.
+    pub fn dominant(&self) -> (&'static str, f64) {
+        let parts = [
+            ("queue", self.queue_secs),
+            ("storage", self.storage_secs),
+            ("bus", self.bus_secs),
+            ("pcie", self.pcie_secs),
+            ("compute", self.compute_secs),
+            ("retry", self.retry_secs),
+        ];
+        let mut best = parts[0];
+        for p in &parts[1..] {
+            if p.1 > best.1 {
+                best = *p;
+            }
+        }
+        best
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        let _ = write!(
+            out,
+            "{{\"request\":{},\"worker\":\"{}\",\"arrival_secs\":{:.9},\
+             \"done_secs\":{:.9},\"latency_secs\":{:.9},\"queue_secs\":{:.9},\
+             \"storage_secs\":{:.9},\"bus_secs\":{:.9},\"pcie_secs\":{:.9},\
+             \"compute_secs\":{:.9},\"retry_secs\":{:.9},\"dominant\":\"{}\"}}",
+            self.request_id,
+            self.worker,
+            self.arrival_secs,
+            self.done_secs,
+            self.latency_secs(),
+            self.queue_secs,
+            self.storage_secs,
+            self.bus_secs,
+            self.pcie_secs,
+            self.compute_secs,
+            self.retry_secs,
+            self.dominant().0,
+        );
+        out
+    }
+}
+
+#[derive(Debug, Default)]
+struct TraceInner {
+    events: Mutex<Vec<TraceEvent>>,
+    paths: Mutex<Vec<RequestPath>>,
+}
+
+/// The recording handle every layer holds. Cloning shares the buffer
+/// (`Option<Arc>`); the disabled bus is a no-op whose record methods
+/// cost one branch.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBus {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl TraceBus {
+    /// A recording bus.
+    pub fn recording() -> TraceBus {
+        TraceBus { inner: Some(Arc::new(TraceInner::default())) }
+    }
+
+    /// The no-op bus (what every subsystem starts with).
+    pub fn disabled() -> TraceBus {
+        TraceBus { inner: None }
+    }
+
+    /// Whether events are being kept. Call this before building track
+    /// names or args on hot paths.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        if let Some(inner) = &self.inner {
+            inner.events.lock().unwrap().push(ev);
+        }
+    }
+
+    /// Clocked span: `start` is on the deterministic virtual clock.
+    pub fn span(
+        &self,
+        track: &str,
+        name: &'static str,
+        start_secs: f64,
+        dur_secs: f64,
+        args: &[(&'static str, Arg)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent {
+            track: track.to_string(),
+            name,
+            start: Some(start_secs),
+            dur_secs,
+            instant: false,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Clocked instant event.
+    pub fn instant(
+        &self,
+        track: &str,
+        name: &'static str,
+        ts_secs: f64,
+        args: &[(&'static str, Arg)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent {
+            track: track.to_string(),
+            name,
+            start: Some(ts_secs),
+            dur_secs: 0.0,
+            instant: true,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Unclocked span: wall-clock context, deterministic payload only.
+    /// The exporter lays these out sequentially per track.
+    pub fn event(
+        &self,
+        track: &str,
+        name: &'static str,
+        dur_secs: f64,
+        args: &[(&'static str, Arg)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent {
+            track: track.to_string(),
+            name,
+            start: None,
+            dur_secs,
+            instant: false,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Unclocked instant event.
+    pub fn mark(&self, track: &str, name: &'static str, args: &[(&'static str, Arg)]) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent {
+            track: track.to_string(),
+            name,
+            start: None,
+            dur_secs: 0.0,
+            instant: true,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Record one request's critical-path decomposition (the fleet
+    /// dispatcher, once per completed request).
+    pub fn request_path(&self, path: RequestPath) {
+        if let Some(inner) = &self.inner {
+            inner.paths.lock().unwrap().push(path);
+        }
+    }
+
+    /// Events recorded so far (0 when disabled).
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            Some(inner) => inner.events.lock().unwrap().len(),
+            None => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the attribution records, sorted by request id (then
+    /// arrival, for requeue-style duplicates) — deterministic.
+    pub fn paths(&self) -> Vec<RequestPath> {
+        let mut v = match &self.inner {
+            Some(inner) => inner.paths.lock().unwrap().clone(),
+            None => Vec::new(),
+        };
+        v.sort_by(|a, b| {
+            a.request_id
+                .cmp(&b.request_id)
+                .then(a.arrival_secs.total_cmp(&b.arrival_secs))
+        });
+        v
+    }
+
+    /// Largest attribution error across recorded requests (0 if none).
+    pub fn max_attribution_err(&self) -> f64 {
+        self.paths().iter().map(|p| p.sum_abs_err()).fold(0.0, f64::max)
+    }
+
+    /// Export everything as Chrome trace-event JSON (Perfetto /
+    /// `chrome://tracing` load it directly). The layout is fully
+    /// deterministic:
+    ///
+    /// * tracks sort by name and become `tid` 1..N (named via `"M"`
+    ///   metadata rows);
+    /// * clocked events sort by (start, body) within their track;
+    /// * unclocked events sort by their serialized body, then lay out
+    ///   sequentially (`ts = cursor; cursor += dur`) — so wall-clock
+    ///   thread interleaving never changes a byte of the file, and
+    ///   timestamps are monotone per track.
+    ///
+    /// The attribution report and merged latency histograms ride in a
+    /// top-level `"matkv"` object Perfetto ignores.
+    pub fn to_chrome_json(&self) -> String {
+        let events = match &self.inner {
+            Some(inner) => inner.events.lock().unwrap().clone(),
+            None => Vec::new(),
+        };
+        let mut tracks: BTreeMap<String, Vec<TraceEvent>> = BTreeMap::new();
+        for e in events {
+            tracks.entry(e.track.clone()).or_default().push(e);
+        }
+
+        let mut rows: Vec<String> = Vec::new();
+        // Metadata first: one thread_name row per track, in tid order.
+        for (tid, name) in tracks.keys().enumerate() {
+            let mut esc = String::new();
+            escape_into(name, &mut esc);
+            rows.push(format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                tid + 1,
+                esc
+            ));
+        }
+        for (tid, (_, evs)) in tracks.into_iter().enumerate() {
+            let tid = tid + 1;
+            let mut clocked: Vec<(f64, String)> = Vec::new();
+            let mut unclocked: Vec<(f64, String)> = Vec::new();
+            for e in evs {
+                match e.start {
+                    Some(s) => clocked.push((s, e.body())),
+                    None => unclocked.push((e.dur_secs, e.body())),
+                }
+            }
+            clocked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (start, body) in clocked {
+                rows.push(format!(
+                    "{{\"pid\":1,\"tid\":{tid},\"ts\":{:.3},{body}}}",
+                    start * 1e6
+                ));
+            }
+            unclocked.sort_by(|a, b| a.1.cmp(&b.1).then(a.0.total_cmp(&b.0)));
+            let mut cursor = 0.0f64;
+            for (dur, body) in unclocked {
+                rows.push(format!(
+                    "{{\"pid\":1,\"tid\":{tid},\"ts\":{:.3},{body}}}",
+                    cursor * 1e6
+                ));
+                cursor += dur;
+            }
+        }
+
+        let paths = self.paths();
+        let path_rows: Vec<String> = paths.iter().map(RequestPath::to_json).collect();
+        // Mergeable latency distributions: one log-bucketed histogram
+        // per worker, folded into the fleet-wide histogram via
+        // LogHistogram::merge — no per-sample storage in the document.
+        let mut by_worker: BTreeMap<String, LogHistogram> = BTreeMap::new();
+        for p in &paths {
+            by_worker.entry(p.worker.clone()).or_default().record(p.latency_secs());
+        }
+        let mut fleet = LogHistogram::default();
+        for h in by_worker.values() {
+            fleet.merge(h);
+        }
+        let worker_rows: Vec<String> = by_worker
+            .iter()
+            .map(|(w, h)| {
+                let mut esc = String::new();
+                escape_into(w, &mut esc);
+                format!("\"{}\":{}", esc, h.to_json())
+            })
+            .collect();
+
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}],\
+             \"matkv\":{{\"events\":{},\"critical_path\":[{}],\
+             \"max_attribution_err_secs\":{:.12},\
+             \"latency_histograms\":{{\"fleet\":{},\"workers\":{{{}}}}}}}}}",
+            rows.join(",\n"),
+            rows.len(),
+            path_rows.join(",\n"),
+            self.max_attribution_err(),
+            fleet.to_json(),
+            worker_rows.join(","),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path(id: u64, q: f64, s: f64, b: f64, p: f64, c: f64, r: f64) -> RequestPath {
+        RequestPath {
+            request_id: id,
+            worker: "worker0:H100".into(),
+            arrival_secs: 0.0,
+            done_secs: q + s + b + p + c + r,
+            queue_secs: q,
+            storage_secs: s,
+            bus_secs: b,
+            pcie_secs: p,
+            compute_secs: c,
+            retry_secs: r,
+        }
+    }
+
+    #[test]
+    fn disabled_bus_records_nothing_and_exports_empty() {
+        let bus = TraceBus::disabled();
+        assert!(!bus.enabled());
+        bus.span("t", "x", 0.0, 1.0, &[]);
+        bus.mark("t", "y", &[("k", Arg::U(1))]);
+        bus.request_path(path(1, 0.1, 0.0, 0.0, 0.0, 0.0, 0.0));
+        assert_eq!(bus.len(), 0);
+        assert!(bus.paths().is_empty());
+        let doc = bus.to_chrome_json();
+        assert!(doc.contains("\"traceEvents\":[]"), "{doc}");
+    }
+
+    #[test]
+    fn export_is_independent_of_unclocked_insertion_order() {
+        // Simulates IO-pool nondeterminism: the same multiset of
+        // unclocked events inserted in two different orders must export
+        // byte-identically.
+        let record = |ids: &[u64]| {
+            let bus = TraceBus::recording();
+            for &id in ids {
+                bus.event(
+                    "store",
+                    "flash_read",
+                    0.001 * id as f64,
+                    &[("chunk", Arg::U(id))],
+                );
+                bus.event("link:shard0", "demand", 0.002, &[("bytes", Arg::U(100 + id))]);
+            }
+            bus.to_chrome_json()
+        };
+        let a = record(&[1, 2, 3, 4, 5]);
+        let b = record(&[4, 2, 5, 1, 3]);
+        assert_eq!(a, b, "unclocked export must not depend on thread arrival order");
+    }
+
+    #[test]
+    fn clocked_events_sort_by_timestamp_per_track() {
+        let bus = TraceBus::recording();
+        bus.instant("sched", "release", 2.0, &[]);
+        bus.instant("sched", "queued", 1.0, &[]);
+        bus.instant("sched", "queued", 0.5, &[]);
+        let doc = bus.to_chrome_json();
+        let i1 = doc.find("\"ts\":500000.000").expect("0.5s event");
+        let i2 = doc.find("\"ts\":1000000.000").expect("1.0s event");
+        let i3 = doc.find("\"ts\":2000000.000").expect("2.0s event");
+        assert!(i1 < i2 && i2 < i3, "clocked rows must be time-ordered");
+    }
+
+    #[test]
+    fn unclocked_layout_is_sequential_and_monotone() {
+        let bus = TraceBus::recording();
+        bus.event("store", "a", 0.5, &[]);
+        bus.event("store", "b", 0.25, &[]);
+        let doc = bus.to_chrome_json();
+        // sorted by body: "a" first at ts 0, then "b" at 0.5s
+        let ia = doc.find("\"name\":\"a\"").unwrap();
+        let ib = doc.find("\"name\":\"b\"").unwrap();
+        assert!(ia < ib);
+        assert!(doc.contains("\"ts\":0.000,\"name\":\"a\""), "{doc}");
+        assert!(doc.contains("\"ts\":500000.000,\"name\":\"b\""), "{doc}");
+    }
+
+    #[test]
+    fn tracks_become_named_tids() {
+        let bus = TraceBus::recording();
+        bus.mark("zeta", "z", &[]);
+        bus.mark("alpha", "a", &[]);
+        let doc = bus.to_chrome_json();
+        // BTreeMap order: alpha=1, zeta=2
+        assert!(doc.contains("\"tid\":1,\"name\":\"thread_name\",\"args\":{\"name\":\"alpha\"}"));
+        assert!(doc.contains("\"tid\":2,\"name\":\"thread_name\",\"args\":{\"name\":\"zeta\"}"));
+    }
+
+    #[test]
+    fn attribution_components_sum_to_latency() {
+        let p = path(7, 0.125, 0.25, 0.0625, 0.03125, 0.5, 0.015625);
+        assert!(p.sum_abs_err() < 1e-12, "{}", p.sum_abs_err());
+        assert_eq!(p.dominant().0, "compute");
+        let bus = TraceBus::recording();
+        bus.request_path(p.clone());
+        bus.request_path(path(3, 1.0, 0.0, 0.0, 0.0, 0.1, 0.0));
+        assert!(bus.max_attribution_err() < 1e-12);
+        // paths() sorts by request id
+        let ids: Vec<u64> = bus.paths().iter().map(|p| p.request_id).collect();
+        assert_eq!(ids, vec![3, 7]);
+        assert!(bus.to_chrome_json().contains("\"dominant\":\"queue\""));
+    }
+
+    #[test]
+    fn same_recording_sequence_exports_byte_identically() {
+        let run = || {
+            let bus = TraceBus::recording();
+            bus.instant("sched", "queued", 0.015, &[("req", Arg::U(4))]);
+            bus.span(
+                "worker0:H100",
+                "prefill",
+                0.5,
+                0.125,
+                &[("batch", Arg::U(0)), ("reqs", Arg::U(4))],
+            );
+            bus.event("store", "hot_hit", 0.0, &[("chunk", Arg::U(9))]);
+            bus.request_path(path(4, 0.2, 0.1, 0.0, 0.05, 0.375, 0.0));
+            bus.to_chrome_json()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn string_args_escape() {
+        let bus = TraceBus::recording();
+        bus.mark("t", "q", &[("text", Arg::S("a\"b\\c\nd".into()))]);
+        assert!(bus.to_chrome_json().contains("a\\\"b\\\\c\\nd"));
+    }
+}
