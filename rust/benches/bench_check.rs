@@ -1,0 +1,190 @@
+//! `bench_check` — the bench-regression gate.
+//!
+//! Each `fig_*` smoke bench writes a JSON document; this binary
+//! normalizes every document into the regression matrix
+//! (`matkv::obs::check::normalize`), compares it against the committed
+//! baseline in `testdata/baselines/<bench>.json`, and exits nonzero
+//! with one named, direction-aware line per violated tolerance band.
+//!
+//! ```text
+//! cargo bench --bench bench_check -- --all                  # the CI gate
+//! cargo bench --bench bench_check -- --bench fig_bus        # one bench
+//! cargo bench --bench bench_check -- --all --bless          # rewrite baselines
+//! cargo bench --bench bench_check -- --self-test            # prove the gate bites
+//! ```
+//!
+//! Flags: `--dir PATH` is where the smoke JSON files live (default
+//! `.`); `--baselines PATH` is the baseline directory (default
+//! `testdata/baselines`). `--bless` rewrites each baseline from the
+//! current smoke output — measured `higher`/`lower` bands get the
+//! machine's own values, invariant bands keep their semantic bounds.
+//! `--self-test` needs no smoke output: for every committed baseline it
+//! synthesizes a satisfying run (must pass) and then perturbs each
+//! metric one at a time past its band (must fail, naming exactly that
+//! metric).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use matkv::obs::check::{bless, compare, normalize, Baseline, BENCHES};
+use matkv::util::cli::Args;
+use matkv::util::json::Json;
+
+fn load_current(dir: &str, bench: &str, smoke_file: &str) -> Result<BTreeMap<String, f64>> {
+    let path = Path::new(dir).join(smoke_file);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("{bench}: no smoke output at {} (run the smoke benches first, or pass --dir)", path.display()))?;
+    let doc = Json::parse(&text).with_context(|| format!("{bench}: bad JSON in {smoke_file}"))?;
+    let norms = normalize(bench, &doc).with_context(|| format!("{bench}: normalize failed"))?;
+    Ok(norms.into_iter().map(|n| (n.name, n.current)).collect())
+}
+
+fn load_baseline(baselines: &str, bench: &str) -> Result<Baseline> {
+    let path = Path::new(baselines).join(format!("{bench}.json"));
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "{bench}: no committed baseline at {} (bless one with --bless)",
+            path.display()
+        )
+    })?;
+    let b = Baseline::parse(&text).with_context(|| format!("{bench}: bad baseline"))?;
+    if b.bench != bench {
+        bail!("{bench}: baseline file claims bench {:?}", b.bench);
+    }
+    Ok(b)
+}
+
+/// Check one bench; prints named diffs, returns how many there were.
+fn check_one(dir: &str, baselines: &str, bench: &str, smoke_file: &str) -> Result<usize> {
+    let baseline = load_baseline(baselines, bench)?;
+    let current = load_current(dir, bench, smoke_file)?;
+    let diffs = compare(&baseline, &current);
+    if diffs.is_empty() {
+        println!("[bench_check] {bench}: OK ({} metrics within bands)", baseline.metrics.len());
+    } else {
+        for d in &diffs {
+            println!("[bench_check] REGRESSION {bench}.{}: {}", d.metric, d.message);
+        }
+    }
+    Ok(diffs.len())
+}
+
+fn bless_one(dir: &str, baselines: &str, bench: &str, smoke_file: &str) -> Result<()> {
+    let path = Path::new(dir).join(smoke_file);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("{bench}: no smoke output at {}", path.display()))?;
+    let doc = Json::parse(&text)?;
+    let norms = normalize(bench, &doc)?;
+    let baseline = bless(bench, &norms);
+    // a blessed baseline must pass against the run that produced it
+    let current: BTreeMap<String, f64> = norms.iter().map(|n| (n.name.clone(), n.current)).collect();
+    let diffs = compare(&baseline, &current);
+    if !diffs.is_empty() {
+        for d in &diffs {
+            println!("[bench_check] {bench}.{}: {}", d.metric, d.message);
+        }
+        bail!("{bench}: run violates its own invariants; not blessing a broken baseline");
+    }
+    std::fs::create_dir_all(baselines)?;
+    let out = Path::new(baselines).join(format!("{bench}.json"));
+    std::fs::write(&out, baseline.to_json())?;
+    println!("[bench_check] blessed {} ({} bands)", out.display(), baseline.metrics.len());
+    Ok(())
+}
+
+/// Prove the gate bites without any smoke output: every committed
+/// baseline passes a synthesized satisfying run, and perturbing any one
+/// metric past its band fails with exactly that metric named.
+fn self_test(baselines: &str) -> Result<usize> {
+    let mut failures = 0usize;
+    let mut bands = 0usize;
+    for &(bench, _) in BENCHES {
+        let baseline = load_baseline(baselines, bench)?;
+        let good: BTreeMap<String, f64> = baseline
+            .metrics
+            .iter()
+            .map(|(k, b)| (k.clone(), b.satisfying_value()))
+            .collect();
+        let diffs = compare(&baseline, &good);
+        if !diffs.is_empty() {
+            for d in &diffs {
+                println!("[self-test] {bench}: satisfying run still failed {}: {}", d.metric, d.message);
+            }
+            failures += 1;
+            continue;
+        }
+        for (name, band) in &baseline.metrics {
+            bands += 1;
+            let mut perturbed = good.clone();
+            perturbed.insert(name.clone(), band.violating_value());
+            let diffs = compare(&baseline, &perturbed);
+            if diffs.len() != 1 || diffs[0].metric != *name {
+                println!(
+                    "[self-test] {bench}: perturbing {name} produced {:?} instead of exactly \
+                     [{name}]",
+                    diffs.iter().map(|d| d.metric.clone()).collect::<Vec<_>>()
+                );
+                failures += 1;
+            } else if !diffs[0].message.contains("direction=") {
+                println!(
+                    "[self-test] {bench}.{name}: diff is not direction-aware: {}",
+                    diffs[0].message
+                );
+                failures += 1;
+            }
+        }
+    }
+    println!(
+        "[self-test] {} benches, {bands} bands perturbed one at a time, {failures} failures",
+        BENCHES.len()
+    );
+    Ok(failures)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let dir = args.str("dir", ".");
+    let baselines = args.str("baselines", "testdata/baselines");
+
+    if args.flag("self-test") {
+        let failures = self_test(&baselines)?;
+        if failures > 0 {
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
+
+    let selected: Vec<(&str, &str)> = if args.flag("all") {
+        BENCHES.to_vec()
+    } else if let Some(name) = args.opt("bench") {
+        let hit = BENCHES.iter().find(|(b, _)| *b == name);
+        match hit {
+            Some(&pair) => vec![pair],
+            None => bail!(
+                "unknown bench {name:?}; known: {:?}",
+                BENCHES.iter().map(|(b, _)| *b).collect::<Vec<_>>()
+            ),
+        }
+    } else {
+        bail!("pass --all, --bench NAME, or --self-test");
+    };
+
+    if args.flag("bless") {
+        for (bench, smoke_file) in &selected {
+            bless_one(&dir, &baselines, bench, smoke_file)?;
+        }
+        return Ok(());
+    }
+
+    let mut total = 0usize;
+    for (bench, smoke_file) in &selected {
+        total += check_one(&dir, &baselines, bench, smoke_file)?;
+    }
+    if total > 0 {
+        println!("[bench_check] {total} regression(s) — failing");
+        std::process::exit(1);
+    }
+    println!("[bench_check] all {} bench(es) within committed bands", selected.len());
+    Ok(())
+}

@@ -31,7 +31,7 @@
 //! virtual clock. `--smoke` shrinks everything; `--json PATH` writes
 //! the document.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use matkv::coordinator::engine::{EngineOptions, LoaderCtx, Retrieval};
 use matkv::coordinator::{
@@ -39,6 +39,7 @@ use matkv::coordinator::{
 };
 use matkv::hwsim::{ArchSpec, StorageProfile};
 use matkv::kvstore::KvStore;
+use matkv::obs::{MetricsRegistry, Sampler};
 use matkv::manifest::Manifest;
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
@@ -108,7 +109,13 @@ fn main() -> anyhow::Result<()> {
         off: matkv::coordinator::FleetReport,
     }
     let mut rows: Vec<RateRow> = Vec::new();
-    for &rate in &rates {
+    // Registry + sampler for the highest-rate contention-on dispatch —
+    // the per-worker utilization/link series behind the headline gap.
+    // The later contention-off replay runs on an earlier virtual
+    // timeline, so its sampler calls are monotone no-ops.
+    let reg = MetricsRegistry::new();
+    let sampler = Arc::new(Mutex::new(Sampler::new(reg.clone(), 0.05)));
+    for (ri, &rate) in rates.iter().enumerate() {
         let trace: Vec<TimedRequest> = ArrivalGen::new(
             TurboRagProfile { top_k, query_tokens: 20.0, output_tokens },
             corpus.n_topics,
@@ -137,6 +144,10 @@ fn main() -> anyhow::Result<()> {
 
         // Same plan, same fleet, two dispatches: only the links differ.
         let mut fleet = Fleet::new(&spec, Routing::RoleAware, model.clone());
+        if ri + 1 == rates.len() {
+            fleet.register_metrics(&reg)?;
+            fleet.set_sampler(sampler.clone());
+        }
         fleet.set_contention(true);
         let on = fleet.dispatch(&plan.batches, &|_| true);
         fleet.set_contention(false);
@@ -235,11 +246,12 @@ fn main() -> anyhow::Result<()> {
              \"batch\":{batch},\"docs\":{n_docs},\"top_k\":{top_k},\
              \"chunk_tokens\":{chunk_tokens},\"skew\":{skew},\"fleet\":\"{fleet_spec}\",\
              \"routing\":\"role\",\"rates\":[{}],\"high_load_queued_secs_on\":{:.6},\
-             \"high_load_tps_gap\":{:.6},\"high_load_p99_gap\":{:.6}}}",
+             \"high_load_tps_gap\":{:.6},\"high_load_p99_gap\":{:.6},\"series\":{}}}",
             rate_docs.join(","),
             queued_on,
             tps_gap,
             p99_gap,
+            sampler.lock().unwrap().to_json(),
         );
         std::fs::write(path, doc)?;
         eprintln!("[fig_bus] wrote {path}");

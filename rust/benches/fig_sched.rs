@@ -32,7 +32,8 @@ use matkv::coordinator::{
 };
 use matkv::hwsim::StorageProfile;
 use matkv::kvstore::store::config_id;
-use matkv::kvstore::{series_to_json, KvChunk, KvStore};
+use matkv::kvstore::{series_to_json, KvChunk, KvStore, TierMetrics};
+use matkv::obs::{MetricsRegistry, Sampler};
 use matkv::manifest::Manifest;
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
@@ -67,6 +68,7 @@ struct PolicyRow {
     max_wait_ms: f64,
     forced: usize,
     series_json: String,
+    metrics_json: String,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -149,8 +151,15 @@ fn main() -> anyhow::Result<()> {
                 estimator: None,
             },
         );
+        // Per-policy registry over the whole storage hierarchy, with the
+        // planner driving the sampler on its virtual release clock.
+        let reg = MetricsRegistry::new();
+        ctx.kv.register_metrics(&reg)?;
+        let sampler = Arc::new(std::sync::Mutex::new(Sampler::new(reg.clone(), 0.05)));
+        sched.set_metrics(&reg, Some(sampler.clone()))?;
         sched.enqueue_timed(trace.clone());
         let plan = sched.plan_with_retrieval();
+        sampler.lock().unwrap().finish(plan.report.makespan_secs);
 
         let mut loads = 0usize;
         let mut cache_hits = 0u64;
@@ -188,6 +197,7 @@ fn main() -> anyhow::Result<()> {
                 .hot_tier()
                 .map(|t| series_to_json(&t.stats.series()))
                 .unwrap_or_else(|| "[]".into()),
+            metrics_json: sampler.lock().unwrap().to_json(),
         });
     }
 
@@ -314,7 +324,7 @@ fn main() -> anyhow::Result<()> {
                 "{}{{\"policy\":\"{}\",\"batches\":{},\"loads\":{},\"cache_hits\":{},\
                  \"device_reads\":{},\"device_secs\":{:.6},\"shard_reads\":[{}],\
                  \"mean_wait_ms\":{:.3},\"max_wait_ms\":{:.3},\"forced_includes\":{},\
-                 \"series\":{}}}",
+                 \"series\":{},\"metrics\":{}}}",
                 if policy_rows.is_empty() { "" } else { "," },
                 r.name,
                 r.batches,
@@ -327,6 +337,7 @@ fn main() -> anyhow::Result<()> {
                 r.max_wait_ms,
                 r.forced,
                 r.series_json,
+                r.metrics_json,
             );
         }
         let doc = format!(

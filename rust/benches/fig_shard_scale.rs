@@ -26,7 +26,7 @@ use std::fmt::Write as _;
 
 use matkv::coordinator::{serve_overlapped_with, OverlapOptions, Scenario, ScenarioSpec, ServeMode};
 use matkv::hwsim::StorageProfile;
-use matkv::kvstore::{series_to_json, KvChunk, KvFormat, KvStore};
+use matkv::kvstore::{series_to_json, KvChunk, KvFormat, KvStore, TierMetrics};
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;

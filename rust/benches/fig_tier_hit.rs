@@ -13,7 +13,8 @@
 use std::fmt::Write as _;
 
 use matkv::hwsim::StorageProfile;
-use matkv::kvstore::{series_to_json, KvChunk, KvStore};
+use matkv::kvstore::{series_to_json, KvChunk, KvStore, TierMetrics};
+use matkv::obs::{register_tier, MetricsRegistry, Sampler};
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
@@ -69,6 +70,14 @@ fn main() -> anyhow::Result<()> {
             let mut store = KvStore::open(dir.path(), StorageProfile::ssd_9100pro())?;
             store.disable_throttle();
             store.set_hot_tier(per_chunk * n_chunks * pct / 100);
+            // Per-cell registry + sampler on the access-index "clock":
+            // one sample boundary per telemetry window, aligned with the
+            // legacy tier series below.
+            let reg = MetricsRegistry::new();
+            if let Some(tier) = store.hot_tier() {
+                register_tier(&reg, std::sync::Arc::clone(tier))?;
+            }
+            let mut sampler = Sampler::new(reg.clone(), window as f64);
             let zipf = Zipf::new(n_chunks, skew);
             let mut rng = Rng::new(1234);
             let (mut hits, mut device_secs) = (0u64, 0.0f64);
@@ -81,7 +90,9 @@ fn main() -> anyhow::Result<()> {
                         tier.sample();
                     }
                 }
+                sampler.advance_to((i + 1) as f64);
             }
+            sampler.finish(accesses as f64);
             let ratio = hits as f64 / accesses as f64;
             if skew == 1.0 && pct == 10 {
                 top_decile_s1 = ratio;
@@ -103,9 +114,11 @@ fn main() -> anyhow::Result<()> {
                 json_cells,
                 "{}{{\"skew\":{skew},\"tier_pct\":{pct},\"hits\":{hits},\
                  \"hit_ratio\":{ratio:.6},\"device_secs\":{device_secs:.6},\
-                 \"bytes_saved\":{saved},\"window\":{window},\"series\":{}}}",
+                 \"bytes_saved\":{saved},\"window\":{window},\"series\":{},\
+                 \"metrics\":{}}}",
                 if json_cells.is_empty() { "" } else { "," },
                 series_to_json(&series),
+                sampler.to_json(),
             );
         }
     }

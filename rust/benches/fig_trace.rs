@@ -24,7 +24,7 @@
 //! virtual clock. `--smoke` shrinks everything; `--json PATH` writes
 //! the assertion document; `--trace PATH` writes the Perfetto file.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use matkv::coordinator::engine::{EngineOptions, LoaderCtx, Retrieval};
 use matkv::coordinator::{
@@ -32,6 +32,7 @@ use matkv::coordinator::{
 };
 use matkv::hwsim::{ArchSpec, StorageProfile};
 use matkv::kvstore::KvStore;
+use matkv::obs::{MetricsRegistry, Sampler};
 use matkv::manifest::Manifest;
 use matkv::trace::TraceBus;
 use matkv::util::bench::Table;
@@ -124,22 +125,40 @@ fn main() -> anyhow::Result<()> {
 
     // Same plan, two independently-traced dispatches: the exports must
     // be byte-identical — the bench-level restatement of the unit test,
-    // over a real planned schedule.
-    let run = |bus: TraceBus| {
+    // over a real planned schedule. Each run carries its own metrics
+    // registry + sampler, so the registry series export gets the same
+    // determinism check as the trace itself.
+    let run = |bus: TraceBus| -> anyhow::Result<(
+        matkv::coordinator::FleetReport,
+        TraceBus,
+        String,
+    )> {
+        let reg = MetricsRegistry::new();
+        let sampler = Arc::new(Mutex::new(Sampler::new(reg.clone(), 0.05)));
         let mut fleet = Fleet::new(&spec, Routing::RoleAware, model.clone());
+        fleet.register_metrics(&reg)?;
+        fleet.set_sampler(sampler.clone());
         fleet.set_contention(contention);
         fleet.set_trace(bus.clone());
         let rep = fleet.dispatch(&plan.batches, &|_| true);
-        (rep, bus)
+        let series = sampler.lock().unwrap().to_json();
+        Ok((rep, bus, series))
     };
-    let (rep, bus) = run(TraceBus::recording());
-    let (_, bus2) = run(TraceBus::recording());
+    let (rep, bus, series) = run(TraceBus::recording())?;
+    let (_, bus2, series2) = run(TraceBus::recording())?;
     let export = bus.to_chrome_json();
     let deterministic = export == bus2.to_chrome_json();
     if !deterministic {
         eprintln!(
             "[fig_trace] WARNING: two traced dispatches of the same plan exported \
              different bytes — the trace is not deterministic"
+        );
+    }
+    let series_deterministic = series == series2;
+    if !series_deterministic {
+        eprintln!(
+            "[fig_trace] WARNING: two sampled dispatches of the same plan exported \
+             different series bytes — the registry sampler is not deterministic"
         );
     }
 
@@ -244,7 +263,9 @@ fn main() -> anyhow::Result<()> {
              \"fleet\":\"{fleet_spec}\",\"contention\":{contention},\
              \"spans\":{},\"sched_events\":{},\"paths\":{},\
              \"max_attribution_err_secs\":{:.12},\"deterministic\":{deterministic},\
-             \"worst\":{},\"dominant\":\"{dom_name}\",\"dominant_secs\":{:.9}}}",
+             \"series_deterministic\":{series_deterministic},\
+             \"worst\":{},\"dominant\":\"{dom_name}\",\"dominant_secs\":{:.9},\
+             \"series\":{series}}}",
             bus.len(),
             sched_bus.len(),
             paths.len(),

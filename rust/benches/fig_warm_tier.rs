@@ -31,7 +31,7 @@ use std::sync::atomic::Ordering;
 use matkv::coordinator::baselines::fidelity;
 use matkv::coordinator::{Scenario, ScenarioSpec, ServeMode};
 use matkv::hwsim::StorageProfile;
-use matkv::kvstore::{series_to_json, KvChunk, KvStore, WarmMode};
+use matkv::kvstore::{series_to_json, KvChunk, KvStore, TierMetrics, WarmMode};
 use matkv::util::bench::Table;
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;

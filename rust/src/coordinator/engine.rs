@@ -19,7 +19,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::metrics::PhaseBreakdown;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvStore, TierMetrics};
 use crate::manifest::{Manifest, ModelConfig};
 use crate::runtime::session::StateBuf;
 use crate::runtime::state::argmax;

@@ -72,16 +72,17 @@
 //! fast.
 
 use std::collections::{HashSet, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use super::metrics::{LatencySummary, Percentiles, PhaseBreakdown, WorkTrace};
 use super::scheduler::{PlannedBatch, ServiceEstimator};
 use crate::hwsim::{
-    serving_profile, ArchSpec, DeviceProfile, EnergyMeter, FaultPlan, Link, LinkClock,
-    LinkSnapshot, PhaseKind, StorageProfile, TrafficClass, SERVING_GPUS,
+    register_link_metrics, serving_profile, ArchSpec, DeviceProfile, EnergyMeter, FaultPlan, Link,
+    LinkClock, LinkSnapshot, PhaseKind, StorageProfile, TrafficClass, SERVING_GPUS,
 };
+use crate::obs::{Gauge, Histogram, MetricsRegistry, Sampler};
 use crate::kvstore::ResidentSet;
 use crate::trace::{Arg, RequestPath, TraceBus};
 use crate::vectordb::ChunkId;
@@ -407,7 +408,9 @@ struct Worker {
     /// clock: every KV upload reserves queued slots here, sized from
     /// the profile's `pcie_bw` (latency folded into the batched wire
     /// time, so chunked slot sums equal the flat charge exactly).
-    link: Link,
+    /// Arc'd so [`Fleet::register_metrics`] can hand the registry
+    /// polled handles onto its stats.
+    link: Arc<Link>,
     /// Virtual time this worker is next free.
     free_at: f64,
     busy_secs: f64,
@@ -433,8 +436,12 @@ impl Worker {
         // HBM minus resident weights holds KV; floor at 10% so a model
         // larger than the card still leaves a (paged) working set.
         let kv_budget = (profile.hbm_bytes - weight_bytes).max(0.1 * profile.hbm_bytes);
-        let link =
-            Link::new(format!("{}-pcie", profile.name), profile.pcie_bw, 0.0, LinkClock::Virtual);
+        let link = Arc::new(Link::new(
+            format!("{}-pcie", profile.name),
+            profile.pcie_bw,
+            0.0,
+            LinkClock::Virtual,
+        ));
         Worker {
             meter: EnergyMeter::server_for(profile.clone(), model.storage.clone()),
             profile,
@@ -685,6 +692,37 @@ pub struct Fleet {
     /// trace timestamps — and the per-request [`RequestPath`]
     /// attribution records land on the same bus.
     trace: TraceBus,
+    /// Per-worker registry gauges, index-aligned with `workers`; empty
+    /// until [`Fleet::register_metrics`].
+    wmetrics: Vec<WorkerGauges>,
+    /// Request-latency histogram instrument, when registered.
+    latency_hist: Option<Histogram>,
+    /// Shared registry sampler ([`Fleet::set_sampler`]): dispatch
+    /// advances it to each batch completion and closes the tail at the
+    /// fleet makespan, so every registered series gets samples on the
+    /// dispatch virtual clock.
+    sampler: Option<Arc<Mutex<Sampler>>>,
+}
+
+/// One worker's registry instruments: gauges tracking the dispatch-loop
+/// counters (which reset per dispatch — a counter instrument would
+/// misreport the second run).
+struct WorkerGauges {
+    busy: Gauge,
+    batches: Gauge,
+    requests: Gauge,
+    tokens_out: Gauge,
+    utilization: Gauge,
+}
+
+impl WorkerGauges {
+    fn update(&self, w: &Worker, elapsed: f64) {
+        self.busy.set(w.busy_secs);
+        self.batches.set(w.batches as f64);
+        self.requests.set(w.requests as f64);
+        self.tokens_out.set(w.tokens_out as f64);
+        self.utilization.set(if elapsed > 0.0 { w.busy_secs / elapsed } else { 0.0 });
+    }
 }
 
 impl Fleet {
@@ -716,7 +754,64 @@ impl Fleet {
             faults: None,
             lost: None,
             trace: TraceBus::disabled(),
+            wmetrics: Vec::new(),
+            latency_hist: None,
+            sampler: None,
         }
+    }
+
+    /// Register every worker's instruments into `reg` under
+    /// `matkv.fleet.*{worker=<profile>:<index>}` plus each worker's H2D
+    /// link under `matkv.link.*{worker=…}`, and one
+    /// `matkv.fleet.request_latency_seconds` histogram. Worker labels
+    /// are `<lowercased profile name>:<worker index>` (e.g.
+    /// `rtx4090:1`) — stable across runs of the same spec. Call once
+    /// per registry (duplicate ids fail loudly).
+    pub fn register_metrics(&mut self, reg: &MetricsRegistry) -> Result<()> {
+        self.wmetrics.clear();
+        for (i, w) in self.workers.iter().enumerate() {
+            let id = format!("{}:{}", w.profile.name.to_lowercase(), i);
+            let labels = [("worker", id.as_str())];
+            let busy = reg.gauge(
+                "matkv.fleet.worker_busy_seconds",
+                &labels,
+                "virtual seconds this worker has been busy in the current dispatch",
+            )?;
+            let batches = reg.gauge(
+                "matkv.fleet.worker_batches",
+                &labels,
+                "batches completed by this worker in the current dispatch",
+            )?;
+            let requests = reg.gauge(
+                "matkv.fleet.worker_requests",
+                &labels,
+                "requests completed by this worker in the current dispatch",
+            )?;
+            let tokens_out = reg.gauge(
+                "matkv.fleet.worker_tokens_out",
+                &labels,
+                "tokens generated by this worker in the current dispatch",
+            )?;
+            let utilization = reg.gauge(
+                "matkv.fleet.worker_utilization",
+                &labels,
+                "worker busy seconds over elapsed virtual time",
+            )?;
+            register_link_metrics(reg, &w.link, &labels, false)?;
+            self.wmetrics.push(WorkerGauges { busy, batches, requests, tokens_out, utilization });
+        }
+        self.latency_hist = Some(reg.histogram(
+            "matkv.fleet.request_latency_seconds",
+            &[],
+            "virtual seconds from request arrival to batch completion",
+        )?);
+        Ok(())
+    }
+
+    /// Share the registry sampler: dispatch advances it to each batch
+    /// completion time and finishes it at the fleet makespan.
+    pub fn set_sampler(&mut self, sampler: Arc<Mutex<Sampler>>) {
+        self.sampler = Some(sampler);
     }
 
     /// Attach a trace bus: per-batch load/upload/prefill/decode spans
@@ -926,6 +1021,9 @@ impl Fleet {
         for w in &mut self.workers {
             w.reset();
         }
+        for (w, g) in self.workers.iter().zip(&self.wmetrics) {
+            g.update(w, 0.0);
+        }
         // Misuse check, loud in release builds too: a plan without its
         // retrieval sets prices every batch as chunk-free decode work —
         // plausible-looking, meaningless numbers.
@@ -1038,6 +1136,15 @@ impl Fleet {
             w.meter.record(PhaseKind::GpuCompute, cost.exec_secs());
             for &arrival in &batch.arrivals {
                 latency.record(done - arrival);
+                if let Some(h) = &self.latency_hist {
+                    h.record(done - arrival);
+                }
+            }
+            if let Some(g) = self.wmetrics.get(wi) {
+                g.update(w, done);
+            }
+            if let Some(s) = &self.sampler {
+                s.lock().unwrap().advance_to(done);
             }
 
             // Lost-chunk accounting: chunks that *were* materialized but
@@ -1132,6 +1239,12 @@ impl Fleet {
         }
 
         let makespan = self.workers.iter().map(|w| w.free_at).fold(0.0f64, f64::max);
+        for (w, g) in self.workers.iter().zip(&self.wmetrics) {
+            g.update(w, makespan);
+        }
+        if let Some(s) = &self.sampler {
+            s.lock().unwrap().finish(makespan);
+        }
         let mut total_kj = 0.0;
         let mut workers = Vec::with_capacity(self.workers.len());
         let mut metrics = PhaseBreakdown::default();

@@ -345,9 +345,10 @@ impl PhaseBreakdown {
         }
     }
 
-    /// Exhaustive JSON of every field, in declaration order. This is
-    /// the `--metrics-json` payload, and doubles as the merge guard's
-    /// equality witness: a field missing here (or from [`add`]) trips
+    /// Exhaustive JSON of every field, in **sorted key order** (so two
+    /// dumps diff cleanly line-to-line). This is the `--metrics-json`
+    /// payload, and doubles as the merge guard's equality witness: a
+    /// field missing here (or from [`add`]) trips
     /// `exhaustive_merge_guard` below, so neither can silently lag the
     /// struct. Keep all three in sync when adding a field.
     ///
@@ -362,67 +363,67 @@ impl PhaseBreakdown {
             format!("[{}]", rows.join(","))
         }
         format!(
-            "{{\"retrieve_secs\":{:.9},\"load_wall_secs\":{:.9},\
-             \"load_device_secs\":{:.9},\"loaded_bytes\":{},\
-             \"loaded_tokens\":{},\"load_reads\":{},\
-             \"shard_reads\":{},\"shard_bytes\":{},\
-             \"shard_device_secs\":{},\"shard_peak_queue\":{},\
-             \"cache_hits\":{},\"cache_tokens\":{},\"cache_bytes_saved\":{},\
-             \"warm_hits\":{},\"warm_tokens\":{},\"warm_bytes_saved\":{},\
-             \"dequant_secs\":{:.9},\"quant_secs\":{:.9},\
-             \"warm_admit_tokens\":{},\"q4_dequant_secs\":{:.9},\
-             \"upload_secs\":{:.9},\"prefill_wall_secs\":{:.9},\
-             \"prefill_trace\":{},\"decode_wall_secs\":{:.9},\
-             \"decode_trace\":{},\"total_wall_secs\":{:.9},\
-             \"requests\":{},\"tokens_out\":{},\
-             \"worker_busy_secs\":{},\"worker_batches\":{},\
-             \"worker_transfer_secs\":{},\"worker_link_queued_secs\":{},\
-             \"worker_link_peak_backlog_secs\":{},\"request_latency\":{},\
-             \"retries\":{},\"retry_backoff_secs\":{:.9},\
-             \"checksum_failures\":{},\"recomputed_chunks\":{},\
-             \"recompute_fallback_secs\":{:.9},\"requeued_requests\":{},\
-             \"degraded_tokens\":{}}}",
-            self.retrieve_secs,
-            self.load_wall_secs,
+            "{{\"cache_bytes_saved\":{},\"cache_hits\":{},\"cache_tokens\":{},\
+             \"checksum_failures\":{},\"decode_trace\":{},\
+             \"decode_wall_secs\":{:.9},\"degraded_tokens\":{},\
+             \"dequant_secs\":{:.9},\"load_device_secs\":{:.9},\
+             \"load_reads\":{},\"load_wall_secs\":{:.9},\
+             \"loaded_bytes\":{},\"loaded_tokens\":{},\
+             \"prefill_trace\":{},\"prefill_wall_secs\":{:.9},\
+             \"q4_dequant_secs\":{:.9},\"quant_secs\":{:.9},\
+             \"recompute_fallback_secs\":{:.9},\"recomputed_chunks\":{},\
+             \"request_latency\":{},\"requests\":{},\
+             \"requeued_requests\":{},\"retries\":{},\
+             \"retrieve_secs\":{:.9},\"retry_backoff_secs\":{:.9},\
+             \"shard_bytes\":{},\"shard_device_secs\":{},\
+             \"shard_peak_queue\":{},\"shard_reads\":{},\
+             \"tokens_out\":{},\"total_wall_secs\":{:.9},\
+             \"upload_secs\":{:.9},\"warm_admit_tokens\":{},\
+             \"warm_bytes_saved\":{},\"warm_hits\":{},\"warm_tokens\":{},\
+             \"worker_batches\":{},\"worker_busy_secs\":{},\
+             \"worker_link_peak_backlog_secs\":{},\
+             \"worker_link_queued_secs\":{},\"worker_transfer_secs\":{}}}",
+            self.cache_bytes_saved,
+            self.cache_hits,
+            self.cache_tokens,
+            self.checksum_failures,
+            self.decode_trace.to_json(),
+            self.decode_wall_secs,
+            self.degraded_tokens,
+            self.dequant_secs,
             self.load_device_secs,
+            self.load_reads,
+            self.load_wall_secs,
             self.loaded_bytes,
             self.loaded_tokens,
-            self.load_reads,
-            vec_u64(&self.shard_reads),
+            self.prefill_trace.to_json(),
+            self.prefill_wall_secs,
+            self.q4_dequant_secs,
+            self.quant_secs,
+            self.recompute_fallback_secs,
+            self.recomputed_chunks,
+            self.request_latency.to_json(),
+            self.requests,
+            self.requeued_requests,
+            self.retries,
+            self.retrieve_secs,
+            self.retry_backoff_secs,
             vec_u64(&self.shard_bytes),
             vec_f64(&self.shard_device_secs),
             vec_u64(&self.shard_peak_queue),
-            self.cache_hits,
-            self.cache_tokens,
-            self.cache_bytes_saved,
+            vec_u64(&self.shard_reads),
+            self.tokens_out,
+            self.total_wall_secs,
+            self.upload_secs,
+            self.warm_admit_tokens,
+            self.warm_bytes_saved,
             self.warm_hits,
             self.warm_tokens,
-            self.warm_bytes_saved,
-            self.dequant_secs,
-            self.quant_secs,
-            self.warm_admit_tokens,
-            self.q4_dequant_secs,
-            self.upload_secs,
-            self.prefill_wall_secs,
-            self.prefill_trace.to_json(),
-            self.decode_wall_secs,
-            self.decode_trace.to_json(),
-            self.total_wall_secs,
-            self.requests,
-            self.tokens_out,
-            vec_f64(&self.worker_busy_secs),
             vec_u64(&self.worker_batches),
-            vec_f64(&self.worker_transfer_secs),
-            vec_f64(&self.worker_link_queued_secs),
+            vec_f64(&self.worker_busy_secs),
             vec_f64(&self.worker_link_peak_backlog_secs),
-            self.request_latency.to_json(),
-            self.retries,
-            self.retry_backoff_secs,
-            self.checksum_failures,
-            self.recomputed_chunks,
-            self.recompute_fallback_secs,
-            self.requeued_requests,
-            self.degraded_tokens,
+            vec_f64(&self.worker_link_queued_secs),
+            vec_f64(&self.worker_transfer_secs),
         )
     }
 }
@@ -634,6 +635,12 @@ impl LogHistogram {
         } else {
             self.sum / self.count as f64
         }
+    }
+
+    /// Exact sum of recorded values (the histogram buckets quantize,
+    /// the sum does not) — what a Prometheus summary's `_sum` reports.
+    pub fn sum(&self) -> f64 {
+        self.sum
     }
 
     pub fn min(&self) -> f64 {
@@ -1106,6 +1113,29 @@ mod tests {
         assert!(j.contains("\"prefill_trace\":{\"sum_s\":1"), "{j}");
         assert!(j.contains("\"request_latency\":{\"count\":2"), "{j}");
         assert!(j.contains("\"histogram\":{\"lo\":1e-6"), "{j}");
+        // top-level keys are emitted in sorted order so dumps diff cleanly
+        let mut depth = 0usize;
+        let mut keys = Vec::new();
+        let bytes = j.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' | b'[' => depth += 1,
+                b'}' | b']' => depth -= 1,
+                b'"' if depth == 1 => {
+                    let end = j[i + 1..].find('"').unwrap() + i + 1;
+                    if bytes.get(end + 1) == Some(&b':') {
+                        keys.push(&j[i + 1..end]);
+                    }
+                    i = end;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "PhaseBreakdown::to_json keys must stay sorted");
     }
 
     #[test]

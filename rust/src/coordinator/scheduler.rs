@@ -35,13 +35,14 @@
 //! [`Engine::serve_all`]: super::engine::Engine::serve_all
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use super::engine::{Engine, LoaderCtx, Response, ServeMode};
 use super::metrics::PhaseBreakdown;
 use super::overlap::{run_pipeline, OverlapOptions, OverlapReport};
+use crate::obs::{Counter, Gauge, MetricsRegistry, Sampler};
 use crate::trace::{Arg, TraceBus};
 use crate::vectordb::ChunkId;
 use crate::workload::{RagRequest, TimedRequest};
@@ -224,6 +225,18 @@ struct Queued {
     passed_over: usize,
 }
 
+/// Registry instruments for the planning loop, installed by
+/// [`Scheduler::set_metrics`]. The queue-depth gauge is snapshotted at
+/// each release (after the batch leaves the queue), and the sampler —
+/// when shared — is advanced to each release's virtual time so queue
+/// series stay aligned with the rest of the registry.
+struct SchedMetrics {
+    queue_depth: Gauge,
+    releases: Counter,
+    batched_requests: Counter,
+    sampler: Option<Arc<Mutex<Sampler>>>,
+}
+
 /// The scheduler: a virtual-time request queue plus the release
 /// condition and batch-formation policy. Build one, enqueue a trace,
 /// then either [`Scheduler::run`] it through an engine or
@@ -235,11 +248,13 @@ pub struct Scheduler {
     /// Trace handle; planning runs entirely on the virtual clock, so
     /// its lifecycle instants are *clocked* (real trace timestamps).
     trace: TraceBus,
+    /// Registry instruments, when attached (see [`Scheduler::set_metrics`]).
+    metrics: Option<SchedMetrics>,
 }
 
 impl Scheduler {
     pub fn new(ctx: LoaderCtx, opts: SchedOptions) -> Self {
-        Scheduler { ctx, opts, queue: Vec::new(), trace: TraceBus::disabled() }
+        Scheduler { ctx, opts, queue: Vec::new(), trace: TraceBus::disabled(), metrics: None }
     }
 
     /// Attach a trace bus: each planned request gets a `queued` instant
@@ -247,6 +262,32 @@ impl Scheduler {
     /// time the release condition fired, on the `sched` track.
     pub fn set_trace(&mut self, trace: TraceBus) {
         self.trace = trace;
+    }
+
+    /// Register the scheduler's instruments into `reg` under
+    /// `matkv.sched.*` and optionally share the registry [`Sampler`]:
+    /// planning then advances it to each release's *virtual* time, so
+    /// queue-depth samples land on the same aligned grid as every other
+    /// registered series. Call once per registry (a second call on the
+    /// same registry fails on the duplicate names).
+    pub fn set_metrics(
+        &mut self,
+        reg: &MetricsRegistry,
+        sampler: Option<Arc<Mutex<Sampler>>>,
+    ) -> Result<()> {
+        let queue_depth = reg.gauge(
+            "matkv.sched.queue_depth",
+            &[],
+            "requests pending in the scheduler queue at the last batch release",
+        )?;
+        let releases = reg.counter("matkv.sched.releases", &[], "batches released by the planner")?;
+        let batched_requests = reg.counter(
+            "matkv.sched.batched_requests",
+            &[],
+            "requests placed into released batches",
+        )?;
+        self.metrics = Some(SchedMetrics { queue_depth, releases, batched_requests, sampler });
+        Ok(())
     }
 
     /// The batch-replay shape the serve wrappers use: FIFO policy,
@@ -458,6 +499,14 @@ impl Scheduler {
                         ("n", Arg::U(reqs.len() as u64)),
                     ],
                 );
+            }
+            if let Some(m) = &self.metrics {
+                m.queue_depth.set((pending.len() + incoming.len()) as f64);
+                m.releases.inc();
+                m.batched_requests.add(reqs.len() as u64);
+                if let Some(s) = &m.sampler {
+                    s.lock().unwrap().advance_to(t);
+                }
             }
             batches.push(PlannedBatch { reqs, retrieved, arrivals, release_secs: t });
             t_free = t + batch_service;

@@ -459,6 +459,71 @@ impl Link {
     }
 }
 
+/// Register one link's counters/gauges into a
+/// [`MetricsRegistry`](crate::obs::MetricsRegistry) under
+/// `matkv.link.*` with the caller's labels (`link=hostbus`,
+/// `shard=3`, `worker=rtx4090:1`, …) — polled bridges over the
+/// existing relaxed atomics, so the reserve hot path is untouched.
+/// With `classes` set, per-traffic-class byte counters are added under
+/// an extra `class=<label>` label.
+pub fn register_link_metrics(
+    reg: &crate::obs::MetricsRegistry,
+    link: &std::sync::Arc<Link>,
+    labels: &[(&str, &str)],
+    classes: bool,
+) -> anyhow::Result<()> {
+    macro_rules! poll {
+        ($method:ident, $name:expr, $help:expr, |$s:ident| $body:expr) => {{
+            let l = std::sync::Arc::clone(link);
+            reg.$method($name, labels, $help, move || {
+                let $s = &l.stats;
+                $body
+            })?;
+        }};
+    }
+    poll!(counter_fn, "matkv.link.busy_seconds", "seconds spent moving bytes", |s| {
+        s.busy_secs()
+    });
+    poll!(
+        counter_fn,
+        "matkv.link.queued_seconds",
+        "seconds reservations waited behind earlier traffic",
+        |s| s.queued_secs()
+    );
+    poll!(counter_fn, "matkv.link.reserves", "reservations granted", |s| {
+        s.reserves() as f64
+    });
+    poll!(
+        gauge_fn,
+        "matkv.link.peak_backlog_seconds",
+        "high-water backlog any reservation saw",
+        |s| s.peak_backlog_secs()
+    );
+    {
+        let l = std::sync::Arc::clone(link);
+        reg.gauge_fn(
+            "matkv.link.backlog_seconds",
+            labels,
+            "seconds until the link drains (link-clock)",
+            move || l.backlog_secs(),
+        )?;
+    }
+    if classes {
+        for class in TrafficClass::ALL {
+            let mut with_class: Vec<(&str, &str)> = labels.to_vec();
+            with_class.push(("class", class.label()));
+            let l = std::sync::Arc::clone(link);
+            reg.counter_fn(
+                "matkv.link.bytes",
+                &with_class,
+                "bytes moved, by traffic class",
+                move || l.stats.bytes_for(class) as f64,
+            )?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

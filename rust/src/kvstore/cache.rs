@@ -55,72 +55,10 @@ impl TierKind {
     }
 }
 
-/// One point of the serve-time telemetry series: a *cumulative* snapshot
-/// of the counters plus the tier's residency at sample time. Emitters
-/// (benches, the overlap pipeline) call [`HotTier::sample`] once per
-/// batch / access window; consumers diff consecutive samples to get the
-/// per-batch rates the hit-ratio-vs-offered-load curves need.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct CacheSample {
-    /// Which tier recorded this sample (`"hot"` for pre-warm consumers).
-    pub tier: TierKind,
-    pub hits: u64,
-    pub misses: u64,
-    pub insertions: u64,
-    pub evictions: u64,
-    pub prefetch_inserts: u64,
-    pub prefetch_hits: u64,
-    pub prefetch_rejected: u64,
-    /// Modeled seconds spent dequantizing q8 hits (warm tier only; the
-    /// hot tier serves f32 and leaves this 0).
-    pub dequant_secs: f64,
-    /// Modeled seconds spent quantizing chunks *into* the q8 tier
-    /// (demotions and direct admissions; symmetric to `dequant_secs`).
-    pub quant_secs: f64,
-    /// Seconds this tier's quant/dequant transfers spent queued behind
-    /// other traffic on the shared host bus
-    /// ([`crate::hwsim::Link`]) — 0 for tiers not wired to a bus.
-    pub link_queued_secs: f64,
-    pub resident_bytes: u64,
-    pub resident_chunks: u64,
-}
-
-impl CacheSample {
-    /// Compact JSON object — the one serializer for the telemetry
-    /// series, so benches embedding it in `--json` output can't drift
-    /// from the struct's fields.
-    pub fn to_json(&self) -> String {
-        format!(
-            "{{\"tier\":\"{}\",\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
-             \"prefetch_inserts\":{},\"prefetch_hits\":{},\"prefetch_rejected\":{},\
-             \"dequant_secs\":{:.6},\"quant_secs\":{:.6},\"link_queued_secs\":{:.6},\
-             \"resident_bytes\":{},\"resident_chunks\":{}}}",
-            self.tier.label(),
-            self.hits,
-            self.misses,
-            self.insertions,
-            self.evictions,
-            self.prefetch_inserts,
-            self.prefetch_hits,
-            self.prefetch_rejected,
-            self.dequant_secs,
-            self.quant_secs,
-            self.link_queued_secs,
-            self.resident_bytes,
-            self.resident_chunks
-        )
-    }
-}
-
-/// JSON array of [`CacheSample::to_json`] objects.
-pub fn series_to_json(series: &[CacheSample]) -> String {
-    let body: Vec<String> = series.iter().map(CacheSample::to_json).collect();
-    format!("[{}]", body.join(","))
-}
-
-/// Series entries kept before sampling quietly stops (a run that never
-/// drains would otherwise grow the series without bound).
-const SAMPLE_CAP: usize = 16_384;
+// The sample shape and series machinery moved to [`crate::obs::tier`]
+// (PR 10); these re-exports are the compatibility shim — every
+// pre-registry consumer imported them from `kvstore`.
+pub use crate::obs::tier::{series_to_json, CacheSample, TierMetrics, TierSeries};
 
 /// Cumulative hit/miss/eviction counters (relaxed atomics, like
 /// [`super::StoreStats`]).
@@ -169,8 +107,9 @@ pub struct CacheStats {
     /// on the shared host bus ([`crate::hwsim::Link`]) — contention
     /// telemetry on top of the modeled charge, not an extra charge.
     pub link_queued_ns: AtomicU64,
-    /// Sampled cumulative snapshots ([`CacheStats::record_sample`]).
-    series: Mutex<Vec<CacheSample>>,
+    /// Sampled cumulative snapshots ([`CacheStats::record_sample`]) —
+    /// the shared bounded buffer from [`crate::obs::tier`].
+    series: TierSeries,
 }
 
 impl CacheStats {
@@ -260,17 +199,47 @@ impl CacheStats {
         }
     }
 
-    /// Append a snapshot to the telemetry series (no-op past [`SAMPLE_CAP`]).
+    /// Append a snapshot to the telemetry series (no-op past the
+    /// buffer's cap).
     pub fn record_sample(&self, resident_bytes: usize, resident_chunks: usize) {
-        let mut series = self.series.lock().unwrap();
-        if series.len() < SAMPLE_CAP {
-            series.push(self.snapshot(resident_bytes, resident_chunks));
-        }
+        self.series.record(self.snapshot(resident_bytes, resident_chunks));
     }
 
     /// The sampled telemetry series recorded so far.
     pub fn series(&self) -> Vec<CacheSample> {
-        self.series.lock().unwrap().clone()
+        self.series.samples()
+    }
+
+    /// Exhaustive point-in-time JSON of every counter, in sorted key
+    /// order — the `--metrics-json` "tiers" entry. Unlike the pinned
+    /// [`CacheSample`] shape, this carries the full set, including
+    /// `admission_rejected` and the q4 clocks.
+    pub fn to_full_json(&self, resident_bytes: usize, resident_chunks: usize) -> String {
+        format!(
+            "{{\"admission_rejected\":{},\"bytes_saved\":{},\"dequant_secs\":{:.9},\
+             \"evictions\":{},\"hits\":{},\"insertions\":{},\"link_queued_secs\":{:.9},\
+             \"misses\":{},\"prefetch_hits\":{},\"prefetch_inserts\":{},\
+             \"prefetch_rejected\":{},\"q4_dequant_secs\":{:.9},\"q4_quant_secs\":{:.9},\
+             \"quant_secs\":{:.9},\"resident_bytes\":{},\"resident_chunks\":{},\
+             \"tier\":\"{}\"}}",
+            self.admission_rejected.load(Ordering::Relaxed),
+            self.bytes_saved.load(Ordering::Relaxed),
+            self.dequant_secs(),
+            self.evictions.load(Ordering::Relaxed),
+            self.hits.load(Ordering::Relaxed),
+            self.insertions.load(Ordering::Relaxed),
+            self.link_queued_secs(),
+            self.misses.load(Ordering::Relaxed),
+            self.prefetch_hits.load(Ordering::Relaxed),
+            self.prefetch_inserts.load(Ordering::Relaxed),
+            self.prefetch_rejected.load(Ordering::Relaxed),
+            self.q4_dequant_secs(),
+            self.q4_quant_secs(),
+            self.quant_secs(),
+            resident_bytes,
+            resident_chunks,
+            self.tier.label(),
+        )
     }
 }
 
@@ -574,15 +543,6 @@ impl HotTier {
         self.lru.lock().unwrap().map.keys().copied().collect()
     }
 
-    /// Record one telemetry sample (see [`CacheSample`]).
-    pub fn sample(&self) {
-        let (bytes, chunks) = {
-            let lru = self.lru.lock().unwrap();
-            (lru.bytes, lru.map.len())
-        };
-        self.stats.record_sample(bytes, chunks);
-    }
-
     /// Current invalidation generation of `id`. Loaders capture it
     /// *before* reading the backing file and pass it to
     /// [`HotTier::insert_at`] so a read that raced a re-materialization
@@ -781,6 +741,17 @@ impl HotTier {
             }
         }
         true
+    }
+}
+
+impl TierMetrics for HotTier {
+    fn tier_stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn residency(&self) -> (usize, usize) {
+        let lru = self.lru.lock().unwrap();
+        (lru.bytes, lru.map.len())
     }
 }
 

@@ -67,7 +67,8 @@ pub mod throttle;
 pub mod warm;
 
 pub use cache::{
-    series_to_json, AdmissionPolicy, CacheSample, CacheStats, DemoteSink, HotTier, Probe, TierKind,
+    series_to_json, AdmissionPolicy, CacheSample, CacheStats, DemoteSink, HotTier, Probe,
+    TierKind, TierMetrics,
 };
 pub use quant::{dequantize, dequantize_q4, quantize, quantize_q4, Q4Chunk, QuantChunk};
 pub use shard::{route, Shard, ShardStats};

@@ -717,6 +717,97 @@ impl KvStore {
         &self.bus
     }
 
+    /// Register the whole storage hierarchy into a metrics registry:
+    /// store-level counters (`matkv.store.*`), the host bus
+    /// (`matkv.link.*{link=hostbus}`, with per-traffic-class bytes),
+    /// every shard (`matkv.shard.*{shard=i}`), and whichever DRAM tiers
+    /// are enabled (`matkv.tier.*{tier=hot|warm}`). Polled bridges over
+    /// the existing relaxed atomics — the load/store hot paths are
+    /// untouched. Call once per registry; a second call on the same
+    /// registry fails loudly on the first duplicate id.
+    pub fn register_metrics(&self, reg: &crate::obs::MetricsRegistry) -> Result<()> {
+        macro_rules! store_counter {
+            ($name:expr, $help:expr, $field:ident) => {{
+                let s = Arc::clone(&self.stats);
+                reg.counter_fn($name, &[], $help, move || {
+                    s.$field.load(Ordering::Relaxed) as f64
+                })?;
+            }};
+        }
+        store_counter!("matkv.store.reads", "chunk loads issued to the store", reads);
+        store_counter!("matkv.store.writes", "chunk stores issued", writes);
+        store_counter!("matkv.store.bytes_read", "flash bytes read", bytes_read);
+        store_counter!("matkv.store.bytes_written", "flash bytes written", bytes_written);
+        store_counter!("matkv.store.deletes", "chunk deletions", deletes);
+
+        crate::hwsim::register_link_metrics(reg, &self.bus, &[("link", "hostbus")], true)?;
+
+        for (i, shard) in self.shards.iter().enumerate() {
+            let idx = i.to_string();
+            let labels = [("shard", idx.as_str())];
+            macro_rules! shard_counter {
+                ($name:expr, $help:expr, |$s:ident| $body:expr) => {{
+                    let s = Arc::clone(&shard.stats);
+                    reg.counter_fn($name, &labels, $help, move || {
+                        let $s = &s;
+                        $body
+                    })?;
+                }};
+            }
+            shard_counter!("matkv.shard.reads", "device reads", |s| {
+                s.reads.load(Ordering::Relaxed) as f64
+            });
+            shard_counter!("matkv.shard.writes", "device writes", |s| {
+                s.writes.load(Ordering::Relaxed) as f64
+            });
+            shard_counter!("matkv.shard.deletes", "device deletes", |s| {
+                s.deletes.load(Ordering::Relaxed) as f64
+            });
+            shard_counter!("matkv.shard.bytes_read", "device bytes read", |s| {
+                s.bytes_read.load(Ordering::Relaxed) as f64
+            });
+            shard_counter!("matkv.shard.bytes_written", "device bytes written", |s| {
+                s.bytes_written.load(Ordering::Relaxed) as f64
+            });
+            shard_counter!(
+                "matkv.shard.device_read_seconds",
+                "simulated device seconds in reads",
+                |s| s.read_device_secs()
+            );
+            shard_counter!(
+                "matkv.shard.device_write_seconds",
+                "simulated device seconds in writes",
+                |s| s.write_device_secs()
+            );
+            shard_counter!("matkv.shard.write_errors", "failed writes", |s| {
+                s.write_errors.load(Ordering::Relaxed) as f64
+            });
+            {
+                let s = Arc::clone(&shard.stats);
+                reg.gauge_fn("matkv.shard.queue_depth", &labels, "reads in flight", move || {
+                    s.queue_depth.load(Ordering::Relaxed) as f64
+                })?;
+            }
+            {
+                let s = Arc::clone(&shard.stats);
+                reg.gauge_fn(
+                    "matkv.shard.peak_queue_depth",
+                    &labels,
+                    "high-water mark of reads in flight",
+                    move || s.peak_queue_depth.load(Ordering::Relaxed) as f64,
+                )?;
+            }
+        }
+
+        if let Some(hot) = &self.hot {
+            crate::obs::register_tier(reg, Arc::clone(hot))?;
+        }
+        if let Some(warm) = &self.warm {
+            crate::obs::register_tier(reg, Arc::clone(warm))?;
+        }
+        Ok(())
+    }
+
     fn shard_of(&self, id: ChunkId) -> &Arc<Shard> {
         &self.shards[self.shard_index_of(id)]
     }

@@ -44,7 +44,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::cache::{CacheStats, DemoteSink, TierKind};
+use super::cache::{CacheStats, DemoteSink, TierKind, TierMetrics};
 use super::quant::{self, Q4Chunk, QuantChunk};
 use super::store::KvChunk;
 use crate::hwsim::{Link, TrafficClass};
@@ -268,15 +268,6 @@ impl WarmTier {
         self.lru.lock().unwrap().map.keys().copied().collect()
     }
 
-    /// Record one telemetry sample (tagged [`TierKind::Warm`]).
-    pub fn sample(&self) {
-        let (bytes, chunks) = {
-            let lru = self.lru.lock().unwrap();
-            (lru.bytes, lru.map.len())
-        };
-        self.stats.record_sample(bytes, chunks);
-    }
-
     /// Current invalidation generation of `id` (see
     /// [`super::HotTier::generation`] — same contract).
     pub fn generation(&self, id: ChunkId) -> u64 {
@@ -491,6 +482,17 @@ impl DemoteSink for WarmTier {
         seen_gen: u64,
     ) {
         self.quantize_admit(id, chunk, file_bytes, prefetched, seen_gen);
+    }
+}
+
+impl TierMetrics for WarmTier {
+    fn tier_stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn residency(&self) -> (usize, usize) {
+        let lru = self.lru.lock().unwrap();
+        (lru.bytes, lru.map.len())
     }
 }
 

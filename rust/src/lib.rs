@@ -27,6 +27,7 @@ pub mod hwsim;
 pub mod util;
 pub mod kvstore;
 pub mod manifest;
+pub mod obs;
 pub mod runtime;
 pub mod tokenizer;
 pub mod trace;

@@ -15,7 +15,8 @@ use matkv::coordinator::{
 };
 use matkv::hwsim::economics::fig1_trend;
 use matkv::hwsim::{ArchSpec, DeviceProfile, StorageProfile, TenDayRule};
-use matkv::kvstore::{AdmissionPolicy, KvFormat, KvStore, WarmMode};
+use matkv::kvstore::{AdmissionPolicy, KvFormat, KvStore, TierMetrics, WarmMode};
+use matkv::obs::{MetricsRegistry, Sampler};
 use matkv::util::cli::Args;
 use matkv::util::tempdir::TempDir;
 use matkv::workload::{ArrivalGen, Corpus, RequestGen, TurboRagProfile};
@@ -87,8 +88,15 @@ const USAGE: &str = "usage: matkv <info|serve|economics> [flags]
                            per-request critical-path attribution report;
                            same seed + config => byte-identical file)
                --metrics-json PATH (dump the run's full PhaseBreakdown,
-                           per-shard stats, host-bus/link snapshots and
-                           fleet worker reports as one JSON document)
+                           per-shard stats, tier stats, host-bus/link
+                           snapshots, fleet worker reports and the
+                           registry time series as one JSON document)
+               --metrics-prom PATH (dump the unified metrics registry as
+                           Prometheus text exposition; same seed +
+                           config => byte-identical file)
+               --sample-period SECS (virtual-clock period of the registry
+                           time-series sampler embedded in
+                           --metrics-json, default 0.1)
                --smoke (CI-sized defaults: 8 requests over 8 docs of
                            256 tokens, unless overridden explicitly)";
 
@@ -242,12 +250,23 @@ fn serve(args: &Args) -> Result<()> {
     // tiers/links it fans out to are the ones this run actually uses.
     let trace_path = args.opt("trace").map(std::path::PathBuf::from);
     let metrics_path = args.opt("metrics-json").map(std::path::PathBuf::from);
+    let prom_path = args.opt("metrics-prom").map(std::path::PathBuf::from);
     let bus = if trace_path.is_some() {
         matkv::trace::TraceBus::recording()
     } else {
         matkv::trace::TraceBus::disabled()
     };
     kv.set_trace(bus.clone());
+    // The unified registry + its virtual-clock sampler: every subsystem
+    // registers here, and the scheduler/fleet advance the sampler on
+    // their deterministic clocks. Registered after the tiers are wired
+    // so the registry sees the tiers this run actually uses.
+    let registry = MetricsRegistry::new();
+    let sampler = std::sync::Arc::new(std::sync::Mutex::new(Sampler::new(
+        registry.clone(),
+        args.f64("sample-period", 0.1),
+    )));
+    kv.register_metrics(&registry)?;
     let opts = EngineOptions::for_config(&m, &config)?;
     let engine = Engine::new(&m, opts, kv, corpus.texts())?;
 
@@ -295,6 +314,10 @@ fn serve(args: &Args) -> Result<()> {
         }
         f
     });
+    if let Some(f) = fleet.as_mut() {
+        f.register_metrics(&registry)?;
+        f.set_sampler(sampler.clone());
+    }
 
     // Every serve path goes through the scheduler: a queue of (possibly
     // simulated-Poisson) arrivals, a size-or-timeout release condition,
@@ -333,6 +356,7 @@ fn serve(args: &Args) -> Result<()> {
         },
     );
     sched.set_trace(bus.clone());
+    sched.set_metrics(&registry, Some(sampler.clone()))?;
     if rate > 0.0 {
         let mut gen =
             ArrivalGen::new(TurboRagProfile::default(), corpus.n_topics, 1.0, rate, 7);
@@ -575,10 +599,19 @@ fn serve(args: &Args) -> Result<()> {
         std::fs::write(path, bus.to_chrome_json())?;
         eprintln!("[trace] {} events, {} request paths -> {}", bus.len(), bus.paths().len(), path.display());
     }
+    // Close the sampler's tail at the schedule makespan; a fleet
+    // dispatch already finished it at its (later) makespan, in which
+    // case this is a no-op.
+    sampler.lock().unwrap().finish(out.sched.makespan_secs);
+    if let Some(path) = &prom_path {
+        std::fs::write(path, registry.to_prometheus())?;
+        eprintln!("[metrics] prometheus -> {}", path.display());
+    }
     if let Some(path) = &metrics_path {
         // One document: the exhaustive PhaseBreakdown, per-shard device
-        // stats, the shared host bus, and (when a fleet dispatched) the
-        // full fleet report with per-worker link snapshots.
+        // stats, the DRAM tiers, the shared host bus, (when a fleet
+        // dispatched) the full fleet report with per-worker link
+        // snapshots, and the registry's sampled time series.
         use std::sync::atomic::Ordering::Relaxed;
         let shard_rows: Vec<String> = engine
             .kv
@@ -599,15 +632,26 @@ fn serve(args: &Args) -> Result<()> {
                 )
             })
             .collect();
+        let mut tier_rows: Vec<String> = Vec::new();
+        if let Some(t) = engine.kv.hot_tier() {
+            let (b, c) = t.residency();
+            tier_rows.push(t.stats.to_full_json(b, c));
+        }
+        if let Some(t) = engine.kv.warm_tier() {
+            let (b, c) = t.residency();
+            tier_rows.push(t.stats.to_full_json(b, c));
+        }
         let doc = format!(
             "{{\"mode\":\"{}\",\"config\":\"{}\",\"phases\":{},\"shards\":[{}],\
-             \"host_bus\":{},\"fleet\":{}}}",
+             \"tiers\":[{}],\"host_bus\":{},\"fleet\":{},\"series\":{}}}",
             mode_name,
             config,
             metrics.to_json(),
             shard_rows.join(","),
+            tier_rows.join(","),
             engine.kv.bus().stats.snapshot().to_json(),
             fleet_report.as_ref().map_or_else(|| "null".to_string(), |r| r.to_json()),
+            sampler.lock().unwrap().to_json(),
         );
         std::fs::write(path, doc)?;
         eprintln!("[metrics] -> {}", path.display());

@@ -1,0 +1,586 @@
+//! The bench-regression matrix: normalized metrics per `fig_*` bench,
+//! committed baselines with direction-aware tolerance bands, and the
+//! comparison that turns "a number moved" into a named, explainable
+//! CI failure.
+//!
+//! Every smoke bench emits a JSON document; [`normalize`] flattens the
+//! document into `metric name → value` and attaches a *default band*
+//! per metric (which direction is a regression, and how much slack).
+//! `rust/testdata/baselines/<bench>.json` holds the committed bands;
+//! `bench_check --all` re-runs [`compare`] against the current smoke
+//! output and fails with one line per violated band.
+//!
+//! The committed seed baselines deliberately use only **invariant**
+//! directions (`above` / `below` / `exact`) — the properties the CI
+//! python asserts already promise (v4 moves strictly fewer flash bytes
+//! than v3, zero failed requests under faults, nonzero link queueing at
+//! high load, deterministic traces). Measured `higher`/`lower` bands
+//! (throughput may not drop, queued-seconds may not grow) come from a
+//! real run via `bench_check --bless`, which rewrites the baselines
+//! from the machine's own smoke output — see the README's
+//! baseline-update workflow.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which way a metric is allowed to move before it counts as a
+/// regression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (throughput-like): regression when the current
+    /// value falls below `value·(1−rel_tol) − abs_tol`.
+    Higher,
+    /// Smaller is better (queued-seconds-like): regression when the
+    /// current value rises above `value·(1+rel_tol) + abs_tol`.
+    Lower,
+    /// Invariant strict floor: the current value must be `> value`.
+    Above,
+    /// Invariant strict ceiling: the current value must be `< value`.
+    Below,
+    /// Invariant equality within `abs_tol` (flags, determinism bits).
+    Exact,
+}
+
+impl Direction {
+    pub fn label(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Above => "above",
+            Direction::Below => "below",
+            Direction::Exact => "exact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Direction> {
+        Ok(match s {
+            "higher" => Direction::Higher,
+            "lower" => Direction::Lower,
+            "above" => Direction::Above,
+            "below" => Direction::Below,
+            "exact" => Direction::Exact,
+            other => bail!("unknown direction {other:?}"),
+        })
+    }
+}
+
+/// One metric's tolerance band.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Band {
+    pub value: f64,
+    pub direction: Direction,
+    pub rel_tol: f64,
+    pub abs_tol: f64,
+}
+
+impl Band {
+    /// Does `current` violate this band? Returns the regression message
+    /// (without the metric name) or `None` when it passes.
+    pub fn check(&self, current: f64) -> Option<String> {
+        let v = self.value;
+        match self.direction {
+            Direction::Higher => {
+                let floor = v * (1.0 - self.rel_tol) - self.abs_tol;
+                (current < floor).then(|| {
+                    format!(
+                        "{current} < floor {floor} (baseline {v}, rel_tol {}, abs_tol {}, \
+                         direction=higher)",
+                        self.rel_tol, self.abs_tol
+                    )
+                })
+            }
+            Direction::Lower => {
+                let ceil = v * (1.0 + self.rel_tol) + self.abs_tol;
+                (current > ceil).then(|| {
+                    format!(
+                        "{current} > ceiling {ceil} (baseline {v}, rel_tol {}, abs_tol {}, \
+                         direction=lower)",
+                        self.rel_tol, self.abs_tol
+                    )
+                })
+            }
+            Direction::Above => {
+                (!(current > v)).then(|| format!("{current} !> {v} (direction=above)"))
+            }
+            Direction::Below => {
+                (!(current < v)).then(|| format!("{current} !< {v} (direction=below)"))
+            }
+            Direction::Exact => ((current - v).abs() > self.abs_tol).then(|| {
+                format!("{current} != {v} (abs_tol {}, direction=exact)", self.abs_tol)
+            }),
+        }
+    }
+
+    /// A value that satisfies the band (self-test scaffolding).
+    pub fn satisfying_value(&self) -> f64 {
+        let v = self.value;
+        let step = v.abs() * 0.5 + 1.0;
+        match self.direction {
+            Direction::Higher | Direction::Lower | Direction::Exact => v,
+            Direction::Above => v + step,
+            Direction::Below => v - step,
+        }
+    }
+
+    /// A value that violates the band (self-test scaffolding).
+    pub fn violating_value(&self) -> f64 {
+        let v = self.value;
+        let step = v.abs() * 0.5 + 1.0;
+        match self.direction {
+            Direction::Higher => v * (1.0 - self.rel_tol) - self.abs_tol - step,
+            Direction::Lower => v * (1.0 + self.rel_tol) + self.abs_tol + step,
+            Direction::Above => v,
+            Direction::Below => v,
+            Direction::Exact => v + self.abs_tol + step,
+        }
+    }
+
+    fn to_json(self) -> String {
+        format!(
+            "{{\"value\":{:.9},\"direction\":\"{}\",\"rel_tol\":{:.9},\"abs_tol\":{:.9}}}",
+            self.value,
+            self.direction.label(),
+            self.rel_tol,
+            self.abs_tol
+        )
+    }
+
+    fn parse(j: &Json) -> Result<Band> {
+        Ok(Band {
+            value: j.req("value")?.as_f64().context("value not numeric")?,
+            direction: Direction::parse(
+                j.req("direction")?.as_str().context("direction not a string")?,
+            )?,
+            rel_tol: j.get("rel_tol").and_then(Json::as_f64).unwrap_or(0.0),
+            abs_tol: j.get("abs_tol").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// A committed baseline: one bench's metric bands.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    pub bench: String,
+    pub metrics: BTreeMap<String, Band>,
+}
+
+/// Version of the baseline file format.
+pub const BASELINE_VERSION: u32 = 1;
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let doc = Json::parse(text).context("baseline is not valid JSON")?;
+        let version = doc.req("version")?.as_usize().context("version not numeric")?;
+        if version != BASELINE_VERSION as usize {
+            bail!("baseline version {version} unsupported (want {BASELINE_VERSION})");
+        }
+        let bench = doc.req("bench")?.as_str().context("bench not a string")?.to_string();
+        let mut metrics = BTreeMap::new();
+        for (name, band) in doc.req("metrics")?.as_obj().context("metrics not an object")? {
+            metrics.insert(
+                name.clone(),
+                Band::parse(band).with_context(|| format!("metric {name:?}"))?,
+            );
+        }
+        Ok(Baseline { bench, metrics })
+    }
+
+    /// Deterministic serialization (sorted metric names).
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"version\":{BASELINE_VERSION},\"bench\":\"{}\",\"metrics\":{{",
+            self.bench
+        );
+        for (i, (name, band)) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{name}\":{}", band.to_json());
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+/// One named regression.
+#[derive(Debug, Clone)]
+pub struct Diff {
+    pub metric: String,
+    pub message: String,
+}
+
+/// Compare a bench's current normalized metrics against its baseline.
+/// Every baseline band must find its metric and pass it; extra current
+/// metrics (new telemetry not yet blessed) are ignored.
+pub fn compare(baseline: &Baseline, current: &BTreeMap<String, f64>) -> Vec<Diff> {
+    let mut diffs = Vec::new();
+    for (name, band) in &baseline.metrics {
+        match current.get(name) {
+            None => diffs.push(Diff {
+                metric: name.clone(),
+                message: "metric missing from bench output".to_string(),
+            }),
+            Some(&cur) => {
+                if let Some(msg) = band.check(cur) {
+                    diffs.push(Diff { metric: name.clone(), message: msg });
+                }
+            }
+        }
+    }
+    diffs
+}
+
+/// One normalized metric: the current measurement plus the band
+/// `--bless` would commit for it.
+#[derive(Debug, Clone)]
+pub struct NormMetric {
+    pub name: String,
+    pub current: f64,
+    pub bless: Band,
+}
+
+fn invariant(name: &str, current: f64, direction: Direction, bound: f64) -> NormMetric {
+    NormMetric {
+        name: name.to_string(),
+        current,
+        bless: Band { value: bound, direction, rel_tol: 0.0, abs_tol: 0.0 },
+    }
+}
+
+/// `current` must stay strictly above `bound` (usually 0).
+fn above(name: &str, current: f64, bound: f64) -> NormMetric {
+    invariant(name, current, Direction::Above, bound)
+}
+
+/// `current` must stay strictly below `bound`.
+fn below(name: &str, current: f64, bound: f64) -> NormMetric {
+    invariant(name, current, Direction::Below, bound)
+}
+
+/// `current` must equal `expect` exactly (flags, counts pinned to 0).
+fn exact(name: &str, current: f64, expect: f64) -> NormMetric {
+    invariant(name, current, Direction::Exact, expect)
+}
+
+/// `current` may never fall below `floor` (a non-strict invariant —
+/// `higher` with zero tolerance around the floor).
+fn at_least(name: &str, current: f64, floor: f64) -> NormMetric {
+    NormMetric {
+        name: name.to_string(),
+        current,
+        bless: Band { value: floor, direction: Direction::Higher, rel_tol: 0.0, abs_tol: 0.0 },
+    }
+}
+
+/// Measured metric where smaller is better; blessing pins the current
+/// value with `rel_tol` headroom.
+fn lower(name: &str, current: f64, rel_tol: f64) -> NormMetric {
+    NormMetric {
+        name: name.to_string(),
+        current,
+        bless: Band { value: current, direction: Direction::Lower, rel_tol, abs_tol: 0.0 },
+    }
+}
+
+/// Measured metric where bigger is better.
+fn higher(name: &str, current: f64, rel_tol: f64) -> NormMetric {
+    NormMetric {
+        name: name.to_string(),
+        current,
+        bless: Band { value: current, direction: Direction::Higher, rel_tol, abs_tol: 0.0 },
+    }
+}
+
+fn num(doc: &Json, key: &str) -> Result<f64> {
+    match doc.req(key)? {
+        Json::Num(n) => Ok(*n),
+        Json::Bool(b) => Ok(if *b { 1.0 } else { 0.0 }),
+        other => bail!("key {key:?} is not numeric: {other:?}"),
+    }
+}
+
+fn arr_len(doc: &Json, key: &str) -> Result<f64> {
+    Ok(doc.req(key)?.as_arr().with_context(|| format!("key {key:?} is not an array"))?.len()
+        as f64)
+}
+
+/// Every regression-gated bench and the smoke JSON file CI writes for
+/// it (`fig_cool_tier` → `cool_smoke.json` is the one irregular name).
+pub const BENCHES: &[(&str, &str)] = &[
+    ("fig_shard_scale", "shard_scale_smoke.json"),
+    ("fig_sched", "sched_smoke.json"),
+    ("fig_tier_hit", "tier_hit_smoke.json"),
+    ("fig_warm_tier", "warm_tier_smoke.json"),
+    ("fig_fleet", "fleet_smoke.json"),
+    ("fig_bus", "bus_smoke.json"),
+    ("fig_fault", "fault_smoke.json"),
+    ("fig_cool_tier", "cool_smoke.json"),
+    ("fig_trace", "trace_smoke.json"),
+];
+
+/// Flatten one bench's smoke JSON into the regression-matrix metrics,
+/// each with its default band. Fails loudly on a missing key — a bench
+/// that stops emitting a gated metric *is* a regression.
+pub fn normalize(bench: &str, doc: &Json) -> Result<Vec<NormMetric>> {
+    let mut m = Vec::new();
+    match bench {
+        "fig_shard_scale" => {
+            m.push(above("chunks", num(doc, "chunks")?, 0.0));
+            m.push(above("scale_rows", arr_len(doc, "scale_rows")?, 0.0));
+            let p = doc.req("prefetch")?;
+            m.push(above("prefetch.demand_wall_secs", num(p, "demand_wall_secs")?, 0.0));
+            m.push(above("prefetch.prefetch_wall_secs", num(p, "prefetch_wall_secs")?, 0.0));
+            m.push(at_least("prefetch.warmed", num(p, "warmed")?, 0.0));
+        }
+        "fig_sched" => {
+            m.push(above("requests", num(doc, "requests")?, 0.0));
+            m.push(above("policies", arr_len(doc, "policies")?, 0.0));
+            m.push(at_least("affinity_hit_gain", num(doc, "affinity_hit_gain")?, 0.0));
+            m.push(at_least("affinity_read_saving", num(doc, "affinity_read_saving")?, 0.0));
+            for p in doc.req("policies")?.as_arr().context("policies not an array")? {
+                let name = p.req("policy")?.as_str().context("policy not a string")?;
+                m.push(lower(
+                    &format!("{name}.mean_wait_ms"),
+                    num(p, "mean_wait_ms")?,
+                    0.25,
+                ));
+                m.push(lower(&format!("{name}.device_secs"), num(p, "device_secs")?, 0.25));
+                m.push(higher(&format!("{name}.cache_hits"), num(p, "cache_hits")?, 0.25));
+            }
+        }
+        "fig_tier_hit" => {
+            m.push(above("chunks", num(doc, "chunks")?, 0.0));
+            m.push(above("accesses", num(doc, "accesses")?, 0.0));
+            m.push(above("cells", arr_len(doc, "cells")?, 0.0));
+        }
+        "fig_warm_tier" => {
+            m.push(above("chunks", num(doc, "chunks")?, 0.0));
+            m.push(above("splits", arr_len(doc, "splits")?, 0.0));
+            m.push(above("total_budget_bytes", num(doc, "total_budget_bytes")?, 0.0));
+        }
+        "fig_fleet" => {
+            m.push(above("requests", num(doc, "requests")?, 0.0));
+            m.push(above("batches", num(doc, "batches")?, 0.0));
+            m.push(above("configs", arr_len(doc, "configs")?, 0.0));
+            // ROADMAP claim: the role-aware mixed fleet strictly beats a
+            // single H100 on tokens/joule.
+            m.push(above(
+                "role_tpj_gain_vs_single",
+                num(doc, "role_tpj_gain_vs_single")?,
+                0.0,
+            ));
+        }
+        "fig_bus" => {
+            m.push(above("rates", arr_len(doc, "rates")?, 0.0));
+            // CI already asserts this one: contention must bite.
+            m.push(above(
+                "high_load_queued_secs_on",
+                num(doc, "high_load_queued_secs_on")?,
+                0.0,
+            ));
+            m.push(higher("high_load_tps_gap", num(doc, "high_load_tps_gap")?, 0.25));
+            m.push(higher("high_load_p99_gap", num(doc, "high_load_p99_gap")?, 0.25));
+        }
+        "fig_fault" => {
+            m.push(exact("failed_requests", num(doc, "failed_requests")?, 0.0));
+            m.push(above("recomputed_chunks", num(doc, "recomputed_chunks")?, 0.0));
+            m.push(at_least("requeued_requests", num(doc, "requeued_requests")?, 0.0));
+            m.push(exact("clean_bit_identical", num(doc, "clean_bit_identical")?, 1.0));
+        }
+        "fig_cool_tier" => {
+            let v3 = doc.req("formats")?.req("v3")?;
+            let v4 = doc.req("formats")?.req("v4")?;
+            let flash_ratio = num(v4, "flash_bytes")? / num(v3, "flash_bytes")?;
+            let device_ratio = num(v4, "device_secs")? / num(v3, "device_secs")?;
+            m.push(below("v4_flash_bytes_over_v3", flash_ratio, 1.0));
+            m.push(below("v4_device_secs_over_v3", device_ratio, 1.0));
+            m.push(above("v4_q4_dequant_secs", num(v4, "q4_dequant_secs")?, 0.0));
+            let mut lru = None;
+            let mut tinylfu = None;
+            for row in doc.req("scan")?.as_arr().context("scan not an array")? {
+                match row.req("policy")?.as_str() {
+                    Some("lru") => lru = Some(num(row, "demand_hits")?),
+                    Some("tinylfu") => tinylfu = Some(num(row, "demand_hits")?),
+                    _ => {}
+                }
+            }
+            let (lru, tinylfu) = (
+                lru.context("scan has no lru row")?,
+                tinylfu.context("scan has no tinylfu row")?,
+            );
+            m.push(above("tinylfu_demand_hit_gain", tinylfu - lru, 0.0));
+        }
+        "fig_trace" => {
+            m.push(exact("deterministic", num(doc, "deterministic")?, 1.0));
+            m.push(exact("series_deterministic", num(doc, "series_deterministic")?, 1.0));
+            m.push(above("spans", num(doc, "spans")?, 0.0));
+            m.push(above("sched_events", num(doc, "sched_events")?, 0.0));
+            m.push(above("paths", num(doc, "paths")?, 0.0));
+            // the CI attribution bound: components sum within 1e-6 s
+            m.push(NormMetric {
+                name: "max_attribution_err_secs".to_string(),
+                current: num(doc, "max_attribution_err_secs")?,
+                bless: Band {
+                    value: 0.0,
+                    direction: Direction::Lower,
+                    rel_tol: 0.0,
+                    abs_tol: 1e-6,
+                },
+            });
+        }
+        other => bail!("unknown bench {other:?} (known: {:?})", BENCHES),
+    }
+    Ok(m)
+}
+
+/// Build a baseline from normalized metrics (the `--bless` writer).
+pub fn bless(bench: &str, norms: &[NormMetric]) -> Baseline {
+    Baseline {
+        bench: bench.to_string(),
+        metrics: norms.iter().map(|n| (n.name.clone(), n.bless)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn band(value: f64, direction: Direction, rel: f64, abs: f64) -> Band {
+        Band { value, direction, rel_tol: rel, abs_tol: abs }
+    }
+
+    #[test]
+    fn direction_rules() {
+        // higher: throughput may not drop below the tolerance floor
+        let b = band(100.0, Direction::Higher, 0.1, 0.0);
+        assert!(b.check(95.0).is_none());
+        assert!(b.check(90.0).is_none(), "exactly at the floor passes");
+        assert!(b.check(89.0).is_some());
+        // lower: queued-seconds may not grow beyond tolerance
+        let b = band(2.0, Direction::Lower, 0.25, 0.0);
+        assert!(b.check(2.5).is_none());
+        assert!(b.check(2.6).is_some());
+        // above / below are strict
+        assert!(band(0.0, Direction::Above, 0.0, 0.0).check(0.0).is_some());
+        assert!(band(0.0, Direction::Above, 0.0, 0.0).check(1e-9).is_none());
+        assert!(band(1.0, Direction::Below, 0.0, 0.0).check(1.0).is_some());
+        assert!(band(1.0, Direction::Below, 0.0, 0.0).check(0.99).is_none());
+        // exact within abs_tol
+        assert!(band(1.0, Direction::Exact, 0.0, 0.0).check(1.0).is_none());
+        assert!(band(1.0, Direction::Exact, 0.0, 0.0).check(1.1).is_some());
+        assert!(band(0.0, Direction::Lower, 0.0, 1e-6).check(5e-7).is_none());
+        assert!(band(0.0, Direction::Lower, 0.0, 1e-6).check(2e-6).is_some());
+    }
+
+    #[test]
+    fn satisfying_and_violating_values_do_what_they_say() {
+        for dir in
+            [Direction::Higher, Direction::Lower, Direction::Above, Direction::Below, Direction::Exact]
+        {
+            for value in [0.0, 1.0, 2.5e6, 1e-6] {
+                let b = band(value, dir, 0.25, 0.0);
+                assert!(
+                    b.check(b.satisfying_value()).is_none(),
+                    "{dir:?} value {value}: satisfying value failed its own band"
+                );
+                assert!(
+                    b.check(b.violating_value()).is_some(),
+                    "{dir:?} value {value}: violating value passed its own band"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrips() {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("tps".to_string(), band(120.5, Direction::Higher, 0.1, 0.0));
+        metrics.insert("queued_secs".to_string(), band(0.2, Direction::Lower, 0.25, 0.001));
+        metrics.insert("failed".to_string(), band(0.0, Direction::Exact, 0.0, 0.0));
+        let b = Baseline { bench: "fig_x".to_string(), metrics };
+        let parsed = Baseline::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed, b);
+        assert_eq!(parsed.to_json(), b.to_json(), "serialization is deterministic");
+    }
+
+    #[test]
+    fn perturbed_metric_fails_with_the_right_named_diff() {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("throughput_tps".to_string(), band(100.0, Direction::Higher, 0.1, 0.0));
+        metrics.insert("queued_secs".to_string(), band(1.0, Direction::Lower, 0.25, 0.0));
+        metrics.insert("failed_requests".to_string(), band(0.0, Direction::Exact, 0.0, 0.0));
+        let baseline = Baseline { bench: "fig_x".to_string(), metrics };
+
+        let mut current: BTreeMap<String, f64> =
+            baseline.metrics.iter().map(|(k, b)| (k.clone(), b.satisfying_value())).collect();
+        assert!(compare(&baseline, &current).is_empty(), "clean run must pass");
+
+        // deliberately perturb exactly one metric the wrong way
+        current.insert("queued_secs".to_string(), 2.0);
+        let diffs = compare(&baseline, &current);
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(diffs[0].metric, "queued_secs");
+        assert!(diffs[0].message.contains("direction=lower"), "{}", diffs[0].message);
+
+        // and a missing metric is itself a named failure
+        current.remove("queued_secs");
+        current.insert("failed_requests".to_string(), 0.0);
+        let diffs = compare(&baseline, &current);
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(diffs[0].metric, "queued_secs");
+        assert!(diffs[0].message.contains("missing"), "{}", diffs[0].message);
+    }
+
+    #[test]
+    fn normalize_cool_tier_extracts_the_invariants() {
+        let doc = Json::parse(
+            r#"{"bench":"fig_cool_tier","formats":{
+                "v3":{"reads":10,"flash_bytes":4000,"device_secs":0.4,"q4_dequant_secs":0.0},
+                "v4":{"reads":10,"flash_bytes":1000,"device_secs":0.1,"q4_dequant_secs":0.02}},
+               "scan":[{"policy":"lru","demand_hits":5},{"policy":"tinylfu","demand_hits":9}]}"#,
+        )
+        .unwrap();
+        let norms = normalize("fig_cool_tier", &doc).unwrap();
+        let by_name: BTreeMap<String, f64> =
+            norms.iter().map(|n| (n.name.clone(), n.current)).collect();
+        assert_eq!(by_name["v4_flash_bytes_over_v3"], 0.25);
+        assert_eq!(by_name["tinylfu_demand_hit_gain"], 4.0);
+        let blessed = bless("fig_cool_tier", &norms);
+        assert!(compare(&blessed, &by_name).is_empty());
+    }
+
+    #[test]
+    fn normalize_trace_pins_determinism_and_attribution() {
+        let doc = Json::parse(
+            r#"{"deterministic":true,"series_deterministic":true,"spans":120,
+                "sched_events":30,"paths":16,"max_attribution_err_secs":2.0e-9}"#,
+        )
+        .unwrap();
+        let norms = normalize("fig_trace", &doc).unwrap();
+        let by_name: BTreeMap<String, f64> =
+            norms.iter().map(|n| (n.name.clone(), n.current)).collect();
+        let blessed = bless("fig_trace", &norms);
+        assert!(compare(&blessed, &by_name).is_empty());
+        // a nondeterministic trace fails by name
+        let mut bad = by_name.clone();
+        bad.insert("deterministic".to_string(), 0.0);
+        let diffs = compare(&blessed, &bad);
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(diffs[0].metric, "deterministic");
+        // attribution error beyond 1e-6 fails by name
+        let mut bad = by_name;
+        bad.insert("max_attribution_err_secs".to_string(), 5e-6);
+        let diffs = compare(&blessed, &bad);
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(diffs[0].metric, "max_attribution_err_secs");
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        assert!(normalize("fig_nope", &Json::parse("{}").unwrap()).is_err());
+    }
+}

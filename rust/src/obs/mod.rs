@@ -1,0 +1,34 @@
+//! Unified observability: one metrics registry, one virtual-clock
+//! sampler, one regression matrix.
+//!
+//! Before this module, counters lived scattered across `CacheStats`,
+//! `ShardStats`, `LinkStats`, `PhaseBreakdown`, and `FleetReport` with
+//! ad-hoc JSON shapes, and the only time series was a hand-rolled pair
+//! in `kvstore/cache.rs`. Everything now registers into a
+//! [`MetricsRegistry`] under stable dotted names with `key=value`
+//! labels (`matkv.tier.hits{tier=hot}`,
+//! `matkv.link.queued_seconds{link=hostbus}`,
+//! `matkv.worker.busy_seconds{worker=rtx4090:1}`), a [`Sampler`]
+//! driven by the scheduler/fleet **virtual** clock snapshots the
+//! registry into aligned time series, and both exports — the
+//! Prometheus text dump and the versioned series JSON — are
+//! byte-identical across runs of the same seed+config, the same
+//! guarantee the trace layer makes.
+//!
+//! [`check`] turns those exports into a regression gate: normalized
+//! per-bench metrics, committed baselines with direction-aware
+//! tolerance bands, and named diffs when a number moves the wrong way
+//! (`cargo bench --bench bench_check -- --all`).
+
+pub mod check;
+pub mod registry;
+pub mod sampler;
+pub mod tier;
+
+pub use check::{
+    bless, compare, normalize, Band, Baseline, Diff, Direction, NormMetric, BASELINE_VERSION,
+    BENCHES,
+};
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use sampler::{Sampler, MAX_SAMPLES, SERIES_VERSION};
+pub use tier::{register_tier, series_to_json, CacheSample, TierMetrics, TierSeries};

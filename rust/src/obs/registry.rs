@@ -1,0 +1,439 @@
+//! The unified metrics registry: every subsystem's counters behind one
+//! typed, named surface.
+//!
+//! PR 9 gave the testbed *events* (spans on the virtual clocks); this
+//! module gives it *aggregates*. Before it, counters were scattered —
+//! `CacheStats`, `ShardStats`, `LinkStats`, `PhaseBreakdown`, the fleet
+//! report — each with its own ad-hoc JSON shape, and nothing could
+//! enumerate "everything the system measures" in one pass. The registry
+//! fixes the enumeration problem without touching the hot paths: the
+//! existing relaxed-atomic fields stay exactly where they are, and
+//! subsystems register either *owned* instruments (a [`Counter`] /
+//! [`Gauge`] handle the subsystem bumps directly) or *polled* bridges
+//! (a closure over an `Arc` that reads the pre-existing atomics at
+//! snapshot time, costing the hot path nothing at all).
+//!
+//! Naming schema (enforced by [`MetricsRegistry`]):
+//!
+//! * dotted lowercase metric names — `matkv.tier.hits`,
+//!   `matkv.link.queued_seconds` — segments of `[a-z0-9_]`;
+//! * `key=value` labels for the instance dimension — `tier=hot`,
+//!   `shard=3`, `worker=rtx4090:1`, `class=h2d` — canonicalized by
+//!   sorting on the key, so `[a=1, b=2]` and `[b=2, a=1]` name the
+//!   same series;
+//! * seconds-valued counters end in `_seconds`, byte-valued ones in
+//!   `_bytes` (mirrored from the Prometheus conventions).
+//!
+//! Registering the same fully-qualified id twice errors loudly instead
+//! of silently aliasing two subsystems onto one counter.
+//!
+//! Exports are deterministic by construction: iteration order is the
+//! `BTreeMap` order of canonical ids and every float prints at fixed
+//! precision, so two runs of the same seed+config produce byte-identical
+//! dumps — the same guarantee the PR-9 trace export makes.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::LogHistogram;
+
+/// A monotone event counter. Cloning shares the underlying cell, so a
+/// subsystem keeps one handle and the registry another. `inc`/`add` are
+/// one relaxed atomic RMW — the same cost as the raw `AtomicU64` fields
+/// the rest of the codebase already pays (`hotpath_micro` pins this).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time value (queue depth, residency bytes, utilization).
+/// Stored as `f64` bits in an atomic; `set` is one relaxed store.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A first-class distribution instrument: the PR-9 [`LogHistogram`]
+/// (fixed universal bucket geometry, exact merges) behind a shared
+/// handle. Not on any hot path — recorded per request, not per byte.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Arc<Mutex<LogHistogram>>);
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        self.0.lock().unwrap().record(v);
+    }
+
+    pub fn snapshot(&self) -> LogHistogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Where a metric's current value comes from at snapshot time.
+enum Source {
+    Counter(Counter),
+    Gauge(Gauge),
+    /// Bridge over a pre-existing atomic (or any computed value) with
+    /// counter semantics: cumulative and non-decreasing.
+    CounterPoll(Arc<dyn Fn() -> f64 + Send + Sync>),
+    /// Bridge with gauge semantics: a point-in-time level.
+    GaugePoll(Arc<dyn Fn() -> f64 + Send + Sync>),
+    Hist(Histogram),
+}
+
+struct Metric {
+    /// Dotted metric name (label-free part of the id).
+    name: String,
+    /// Canonicalized (key-sorted) labels.
+    labels: Vec<(String, String)>,
+    help: String,
+    source: Source,
+}
+
+/// The process-wide metric namespace: canonical id → instrument.
+/// Construct one per run ([`MetricsRegistry::new`] returns an `Arc` —
+/// samplers and subsystems share it), register every subsystem into it,
+/// then export with [`MetricsRegistry::to_prometheus`] or sample it on
+/// the virtual clock with [`super::Sampler`].
+#[derive(Default)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// Format one sampled value deterministically: integers print bare
+/// (`42`, not `42.000000000`), everything else at fixed `{:.9}`.
+pub(crate) fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.9}")
+    }
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.starts_with(|c: char| c.is_ascii_lowercase())
+        && !name.ends_with('.')
+        && !name.contains("..")
+        && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '.')
+}
+
+fn valid_label_key(k: &str) -> bool {
+    !k.is_empty()
+        && k.starts_with(|c: char| c.is_ascii_lowercase())
+        && k.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn valid_label_value(v: &str) -> bool {
+    !v.is_empty() && v.chars().all(|c| c.is_ascii_graphic() && !"\"{},=".contains(c))
+}
+
+/// Canonical id: `name` alone, or `name{k=v,...}` with labels sorted by
+/// key. The id is both the registry key and the series name in sampler
+/// JSON, so canonicalization is what makes label order irrelevant.
+fn canonical_id(name: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        source: Source,
+    ) -> Result<()> {
+        if !valid_name(name) {
+            bail!("invalid metric name {name:?}: want dotted lowercase [a-z0-9_.]");
+        }
+        let mut canon: Vec<(String, String)> = Vec::with_capacity(labels.len());
+        for (k, v) in labels {
+            if !valid_label_key(k) {
+                bail!("invalid label key {k:?} on metric {name:?}");
+            }
+            if !valid_label_value(v) {
+                bail!("invalid label value {v:?} for {k}= on metric {name:?}");
+            }
+            canon.push((k.to_string(), v.to_string()));
+        }
+        canon.sort();
+        if canon.windows(2).any(|w| w[0].0 == w[1].0) {
+            bail!("duplicate label key on metric {name:?}");
+        }
+        let id = canonical_id(name, &canon);
+        let mut m = self.metrics.lock().unwrap();
+        if m.contains_key(&id) {
+            bail!("metric {id} already registered");
+        }
+        m.insert(
+            id,
+            Metric { name: name.to_string(), labels: canon, help: help.to_string(), source },
+        );
+        Ok(())
+    }
+
+    /// Register an owned counter and return the shared handle.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Result<Counter> {
+        let c = Counter::default();
+        self.register(name, labels, help, Source::Counter(c.clone()))?;
+        Ok(c)
+    }
+
+    /// Register an owned gauge and return the shared handle.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Result<Gauge> {
+        let g = Gauge::default();
+        self.register(name, labels, help, Source::Gauge(g.clone()))?;
+        Ok(g)
+    }
+
+    /// Register a [`LogHistogram`] instrument and return the handle.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Result<Histogram> {
+        let h = Histogram::default();
+        self.register(name, labels, help, Source::Hist(h.clone()))?;
+        Ok(h)
+    }
+
+    /// Register a polled counter: `f` is called at snapshot/export time
+    /// and must return a cumulative, non-decreasing value. This is the
+    /// zero-hot-path-cost bridge onto the pre-existing atomic fields.
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) -> Result<()> {
+        self.register(name, labels, help, Source::CounterPoll(Arc::new(f)))
+    }
+
+    /// Register a polled gauge: `f` returns the current level.
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) -> Result<()> {
+        self.register(name, labels, help, Source::GaugePoll(Arc::new(f)))
+    }
+
+    /// Whether `name` + `labels` (any order) is already registered.
+    pub fn contains(&self, name: &str, labels: &[(&str, &str)]) -> bool {
+        let mut canon: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        canon.sort();
+        self.metrics.lock().unwrap().contains_key(&canonical_id(name, &canon))
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current scalar value of every non-histogram metric, in canonical
+    /// id order — what [`super::Sampler`] appends to its series each
+    /// tick. Histograms are excluded: a distribution has no single
+    /// sample value (they export through the Prometheus dump instead).
+    pub fn sampled_values(&self) -> Vec<(String, f64)> {
+        let m = self.metrics.lock().unwrap();
+        let mut out = Vec::with_capacity(m.len());
+        for (id, metric) in m.iter() {
+            let v = match &metric.source {
+                Source::Counter(c) => c.get() as f64,
+                Source::Gauge(g) => g.get(),
+                Source::CounterPoll(f) | Source::GaugePoll(f) => f(),
+                Source::Hist(_) => continue,
+            };
+            out.push((id.clone(), v));
+        }
+        out
+    }
+
+    /// Prometheus text-format dump. Families sort by canonical id (so
+    /// every line of a family is contiguous), dots mangle to underscores
+    /// per the exposition format, histograms render as summaries
+    /// (`quantile=` series plus `_sum`/`_count`), and all values format
+    /// through one fixed-precision rule — byte-identical across runs of
+    /// the same seed+config.
+    pub fn to_prometheus(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for metric in m.values() {
+            let family = metric.name.replace('.', "_");
+            if family != last_family {
+                if !metric.help.is_empty() {
+                    let _ = writeln!(out, "# HELP {family} {}", metric.help);
+                }
+                let kind = match &metric.source {
+                    Source::Counter(_) | Source::CounterPoll(_) => "counter",
+                    Source::Gauge(_) | Source::GaugePoll(_) => "gauge",
+                    Source::Hist(_) => "summary",
+                };
+                let _ = writeln!(out, "# TYPE {family} {kind}");
+                last_family = family.clone();
+            }
+            match &metric.source {
+                Source::Hist(h) => {
+                    let hist = h.snapshot();
+                    for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                        let mut labels = metric.labels.clone();
+                        labels.push(("quantile".to_string(), q.to_string()));
+                        let _ = writeln!(
+                            out,
+                            "{family}{} {}",
+                            prom_labels(&labels),
+                            fmt_value(hist.percentile(p))
+                        );
+                    }
+                    let l = prom_labels(&metric.labels);
+                    let _ = writeln!(out, "{family}_sum{l} {}", fmt_value(hist.sum()));
+                    let _ = writeln!(out, "{family}_count{l} {}", hist.len());
+                }
+                src => {
+                    let v = match src {
+                        Source::Counter(c) => c.get() as f64,
+                        Source::Gauge(g) => g.get(),
+                        Source::CounterPoll(f) | Source::GaugePoll(f) => f(),
+                        Source::Hist(_) => unreachable!("handled above"),
+                    };
+                    let _ = writeln!(
+                        out,
+                        "{family}{} {}",
+                        prom_labels(&metric.labels),
+                        fmt_value(v)
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` in canonical (sorted) order; empty string for none.
+fn prom_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicate_registration_errors_loudly() {
+        let reg = MetricsRegistry::new();
+        reg.counter("matkv.test.hits", &[("tier", "hot")], "hits").unwrap();
+        let err = reg.counter("matkv.test.hits", &[("tier", "hot")], "hits").unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"), "{err:#}");
+        // same name, different labels: a new series, not a duplicate
+        reg.counter("matkv.test.hits", &[("tier", "warm")], "hits").unwrap();
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn label_order_is_canonicalized() {
+        let reg = MetricsRegistry::new();
+        reg.counter("matkv.test.bytes", &[("shard", "0"), ("class", "h2d")], "").unwrap();
+        // the same series under reversed label order collides
+        let err =
+            reg.counter("matkv.test.bytes", &[("class", "h2d"), ("shard", "0")], "").unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"), "{err:#}");
+        assert!(reg.contains("matkv.test.bytes", &[("class", "h2d"), ("shard", "0")]));
+        // and the canonical id sorts the keys
+        let ids: Vec<String> = reg.sampled_values().into_iter().map(|(id, _)| id).collect();
+        assert_eq!(ids, vec!["matkv.test.bytes{class=h2d,shard=0}".to_string()]);
+    }
+
+    #[test]
+    fn invalid_names_and_labels_are_rejected() {
+        let reg = MetricsRegistry::new();
+        assert!(reg.counter("Bad.Name", &[], "").is_err());
+        assert!(reg.counter("trailing.", &[], "").is_err());
+        assert!(reg.counter("double..dot", &[], "").is_err());
+        assert!(reg.counter("ok.name", &[("BadKey", "v")], "").is_err());
+        assert!(reg.counter("ok.name", &[("k", "bad\"value")], "").is_err());
+        assert!(reg.counter("ok.name", &[("k", "v"), ("k", "w")], "").is_err());
+        assert!(reg.counter("ok.name", &[("k", "rtx4090:1")], "").is_ok());
+    }
+
+    #[test]
+    fn prometheus_dump_is_deterministic_and_typed() {
+        let dump = |seed: u64| {
+            let reg = MetricsRegistry::new();
+            let c = reg.counter("matkv.t.hits", &[("tier", "hot")], "tier hits").unwrap();
+            let g = reg.gauge("matkv.t.depth", &[], "queue depth").unwrap();
+            let h = reg.histogram("matkv.t.latency_seconds", &[("worker", "h100:0")], "").unwrap();
+            reg.counter_fn("matkv.t.polled", &[], "bridge", move || (seed * 2) as f64).unwrap();
+            c.add(seed);
+            g.set(seed as f64 + 0.5);
+            h.record(0.001);
+            h.record(0.004);
+            reg.to_prometheus()
+        };
+        let a = dump(7);
+        assert_eq!(a, dump(7), "same inputs must export byte-identical text");
+        assert_ne!(a, dump(8));
+        assert!(a.contains("# TYPE matkv_t_hits counter"), "{a}");
+        assert!(a.contains("matkv_t_hits{tier=\"hot\"} 7"), "{a}");
+        assert!(a.contains("# TYPE matkv_t_depth gauge"), "{a}");
+        assert!(a.contains("matkv_t_depth 7.500000000"), "{a}");
+        assert!(a.contains("# TYPE matkv_t_latency_seconds summary"), "{a}");
+        assert!(a.contains("matkv_t_latency_seconds{worker=\"h100:0\",quantile=\"0.5\"}"), "{a}");
+        assert!(a.contains("matkv_t_latency_seconds_count{worker=\"h100:0\"} 2"), "{a}");
+        assert!(a.contains("matkv_t_polled 14"), "{a}");
+    }
+
+    #[test]
+    fn integer_values_print_bare() {
+        assert_eq!(fmt_value(42.0), "42");
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(268435456.0), "268435456");
+        assert_eq!(fmt_value(0.5), "0.500000000");
+        assert_eq!(fmt_value(1e18), format!("{:.9}", 1e18));
+    }
+}

@@ -1,0 +1,244 @@
+//! The virtual-clock time-series sampler: aligned series over the
+//! whole [`MetricsRegistry`](super::MetricsRegistry).
+//!
+//! Bottleneck attribution needs *utilization over time*, not point
+//! totals — a link that queued 4 s total looks identical whether it
+//! queued steadily or all at once, and only the series tells the
+//! difference. The sampler snapshots every registered counter/gauge at
+//! a fixed **virtual** period: the driving clock is the scheduler's
+//! release clock and the fleet's dispatch clock (the same deterministic
+//! timeline the traces run on), never wall time, so two runs of the
+//! same seed+config produce byte-identical series JSON.
+//!
+//! Period semantics: tick boundaries sit at `0, p, 2p, …` on the
+//! virtual timeline. Instrumented loops call
+//! [`Sampler::advance_to`]`(t)` as their clock passes `t`; each
+//! boundary fires the first time *any* caller's clock reaches it, and
+//! counter values are read as of that call — the simulation may have
+//! already scored work "later" than the boundary within the same loop
+//! iteration, which is the usual discretization of sampling a
+//! simulator, and is deterministic because the loop order is.
+//! [`Sampler::finish`] records one final (possibly off-period) sample
+//! at the end of a run so the last partial period is not lost.
+//!
+//! Metrics registered after sampling started are backfilled with zeros
+//! so every series stays aligned to the shared time axis.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use super::registry::{fmt_value, MetricsRegistry};
+
+/// Ticks kept before sampling quietly stops — the same bound the tier
+/// telemetry series uses, so a run that never drains cannot grow the
+/// series without bound.
+pub const MAX_SAMPLES: usize = 16_384;
+
+/// Version of the JSON series document [`Sampler::to_json`] emits.
+/// Bump when the shape changes; `bench_check` and figure consumers key
+/// on it.
+pub const SERIES_VERSION: u32 = 1;
+
+/// Snapshots a [`MetricsRegistry`] at a fixed virtual period into
+/// aligned time series. Not `Clone`: one sampler owns one time axis.
+pub struct Sampler {
+    registry: Arc<MetricsRegistry>,
+    period: f64,
+    /// Next tick boundary on the virtual timeline.
+    next_t: f64,
+    times: Vec<f64>,
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Sampler {
+    /// A sampler ticking every `period_secs` of virtual time, with the
+    /// first boundary at t = 0 (an all-baseline anchor row). Periods
+    /// at or below zero clamp to 1 ms.
+    pub fn new(registry: Arc<MetricsRegistry>, period_secs: f64) -> Sampler {
+        Sampler {
+            registry,
+            period: if period_secs > 0.0 { period_secs } else { 1e-3 },
+            next_t: 0.0,
+            times: Vec::new(),
+            series: BTreeMap::new(),
+        }
+    }
+
+    pub fn period_secs(&self) -> f64 {
+        self.period
+    }
+
+    /// Samples recorded so far.
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// The caller's virtual clock has reached `t`: fire every tick
+    /// boundary at or before it. Monotone and idempotent — calls with
+    /// an earlier `t` (another worker's clock running behind) are
+    /// no-ops, so interleaved clocks can all drive one sampler.
+    pub fn advance_to(&mut self, t: f64) {
+        while self.next_t <= t + 1e-12 && self.times.len() < MAX_SAMPLES {
+            let tick = self.next_t;
+            self.next_t += self.period;
+            self.tick(tick);
+        }
+    }
+
+    /// End of run: advance through `t`, then record one final sample at
+    /// `t` itself if it sits past the last boundary — the tail partial
+    /// period would otherwise vanish from every series.
+    pub fn finish(&mut self, t: f64) {
+        self.advance_to(t);
+        if self.times.len() < MAX_SAMPLES && self.times.last().is_none_or(|&last| t > last) {
+            self.tick(t);
+            self.next_t = self.next_t.max(t + self.period);
+        }
+    }
+
+    fn tick(&mut self, t: f64) {
+        self.times.push(t);
+        let n = self.times.len();
+        for (id, v) in self.registry.sampled_values() {
+            let s = self.series.entry(id).or_default();
+            if s.len() < n - 1 {
+                // registered after earlier ticks: backfill to stay aligned
+                s.resize(n - 1, 0.0);
+            }
+            s.push(v);
+        }
+    }
+
+    /// The versioned series document: shared time axis plus one aligned
+    /// value array per canonical metric id, in sorted id order.
+    /// Deterministic bytes for deterministic values.
+    pub fn to_json(&self) -> String {
+        let n = self.times.len();
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"version\":{SERIES_VERSION},\"period_secs\":{:.6},\"samples\":{n},\"times\":[",
+            self.period
+        );
+        for (i, t) in self.times.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{t:.6}");
+        }
+        out.push_str("],\"series\":{");
+        let mut first = true;
+        for (id, vals) in &self.series {
+            if vals.len() != n {
+                // registered after the last tick: nothing aligned to emit
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(out, "\"{id}\":[");
+            for (i, v) in vals.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&fmt_value(*v));
+            }
+            out.push(']');
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_on_period_boundaries_only() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("matkv.s.events", &[], "").unwrap();
+        let mut s = Sampler::new(reg, 1.0);
+        c.add(5);
+        s.advance_to(0.25); // fires the t=0 anchor only
+        assert_eq!(s.len(), 1);
+        c.add(5);
+        s.advance_to(2.5); // fires t=1 and t=2
+        assert_eq!(s.len(), 3);
+        s.advance_to(2.5); // idempotent
+        s.advance_to(1.0); // monotone: late clocks are no-ops
+        assert_eq!(s.len(), 3);
+        let doc = s.to_json();
+        assert!(doc.contains("\"times\":[0.000000,1.000000,2.000000]"), "{doc}");
+        assert!(doc.contains("\"matkv.s.events\":[5,10,10]"), "{doc}");
+    }
+
+    #[test]
+    fn series_json_is_byte_identical_across_runs() {
+        let run = || {
+            let reg = MetricsRegistry::new();
+            let c = reg.counter("matkv.s.reads", &[("shard", "0")], "").unwrap();
+            let g = reg.gauge("matkv.s.depth", &[], "").unwrap();
+            let mut s = Sampler::new(reg, 0.5);
+            for i in 0..20 {
+                c.add(i % 3);
+                g.set(i as f64 * 0.25);
+                s.advance_to(i as f64 * 0.3);
+            }
+            s.finish(6.1);
+            s.to_json()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same scripted run must serialize byte-identically");
+        assert!(a.starts_with("{\"version\":1,\"period_secs\":0.500000"), "{a}");
+    }
+
+    #[test]
+    fn late_registration_backfills_zeros() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("matkv.s.early", &[], "").unwrap();
+        let mut s = Sampler::new(reg.clone(), 1.0);
+        c.inc();
+        s.advance_to(1.0); // t=0, t=1
+        let late = reg.counter("matkv.s.late", &[], "").unwrap();
+        late.add(7);
+        s.advance_to(2.0);
+        let doc = s.to_json();
+        assert!(doc.contains("\"matkv.s.early\":[1,1,1]"), "{doc}");
+        assert!(doc.contains("\"matkv.s.late\":[0,0,7]"), "{doc}");
+    }
+
+    #[test]
+    fn finish_records_the_tail_sample() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("matkv.s.tail", &[], "").unwrap();
+        let mut s = Sampler::new(reg, 10.0);
+        c.add(1);
+        s.finish(3.5);
+        assert_eq!(s.len(), 2, "t=0 anchor plus the off-period tail");
+        let doc = s.to_json();
+        assert!(doc.contains("\"times\":[0.000000,3.500000]"), "{doc}");
+        // finishing twice at the same time does not duplicate the tail
+        let mut s2 = Sampler::new(MetricsRegistry::new(), 10.0);
+        s2.finish(3.5);
+        s2.finish(3.5);
+        assert_eq!(s2.len(), 2);
+    }
+
+    #[test]
+    fn sampling_stops_at_the_cap() {
+        let reg = MetricsRegistry::new();
+        reg.counter("matkv.s.capped", &[], "").unwrap();
+        let mut s = Sampler::new(reg, 0.001);
+        s.advance_to(1e9);
+        assert_eq!(s.len(), MAX_SAMPLES);
+        s.finish(2e9);
+        assert_eq!(s.len(), MAX_SAMPLES);
+    }
+}

@@ -1,0 +1,271 @@
+//! Tier telemetry on the shared observability machinery.
+//!
+//! [`CacheSample`]/[`series_to_json`] started life inside
+//! `kvstore/cache.rs` as the repo's only (hand-rolled) time series, and
+//! the warm tier carried a copy-pasted sampling path of its own. They
+//! now live here: one sample shape, one bounded series buffer
+//! ([`TierSeries`]), and one sampling + registration path
+//! ([`TierMetrics`]) that both DRAM tiers share. `kvstore` re-exports
+//! the names, so existing consumers (`fig_tier_hit`, `fig_sched`,
+//! `fig_shard_scale`, `fig_warm_tier` JSON embeds) keep compiling and
+//! keep their byte-exact JSON shape.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::registry::MetricsRegistry;
+use crate::kvstore::cache::{CacheStats, TierKind};
+
+/// One cumulative telemetry snapshot of a DRAM tier. Producers
+/// (benches, the overlap pipeline) call [`TierMetrics::sample`] once
+/// per batch / access window; consumers diff consecutive samples to get
+/// the per-batch rates the hit-ratio-vs-offered-load curves need.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheSample {
+    /// Which tier recorded this sample (`"hot"` for pre-warm consumers).
+    pub tier: TierKind,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub prefetch_inserts: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_rejected: u64,
+    /// Modeled seconds spent dequantizing q8 hits (warm tier only; the
+    /// hot tier serves f32 and leaves this 0).
+    pub dequant_secs: f64,
+    /// Modeled seconds spent quantizing chunks *into* the q8 tier
+    /// (demotions and direct admissions; symmetric to `dequant_secs`).
+    pub quant_secs: f64,
+    /// Seconds this tier's quant/dequant transfers spent queued behind
+    /// other traffic on the shared host bus
+    /// ([`crate::hwsim::Link`]) — 0 for tiers not wired to a bus.
+    pub link_queued_secs: f64,
+    pub resident_bytes: u64,
+    pub resident_chunks: u64,
+}
+
+impl CacheSample {
+    /// Compact JSON object — the one serializer for the telemetry
+    /// series, so benches embedding it in `--json` output can't drift
+    /// from the struct's fields. The field order is pinned by
+    /// downstream consumers; new telemetry goes through the registry,
+    /// not through this shape.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"tier\":\"{}\",\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
+             \"prefetch_inserts\":{},\"prefetch_hits\":{},\"prefetch_rejected\":{},\
+             \"dequant_secs\":{:.6},\"quant_secs\":{:.6},\"link_queued_secs\":{:.6},\
+             \"resident_bytes\":{},\"resident_chunks\":{}}}",
+            self.tier.label(),
+            self.hits,
+            self.misses,
+            self.insertions,
+            self.evictions,
+            self.prefetch_inserts,
+            self.prefetch_hits,
+            self.prefetch_rejected,
+            self.dequant_secs,
+            self.quant_secs,
+            self.link_queued_secs,
+            self.resident_bytes,
+            self.resident_chunks
+        )
+    }
+}
+
+/// JSON array of [`CacheSample::to_json`] objects.
+pub fn series_to_json(series: &[CacheSample]) -> String {
+    let body: Vec<String> = series.iter().map(CacheSample::to_json).collect();
+    format!("[{}]", body.join(","))
+}
+
+/// Series entries kept before sampling quietly stops (a run that never
+/// drains would otherwise grow the series without bound).
+const SAMPLE_CAP: usize = 16_384;
+
+/// The bounded tier-telemetry buffer [`CacheStats`] embeds — the one
+/// copy of the machinery both tiers used to duplicate.
+#[derive(Debug, Default)]
+pub struct TierSeries {
+    samples: Mutex<Vec<CacheSample>>,
+}
+
+impl TierSeries {
+    /// Append a snapshot (no-op past the cap).
+    pub fn record(&self, sample: CacheSample) {
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < SAMPLE_CAP {
+            s.push(sample);
+        }
+    }
+
+    pub fn samples(&self) -> Vec<CacheSample> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+}
+
+/// What a byte-budgeted tier exposes to the shared telemetry path: its
+/// counters and its residency under the tier's own lock discipline.
+/// `sample` is the provided, tier-agnostic sampling path that replaced
+/// the per-tier copies.
+pub trait TierMetrics {
+    fn tier_stats(&self) -> &CacheStats;
+
+    /// Current `(resident_bytes, resident_chunks)` — one lock
+    /// acquisition, the implementor owns the discipline.
+    fn residency(&self) -> (usize, usize);
+
+    /// Append one cumulative snapshot to the tier's telemetry series.
+    fn sample(&self) {
+        let (bytes, chunks) = self.residency();
+        self.tier_stats().record_sample(bytes, chunks);
+    }
+}
+
+/// Register every tier counter/gauge into `reg` under
+/// `matkv.tier.*{tier=<label>}` as polled bridges over the existing
+/// atomics — the hot path pays nothing it wasn't already paying. One
+/// registration path for both tiers (hot f32 and warm q8/q4), including
+/// the counters the pinned [`CacheSample`] shape can't carry
+/// (`admission_rejected`, the q4 clocks).
+pub fn register_tier<T>(reg: &MetricsRegistry, tier: Arc<T>) -> Result<()>
+where
+    T: TierMetrics + Send + Sync + 'static,
+{
+    use std::sync::atomic::Ordering::Relaxed;
+    let label = tier.tier_stats().tier.label();
+    let labels = [("tier", label)];
+    macro_rules! poll_counter {
+        ($name:expr, $help:expr, |$t:ident| $body:expr) => {{
+            let t = Arc::clone(&tier);
+            reg.counter_fn($name, &labels, $help, move || {
+                let $t = t.tier_stats();
+                $body
+            })?;
+        }};
+    }
+    poll_counter!("matkv.tier.hits", "demand hits served by this tier", |s| {
+        s.hits.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.misses", "demand lookups this tier missed", |s| {
+        s.misses.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.insertions", "chunks admitted", |s| {
+        s.insertions.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.evictions", "chunks evicted", |s| {
+        s.evictions.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.bytes_saved", "device bytes avoided by hits", |s| {
+        s.bytes_saved.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.prefetch_inserts", "prefetch-path admissions", |s| {
+        s.prefetch_inserts.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.prefetch_hits", "demand hits on prefetched entries", |s| {
+        s.prefetch_hits.load(Relaxed) as f64
+    });
+    poll_counter!("matkv.tier.prefetch_rejected", "prefetch admissions dropped", |s| {
+        s.prefetch_rejected.load(Relaxed) as f64
+    });
+    poll_counter!(
+        "matkv.tier.admission_rejected",
+        "demand admissions refused by the frequency gate",
+        |s| s.admission_rejected.load(Relaxed) as f64
+    );
+    poll_counter!("matkv.tier.dequant_seconds", "modeled q8 dequant seconds", |s| {
+        s.dequant_secs()
+    });
+    poll_counter!("matkv.tier.quant_seconds", "modeled q8 quant seconds", |s| s.quant_secs());
+    poll_counter!("matkv.tier.q4_dequant_seconds", "modeled q4 dequant seconds", |s| {
+        s.q4_dequant_secs()
+    });
+    poll_counter!("matkv.tier.q4_quant_seconds", "modeled q4 quant seconds", |s| {
+        s.q4_quant_secs()
+    });
+    poll_counter!(
+        "matkv.tier.link_queued_seconds",
+        "host-bus queueing absorbed by tier traffic",
+        |s| s.link_queued_secs()
+    );
+    {
+        let t = Arc::clone(&tier);
+        reg.gauge_fn("matkv.tier.resident_bytes", &labels, "bytes resident", move || {
+            t.residency().0 as f64
+        })?;
+    }
+    {
+        let t = Arc::clone(&tier);
+        reg.gauge_fn("matkv.tier.resident_chunks", &labels, "chunks resident", move || {
+            t.residency().1 as f64
+        })?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    struct FakeTier {
+        stats: CacheStats,
+        bytes: usize,
+        chunks: usize,
+    }
+
+    impl TierMetrics for FakeTier {
+        fn tier_stats(&self) -> &CacheStats {
+            &self.stats
+        }
+        fn residency(&self) -> (usize, usize) {
+            (self.bytes, self.chunks)
+        }
+    }
+
+    #[test]
+    fn shared_sample_path_records_residency() {
+        let t = FakeTier { stats: CacheStats::for_tier(TierKind::Warm), bytes: 640, chunks: 2 };
+        t.stats.hits.fetch_add(3, Relaxed);
+        t.sample();
+        let s = t.stats.series();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].tier, TierKind::Warm);
+        assert_eq!(s[0].hits, 3);
+        assert_eq!(s[0].resident_bytes, 640);
+        assert_eq!(s[0].resident_chunks, 2);
+    }
+
+    #[test]
+    fn register_tier_exposes_the_pinned_gap_counters() {
+        let reg = MetricsRegistry::new();
+        let t = Arc::new(FakeTier {
+            stats: CacheStats::for_tier(TierKind::Hot),
+            bytes: 1024,
+            chunks: 1,
+        });
+        t.stats.admission_rejected.fetch_add(9, Relaxed);
+        register_tier(&reg, Arc::clone(&t)).unwrap();
+        let vals: std::collections::BTreeMap<String, f64> =
+            reg.sampled_values().into_iter().collect();
+        assert_eq!(vals["matkv.tier.admission_rejected{tier=hot}"], 9.0);
+        assert_eq!(vals["matkv.tier.resident_bytes{tier=hot}"], 1024.0);
+        // the same tier registering twice collides loudly
+        assert!(register_tier(&reg, t).is_err());
+    }
+
+    #[test]
+    fn series_buffer_caps() {
+        let s = TierSeries::default();
+        for _ in 0..(SAMPLE_CAP + 10) {
+            s.record(CacheSample::default());
+        }
+        assert_eq!(s.len(), SAMPLE_CAP);
+    }
+}
